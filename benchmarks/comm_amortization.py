@@ -1,0 +1,48 @@
+"""HWA's communication-reduction claim (paper §I), quantified from the
+dry-run artifacts: inter-replica traffic of HWA (one weight all-reduce
+per H steps) vs per-step gradient data parallelism, as a function of H.
+"""
+import glob
+import json
+import os
+
+from repro.launch.hlo import ICI_BW
+
+from benchmarks.common import csv_row
+
+
+def main(print_fn=print, dryrun_dir="experiments/dryrun"):
+    rows = {}
+    sync_files = glob.glob(os.path.join(dryrun_dir, "*hwa_sync*.json"))
+    train_files = glob.glob(os.path.join(dryrun_dir, "*hwa_train*.json"))
+    if not sync_files:
+        print_fn(csv_row("comm/skipped", 0.0,
+                         "no hwa_sync dry-run artifacts yet"))
+        return rows
+    for sf in sorted(sync_files):
+        rec = json.load(open(sf))
+        arch = rec["arch"]
+        sync_bytes = rec["collectives"]["traffic_bytes_per_device"]
+        # matching inner-step record (no cross-replica traffic expected)
+        inner = None
+        for tf in train_files:
+            r2 = json.load(open(tf))
+            if r2["arch"] == arch and r2["mesh"] == rec["mesh"]:
+                inner = r2
+        inner_bytes = (inner["collectives"]["traffic_bytes_per_device"]
+                       if inner else 0.0)
+        # data-parallel gradient sync each step ≈ the same all-reduce the
+        # HWA sync performs once per H steps
+        for H in (1, 64, 391, 1024):
+            per_step = inner_bytes + sync_bytes / H
+            print_fn(csv_row(
+                f"comm/{arch}/{rec['mesh']}/H={H}",
+                per_step / ICI_BW * 1e6,
+                f"bytes_per_step={per_step:.3e};"
+                f"sync_bytes={sync_bytes:.3e};inner={inner_bytes:.3e}"))
+        rows[arch] = {"sync": sync_bytes, "inner": inner_bytes}
+    return rows
+
+
+if __name__ == "__main__":
+    main()

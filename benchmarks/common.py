@@ -1,0 +1,55 @@
+"""Shared benchmark harness.
+
+CPU-feasible proxy for the paper's CIFAR protocol: a 2-layer transformer
+LM on a synthetic 2nd-order-learnable Markov task with a real train/test
+generalization gap (DESIGN.md §8 deviation 1). Every method uses the same
+budget, data and init seed; HWA uses H = one epoch (paper default) and
+I = WINDOW.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import HWAConfig
+from repro.data import DataPipeline, make_markov_lm_dataset
+from repro.models import build_model
+from repro.models.types import ModelConfig
+from repro.train import TrainConfig, Trainer, lm_task
+
+VOCAB = 64
+SEQ = 48
+STEPS = 512
+BATCH = 8
+N_TRAIN = 256          # 32 steps/epoch -> 16 epochs/sync cycles
+WINDOW = 4
+BASE_LR = 0.5
+
+TINY = ModelConfig(name="bench-lm", family="dense", n_layers=2, d_model=48,
+                   n_heads=4, n_kv_heads=2, d_ff=96, vocab_size=VOCAB,
+                   attn_impl="naive", remat="none", dtype="float32")
+
+
+def run_method(method: str, *, k: int = 2, window: int = WINDOW,
+               sync_period: int = 0, steps: int = STEPS, seed: int = 0,
+               base_lr: float = BASE_LR, swa_lr: float = 0.1,
+               eval_views: bool = False, model: ModelConfig = TINY):
+    lm = build_model(model)
+    ds = make_markov_lm_dataset(vocab=model.vocab_size, seq_len=SEQ,
+                                n_train=N_TRAIN, n_test=128, seed=0)
+    kk = k if method in ("hwa", "online", "pmsgd") else 1
+    pipe = DataPipeline(ds, batch_size=BATCH, n_replicas=kk, seed=seed)
+    tc = TrainConfig(method=method, total_steps=steps, batch_size=BATCH,
+                     base_lr=base_lr, seed=seed, swa_lr=swa_lr,
+                     swa_start_frac=0.6,
+                     eval_every=max(N_TRAIN // BATCH, 1),
+                     hwa=HWAConfig(n_replicas=kk, sync_period=sync_period,
+                                   window=window))
+    t0 = time.time()
+    out = Trainer(lm_task(lm, pipe), tc).run(eval_views=eval_views)
+    out["seconds"] = time.time() - t0
+    out["us_per_step"] = out["seconds"] / steps * 1e6
+    return out
+
+
+def csv_row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.1f},{derived}"

@@ -1,0 +1,18 @@
+"""Paper Fig. 13 — slide-window length I sweep (+ streaming variant)."""
+from benchmarks.common import csv_row, run_method
+
+
+def main(print_fn=print):
+    rows = {}
+    for window in (1, 2, 4, 8):
+        out = run_method("hwa", window=window)
+        rows[window] = out
+        print_fn(csv_row(
+            f"fig13/I={window}", out["us_per_step"],
+            f"best_acc={out['best']['test_acc']:.4f};"
+            f"best_loss={out['best']['test_loss']:.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

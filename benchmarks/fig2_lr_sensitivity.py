@@ -1,0 +1,25 @@
+"""Paper Fig. 2 — SWA's sensitivity to the Stage-II sampling LR, vs HWA
+needing no sampling LR at all (it uses the regular cosine schedule)."""
+from benchmarks.common import csv_row, run_method
+
+
+def main(print_fn=print):
+    accs = []
+    for swa_lr in (0.3, 0.1, 0.02):
+        out = run_method("swa", swa_lr=swa_lr)
+        accs.append(out["best"]["test_acc"])
+        print_fn(csv_row(
+            f"fig2/swa_lr={swa_lr}", out["us_per_step"],
+            f"best_acc={out['best']['test_acc']:.4f}"))
+    hwa = run_method("hwa")
+    print_fn(csv_row(
+        "fig2/hwa(no sampling LR)", hwa["us_per_step"],
+        f"best_acc={hwa['best']['test_acc']:.4f}"))
+    spread = max(accs) - min(accs)
+    print_fn(csv_row("fig2/swa_acc_spread", 0.0, f"spread={spread:.4f}"))
+    return {"swa_accs": accs, "hwa": hwa["best"]["test_acc"],
+            "spread": spread}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Paper Figs. 3/7/14 — convergence of inner vs outer vs HWA weights.
+
+Claim: test loss of W̿ (HWA weights) ≤ W̄ (outer) ≤ W^k (inner) along
+training — both averaging levels speed up convergence.
+"""
+from benchmarks.common import csv_row, run_method
+
+
+def main(print_fn=print):
+    out = run_method("hwa", eval_views=True)
+    wins_outer = wins_inner = n = 0
+    for rec in out["history"]:
+        if "outer_loss" in rec:
+            n += 1
+            wins_outer += rec["test_loss"] <= rec["outer_loss"] + 1e-6
+            wins_inner += rec["outer_loss"] <= rec["inner_loss"] + 1e-6
+    for rec in out["history"]:
+        if "outer_loss" in rec:
+            print_fn(csv_row(
+                f"fig7/step={rec['step']}", 0.0,
+                f"inner={rec['inner_loss']:.4f};outer={rec['outer_loss']:.4f};"
+                f"hwa={rec['test_loss']:.4f}"))
+    print_fn(csv_row("fig7/hwa<=outer_fraction", out["us_per_step"],
+                     f"{wins_outer}/{n}"))
+    print_fn(csv_row("fig7/outer<=inner_fraction", 0.0, f"{wins_inner}/{n}"))
+    return out
+
+
+if __name__ == "__main__":
+    main()

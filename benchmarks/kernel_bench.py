@@ -1,0 +1,69 @@
+"""Kernel micro-benchmarks.
+
+Wall-times are the jit'd XLA *reference* implementations on CPU (the
+Pallas kernels run in interpret mode here — TPU is the target, so their
+value is the HBM-traffic model, reported as derived columns):
+
+  fused wa_window_update : 3 reads + 3 writes vs naive 6 reads + 3 writes
+  online_mean            : K reads + 1 write (fused cast)
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as kref
+from benchmarks.common import csv_row
+
+
+def _time(fn, *args, iters=20):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.time() - t0) / iters * 1e6
+
+
+def main(print_fn=print):
+    N = 1 << 20
+    I, K = 8, 4
+    ring = jnp.zeros((I, N), jnp.float32)
+    total = jnp.zeros((N,), jnp.float32)
+    new = jnp.ones((N,), jnp.float32)
+
+    ref = jax.jit(lambda r, t, n: kref.wa_window_update_ref(
+        r, t, n, 3, 1.0, 1.0 / I))
+    us = _time(ref, ring, total, new)
+    naive_bytes = (6 * N + 3 * N) * 4
+    fused_bytes = (3 * N + 3 * N) * 4
+    print_fn(csv_row("kernel/wa_window_update", us,
+                     f"bytes_naive={naive_bytes};bytes_fused={fused_bytes};"
+                     f"traffic_cut={1 - fused_bytes / naive_bytes:.2f}"))
+
+    stacked = jnp.ones((K, N), jnp.float32)
+    ref2 = jax.jit(kref.online_mean_ref)
+    us = _time(ref2, stacked)
+    print_fn(csv_row("kernel/online_mean", us,
+                     f"bytes={(K * N + N) * 4}"))
+
+    B, S, H, D = 2, 1024, 4, 64
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, H, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, H, D), jnp.float32)
+    naive = jax.jit(lambda q, k, v: kref.attention_ref(q, k, v))
+    us_naive = _time(naive, q, k, v, iters=5)
+    from repro.models.attention import flash_attention_jnp
+    flash = jax.jit(lambda q, k, v: flash_attention_jnp(q, k, v))
+    us_flash = _time(flash, q, k, v, iters=5)
+    print_fn(csv_row("kernel/attention_naive_ref", us_naive,
+                     f"S={S};mem=O(S^2)"))
+    print_fn(csv_row("kernel/attention_flash_jnp", us_flash,
+                     f"S={S};mem=O(S*block)"))
+    return {}
+
+
+if __name__ == "__main__":
+    main()

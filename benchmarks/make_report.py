@@ -1,0 +1,117 @@
+"""Fill EXPERIMENTS.md sections from experiments/dryrun + experiments/bench.
+
+  PYTHONPATH=src python -m benchmarks.make_report
+"""
+import glob
+import json
+import os
+import re
+
+ORDER_SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _advice(rec):
+    dom = rec["roofline"]["dominant"]
+    coll = rec["collectives"]["result_bytes_by_op"]
+    top_coll = max(coll, key=coll.get) if coll else "none"
+    if dom == "collective_s":
+        return (f"reduce {top_coll} volume (overlap with compute; "
+                "coarser FSDP gather granularity; bf16 collectives)")
+    if dom == "memory_s":
+        if rec["shape"].startswith("decode"):
+            return "quantize KV cache / fewer HBM passes per token"
+        return "more fusion / fewer activation round-trips (remat policy)"
+    return "already compute-bound — raise MXU utilization (larger tiles)"
+
+
+def dryrun_tables(dryrun_dir="experiments/dryrun"):
+    recs = [json.load(open(p)) for p in
+            sorted(glob.glob(os.path.join(dryrun_dir, "*.json")))]
+    base = [r for r in recs if r["step"] in ("train", "prefill", "decode")
+            and not r.get("variant")]
+    variants = [r for r in recs if r.get("variant")]
+    hwa = [r for r in recs if r["step"].startswith("hwa")]
+
+    n_single = sum(1 for r in base if r["mesh"] == "single")
+    n_multi = sum(1 for r in base if r["mesh"] == "multi")
+    fits = sum(1 for r in base if r["memory"]["fits_16GB"])
+    fits_proj = sum(1 for r in base if r["memory"].get(
+        "fits_16GB_tpu_projected", r["memory"]["fits_16GB"]))
+    summary = (
+        f"- baseline combos compiled: **{n_single} single-pod + "
+        f"{n_multi} multi-pod**; HWA-variant runs: {len(hwa)}\n"
+        f"- per-device memory: {fits}/{len(base)} fit 16 GB as measured on "
+        f"the CPU lowering; **{fits_proj}/{len(base)}** fit after removing "
+        f"the CPU f32-KV-convert artifact (note 2)\n"
+        f"- compile times: "
+        f"{min(r['compile_s'] for r in base):.1f}–"
+        f"{max(r['compile_s'] for r in base):.1f} s per combo\n")
+
+    # roofline table (single-pod baselines per assignment; multi-pod in json)
+    lines = [
+        "| arch | shape | step | compute_s | memory_s | collective_s | "
+        "dominant | peak GB (tpu-proj) | MODEL_FLOPS | useful | "
+        "to move the bound |",
+        "|---|---|---|---|---|---|---|---|---|---|---|".replace(
+            "|---|---|---|---|---|---|---|---|---|---|---|",
+            "|---|---|---|---:|---:|---:|---|---:|---:|---:|---|"),
+    ]
+    singles = [r for r in base if r["mesh"] == "single"]
+    singles.sort(key=lambda r: (r["arch"], ORDER_SHAPES.index(r["shape"])))
+    for r in singles + sorted(variants, key=lambda r: r["arch"]):
+        t = r["roofline"]
+        m = r["memory"]
+        proj = m.get("tpu_projected_peak_bytes", m["peak_bytes"]) / 1e9
+        name = r["arch"] + (f" [{r['variant']}]" if r.get("variant") else "")
+        lines.append(
+            f"| {name} | {r['shape']} | {r['step']} "
+            f"| {t['compute_s']:.3g} | {t['memory_s']:.3g} "
+            f"| {t['collective_s']:.3g} | {t['dominant'].replace('_s','')} "
+            f"| {m['peak_bytes']/1e9:.1f} ({proj:.1f}) "
+            f"| {r['model_flops_global']:.2e} "
+            f"| {r['useful_compute_ratio']:.2f} | {_advice(r)} |")
+
+    # multi-pod delta table (terms only)
+    lines2 = ["", "### Multi-pod (2×16×16) deltas vs single-pod", "",
+              "| arch | shape | bound single→multi | collective_s "
+              "single→multi | peak GB multi |", "|---|---|---|---|---:|"]
+    for r in sorted([r for r in base if r["mesh"] == "multi"],
+                    key=lambda r: (r["arch"], ORDER_SHAPES.index(r["shape"]))):
+        s = next((x for x in singles if x["arch"] == r["arch"]
+                  and x["shape"] == r["shape"]), None)
+        if not s:
+            continue
+        lines2.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {s['roofline']['bound_s']:.3g}→{r['roofline']['bound_s']:.3g} "
+            f"| {s['roofline']['collective_s']:.3g}→"
+            f"{r['roofline']['collective_s']:.3g} "
+            f"| {r['memory']['peak_bytes']/1e9:.1f} |")
+
+    # HWA rows
+    lines3 = ["", "### HWA-variant dry-runs (replica axis = pod axis)", "",
+              "| arch | step | mesh | collective traffic/step (GB/dev) | "
+              "collectives | peak GB |", "|---|---|---|---:|---|---:|"]
+    for r in sorted(hwa, key=lambda r: (r["arch"], r["step"], r["mesh"])):
+        cts = ", ".join(f"{k}:{int(v)}" for k, v in
+                        r["collectives"]["counts"].items())
+        lines3.append(
+            f"| {r['arch']} | {r['step']} | {r['mesh']} "
+            f"| {r['collectives']['traffic_bytes_per_device']/1e9:.2f} "
+            f"| {cts} | {r['memory']['peak_bytes']/1e9:.1f} |")
+
+    return summary, "\n".join(lines + lines2 + lines3)
+
+
+def main():
+    summary, table = dryrun_tables()
+    path = "EXPERIMENTS.md"
+    text = open(path).read()
+    text = re.sub(r"<!-- DRYRUN_SUMMARY -->", summary, text)
+    text = re.sub(r"<!-- ROOFLINE_TABLE -->", table, text)
+    open(path, "w").write(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

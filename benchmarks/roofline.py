@@ -1,0 +1,42 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape × mesh): the three terms in seconds, dominant bound,
+model FLOPs, useful-compute ratio, per-device memory fit.
+"""
+import glob
+import json
+import os
+
+from benchmarks.common import csv_row
+
+
+def load_records(dryrun_dir="experiments/dryrun"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        recs.append(json.load(open(path)))
+    return recs
+
+
+def main(print_fn=print, dryrun_dir="experiments/dryrun"):
+    recs = load_records(dryrun_dir)
+    if not recs:
+        print_fn(csv_row("roofline/skipped", 0.0, "run dryrun first"))
+        return []
+    for r in recs:
+        t = r["roofline"]
+        print_fn(csv_row(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}/{r['step']}",
+            t["bound_s"] * 1e6,
+            f"compute_s={t['compute_s']:.3f};memory_s={t['memory_s']:.3f};"
+            f"collective_s={t['collective_s']:.3f};dom={t['dominant']};"
+            f"peak_GB={r['memory']['peak_bytes']/1e9:.2f};"
+            f"fits={r['memory']['fits_16GB']};"
+            f"useful={r['useful_compute_ratio']:.3f}"))
+    n_fit = sum(r["memory"]["fits_16GB"] for r in recs)
+    print_fn(csv_row("roofline/fit_summary", 0.0,
+                     f"{n_fit}/{len(recs)} combos fit 16GB"))
+    return recs
+
+
+if __name__ == "__main__":
+    main()

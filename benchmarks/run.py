@@ -1,0 +1,57 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (and tees per-table JSON into
+experiments/bench/).
+
+  PYTHONPATH=src python -m benchmarks.run [--only table2,roofline]
+"""
+import argparse
+import json
+import os
+import sys
+import time
+
+BENCHES = [
+    ("table2", "benchmarks.table2_methods"),
+    ("table3", "benchmarks.table3_ablation"),
+    ("table4", "benchmarks.table4_k_models"),
+    ("fig13", "benchmarks.fig13_window"),
+    ("fig2", "benchmarks.fig2_lr_sensitivity"),
+    ("fig7", "benchmarks.fig7_convergence"),
+    ("fig9", "benchmarks.fig9_interpolation"),
+    ("comm", "benchmarks.comm_amortization"),
+    ("kernels", "benchmarks.kernel_bench"),
+    ("roofline", "benchmarks.roofline"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+    os.makedirs("experiments/bench", exist_ok=True)
+    print("name,us_per_call,derived")
+    rows = []
+
+    def sink(line):
+        print(line, flush=True)
+        rows.append(line)
+
+    for name, module in BENCHES:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        mod = __import__(module, fromlist=["main"])
+        try:
+            mod.main(print_fn=sink)
+        except Exception as e:  # noqa: BLE001 — report and continue
+            sink(f"{name}/ERROR,0,{type(e).__name__}: {e}")
+        sink(f"{name}/wall_s,{(time.time()-t0)*1e6:.0f},done")
+    with open("experiments/bench/rows.csv", "w") as f:
+        f.write("name,us_per_call,derived\n")
+        f.write("\n".join(rows) + "\n")
+
+
+if __name__ == '__main__':
+    main()

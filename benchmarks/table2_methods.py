@@ -1,0 +1,29 @@
+"""Paper Table II — methods comparison (Baseline/CA/SWA/EMA/Lookahead/SAM/
+online-WA/HWA) at CPU proxy scale. Claim: HWA best test metric."""
+from benchmarks.common import csv_row, run_method
+
+METHODS = ["base", "ca", "swa", "ema", "lookahead", "sam", "online", "hwa"]
+
+
+SEEDS = (0, 1, 2)
+
+
+def main(print_fn=print):
+    rows = {}
+    for m in METHODS:
+        outs = [run_method(m, seed=s) for s in SEEDS]
+        acc = sum(o["best"]["test_acc"] for o in outs) / len(outs)
+        loss = sum(o["best"]["test_loss"] for o in outs) / len(outs)
+        us = sum(o["us_per_step"] for o in outs) / len(outs)
+        rows[m] = {"acc": acc, "loss": loss}
+        print_fn(csv_row(
+            f"table2/{m}", us,
+            f"best_acc_mean{len(SEEDS)}seeds={acc:.4f};"
+            f"best_loss_mean={loss:.4f}"))
+    best = max(rows, key=lambda m: rows[m]["acc"])
+    print_fn(csv_row("table2/winner", 0.0, f"method={best}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

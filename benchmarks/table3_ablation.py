@@ -1,0 +1,21 @@
+"""Paper Table III — module ablation: CA → +online WA → +offline window."""
+from benchmarks.common import csv_row, run_method
+
+
+def main(print_fn=print):
+    rows = {}
+    for name, method, kw in [
+            ("ca", "ca", {}),
+            ("online_module", "online", {}),
+            ("online+offline(hwa)", "hwa", {})]:
+        out = run_method(method, **kw)
+        rows[name] = out
+        print_fn(csv_row(
+            f"table3/{name}", out["us_per_step"],
+            f"best_acc={out['best']['test_acc']:.4f};"
+            f"best_loss={out['best']['test_loss']:.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Paper Table IV — number of parallel models K ∈ {2, 3, 4}.
+
+Claim: gains are stable in K; K=2 suffices under a limited budget.
+"""
+from benchmarks.common import csv_row, run_method
+
+
+def main(print_fn=print):
+    rows = {}
+    for k in (2, 3, 4):
+        out = run_method("hwa", k=k)
+        rows[k] = out
+        print_fn(csv_row(
+            f"table4/K={k}", out["us_per_step"],
+            f"best_acc={out['best']['test_acc']:.4f};"
+            f"best_loss={out['best']['test_loss']:.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Side-by-side comparison of every weight-averaging method the paper
+discusses (its Table II protocol at CPU scale).
+
+  PYTHONPATH=src python examples/compare_wa_methods.py --steps 256
+"""
+import argparse
+
+from benchmarks.common import run_method
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=256)
+    args = ap.parse_args()
+    print(f"{'method':12s} {'best acc':>9s} {'best loss':>10s} "
+          f"{'final loss':>11s} {'s/step':>7s}")
+    for method in ["base", "ca", "swa", "ema", "lookahead", "sam",
+                   "online", "pmsgd", "hwa"]:
+        out = run_method(method, steps=args.steps)
+        print(f"{method:12s} {out['best']['test_acc']:9.4f} "
+              f"{out['best']['test_loss']:10.4f} "
+              f"{out['final']['test_loss']:11.4f} "
+              f"{out['seconds'] / args.steps:7.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Quickstart: train a small LM with HWA and compare against plain cosine
+SGD in ~2 minutes on CPU.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import HWAConfig
+from repro.data import DataPipeline, make_markov_lm_dataset
+from repro.models import build_model
+from repro.models.types import ModelConfig
+from repro.train import TrainConfig, Trainer, lm_task
+
+
+def main():
+    cfg = ModelConfig(name="quickstart-lm", family="dense", n_layers=2,
+                      d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                      vocab_size=64, attn_impl="naive", remat="none",
+                      dtype="float32")
+    lm = build_model(cfg)
+    ds = make_markov_lm_dataset(vocab=64, seq_len=48, n_train=512,
+                                n_test=128, seed=0)
+    results = {}
+    for method, k in [("ca", 1), ("hwa", 2)]:
+        pipe = DataPipeline(ds, batch_size=8, n_replicas=k, seed=0)
+        tc = TrainConfig(
+            method=method, total_steps=192, batch_size=8, base_lr=0.5,
+            eval_every=64,
+            hwa=HWAConfig(n_replicas=k, sync_period=0, window=3))
+        out = Trainer(lm_task(lm, pipe), tc).run(log=True)
+        results[method] = out["best"]
+    print("\n=== quickstart summary ===")
+    for m, best in results.items():
+        print(f"  {m:4s}: best test acc {best['test_acc']:.4f} "
+              f"loss {best['test_loss']:.4f}")
+    print("HWA (K=2 replicas, H=1 epoch, I=3) vs cosine-SGD baseline.")
+
+
+if __name__ == "__main__":
+    main()

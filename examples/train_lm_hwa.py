@@ -1,0 +1,59 @@
+"""End-to-end driver: train an assigned-architecture LM with HWA.
+
+Default runs the granite-3-2b *smoke* variant for a few hundred steps on
+CPU (the full config is exercised via the multi-pod dry-run). On real
+hardware, pass --full to build the exact assigned config — the same
+Trainer/HWA code paths run under the HWA mesh
+(``repro.launch.mesh.make_hwa_mesh``); see src/repro/launch/steps.py for
+the pjit step builders the launcher uses at scale.
+
+  PYTHONPATH=src python examples/train_lm_hwa.py --arch xlstm-125m \
+      --steps 300 --k 2 --window 10
+"""
+import argparse
+
+from repro.checkpoint import OuterWeightStore, save_pytree
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.core import HWAConfig
+from repro.data import DataPipeline, make_markov_lm_dataset
+from repro.models import build_model
+from repro.train import TrainConfig, Trainer, lm_task
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b", choices=ARCH_IDS)
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--k", type=int, default=2)
+    ap.add_argument("--sync-period", type=int, default=0)
+    ap.add_argument("--window", type=int, default=10)
+    ap.add_argument("--batch-size", type=int, default=16)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=0.3)
+    ap.add_argument("--full", action="store_true",
+                    help="exact assigned config (needs real accelerators)")
+    ap.add_argument("--ckpt-dir", default="")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
+    if cfg.family in ("vlm", "audio"):
+        raise SystemExit("modality archs: see examples/serve_decode.py")
+    lm = build_model(cfg)
+    ds = make_markov_lm_dataset(vocab=cfg.vocab_size, seq_len=args.seq_len,
+                                n_train=2048, n_test=512, seed=0)
+    pipe = DataPipeline(ds, batch_size=args.batch_size, n_replicas=args.k,
+                        seed=0)
+    tc = TrainConfig(method="hwa", total_steps=args.steps,
+                     batch_size=args.batch_size, base_lr=args.lr,
+                     hwa=HWAConfig(n_replicas=args.k,
+                                   sync_period=args.sync_period,
+                                   window=args.window))
+    out = Trainer(lm_task(lm, pipe), tc).run(log=True)
+    print(f"[{args.arch}] final: {out['final']}  best: {out['best']}")
+    if args.ckpt_dir:
+        save_pytree(f"{args.ckpt_dir}/wa_final.npz", out["params"])
+        print(f"saved W̿ to {args.ckpt_dir}/wa_final.npz")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.checkpoint.io import save_pytree, load_pytree
+from repro.checkpoint.store import OuterWeightStore

@@ -1,0 +1,80 @@
+"""Pytree checkpointing on top of ``.npz`` (offline container: no orbax).
+
+Leaves are flattened with '/'-joined key paths so arbitrary nested
+dict/list pytrees round-trip exactly (shapes, dtypes, values).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import ml_dtypes
+import numpy as np
+
+_SEP = "|"
+
+# numpy's npz format cannot store ml_dtypes (bfloat16, fp8); round-trip
+# them through a same-width integer view with the true dtype in metadata.
+_VIEW = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+         "float8_e5m2": np.uint8}
+
+
+def _keystr(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return _SEP.join(parts)
+
+
+def save_pytree(path: str, tree: Any) -> None:
+    flat, treedef = jax.tree.flatten_with_path(tree)
+    arrays = {}
+    keys = []
+    dtypes = []
+    for i, (kpath, leaf) in enumerate(flat):
+        name = f"leaf_{i}"
+        arr = np.asarray(leaf)
+        dtypes.append(str(arr.dtype))
+        if str(arr.dtype) in _VIEW:
+            arr = arr.view(_VIEW[str(arr.dtype)])
+        arrays[name] = arr
+        keys.append(_keystr(kpath))
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, __keys__=np.asarray(json.dumps(keys)),
+                 __dtypes__=np.asarray(json.dumps(dtypes)),
+                 __treedef__=np.asarray(str(treedef)), **arrays)
+    os.replace(tmp, path)
+
+
+def load_pytree(path: str, like: Any) -> Any:
+    """Load into the structure of ``like`` (checked against stored keys)."""
+    with np.load(path, allow_pickle=False) as data:
+        keys = json.loads(str(data["__keys__"]))
+        dtypes = json.loads(str(data["__dtypes__"]))
+        leaves = []
+        for i, dt in enumerate(dtypes):
+            arr = data[f"leaf_{i}"]
+            if dt in _VIEW:
+                arr = arr.view(dt)
+            leaves.append(arr)
+    flat, treedef = jax.tree.flatten_with_path(like)
+    if len(flat) != len(leaves):
+        raise ValueError(f"checkpoint has {len(leaves)} leaves, "
+                         f"template has {len(flat)}")
+    for (kpath, tmpl), key, leaf in zip(flat, keys, leaves):
+        if _keystr(kpath) != key:
+            raise ValueError(f"leaf mismatch: {key} vs {_keystr(kpath)}")
+        if tuple(tmpl.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch at {key}: "
+                             f"{leaf.shape} vs {tmpl.shape}")
+    return jax.tree.unflatten(treedef,
+                              [l.astype(t[1].dtype) for t, l in zip(flat, leaves)])

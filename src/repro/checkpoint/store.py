@@ -1,0 +1,60 @@
+"""Disk-backed store of outer-weight checkpoints (paper Algorithm 2 input).
+
+The HWA offline module consumes outer weights W̄_e saved at each
+synchronization cycle. At scale the window lives on-device (see
+``repro.core.offline``); the store is the paper-faithful file path —
+Algorithm 2 literally reads "Checkpoints of Outer Weights" — and enables
+post-hoc window sweeps (trying multiple I, §III-B) without retraining.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any
+
+import jax
+
+from repro.checkpoint.io import load_pytree, save_pytree
+from repro.common.pytree import tree_add, tree_scale, tree_zeros_like
+
+
+class OuterWeightStore:
+    def __init__(self, directory: str):
+        self.directory = directory
+        os.makedirs(directory, exist_ok=True)
+
+    def _path(self, cycle: int) -> str:
+        return os.path.join(self.directory, f"outer_{cycle:06d}.npz")
+
+    def save(self, cycle: int, outer_weights: Any) -> None:
+        save_pytree(self._path(cycle), outer_weights)
+
+    def load(self, cycle: int, like: Any) -> Any:
+        return load_pytree(self._path(cycle), like)
+
+    def cycles(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.directory):
+            m = re.fullmatch(r"outer_(\d+)\.npz", name)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def window_average(self, end_cycle: int, window: int, like: Any,
+                       stride: int = 1) -> Any:
+        """W̿_e = mean of W̄_t for t in the slide window ending at e.
+
+        ``stride`` implements the paper's sparse-window remark (§III-B):
+        average only cycles with index in multiples of ``stride``.
+        """
+        cycles = [c for c in self.cycles()
+                  if end_cycle - window * stride < c <= end_cycle
+                  and (c - end_cycle) % stride == 0]
+        if not cycles:
+            raise ValueError(f"no checkpoints in window ending at {end_cycle}")
+        acc = tree_zeros_like(jax.tree.map(lambda x: x.astype("float32"), like))
+        for c in cycles:
+            w = self.load(c, like)
+            acc = tree_add(acc, jax.tree.map(lambda x: x.astype("float32"), w))
+        avg = tree_scale(acc, 1.0 / len(cycles))
+        return jax.tree.map(lambda a, t: a.astype(t.dtype), avg, like)

@@ -1,0 +1,79 @@
+"""Pytree arithmetic helpers used throughout the framework.
+
+All weight-averaging math in ``repro.core`` is expressed through these
+helpers so that the HWA update rules read like the paper's equations.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def tree_add(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a: PyTree, s) -> PyTree:
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_lerp(a: PyTree, b: PyTree, t) -> PyTree:
+    """(1 - t) * a + t * b, elementwise over matching leaves."""
+    return jax.tree.map(lambda x, y: x + t * (y - x), a, b)
+
+
+def tree_zeros_like(a: PyTree) -> PyTree:
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_num_params(a: PyTree) -> int:
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(a) if hasattr(l, "shape")))
+
+
+def tree_num_bytes(a: PyTree) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(a):
+        if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+            total += int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+    return total
+
+
+def tree_l2_norm(a: PyTree):
+    sq = sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in jax.tree.leaves(a))
+    return jnp.sqrt(sq)
+
+
+def tree_cast(a: PyTree, dtype) -> PyTree:
+    return jax.tree.map(lambda x: x.astype(dtype), a)
+
+
+def tree_stack(trees: list[PyTree]) -> PyTree:
+    """Stack a list of identical pytrees along a new leading axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def tree_unstack(tree: PyTree, n: int) -> list[PyTree]:
+    return [jax.tree.map(lambda x: x[i], tree) for i in range(n)]
+
+
+def tree_mean_axis0(tree: PyTree) -> PyTree:
+    """Mean over the leading (replica) axis of every leaf."""
+    return jax.tree.map(lambda x: jnp.mean(x, axis=0), tree)
+
+
+def tree_all_finite(a: PyTree):
+    flags = [jnp.all(jnp.isfinite(l)) for l in jax.tree.leaves(a)
+             if jnp.issubdtype(jnp.asarray(l).dtype, jnp.floating)]
+    if not flags:
+        return jnp.asarray(True)
+    return functools.reduce(jnp.logical_and, flags)

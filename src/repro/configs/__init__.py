@@ -1,0 +1,46 @@
+"""Assigned-architecture registry (``--arch <id>``).
+
+Each module defines ``config()`` (the exact assigned configuration, source
+cited) and ``smoke_config()`` (a reduced same-family variant: ≤2 layers,
+d_model ≤ 512, ≤4 experts) for CPU smoke tests. Full configs are exercised
+only via the dry-run (ShapeDtypeStructs, no allocation).
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.types import INPUT_SHAPES, InputShape, ModelConfig
+
+ARCH_IDS = [
+    "qwen2-moe-a2.7b",
+    "internvl2-1b",
+    "xlstm-125m",
+    "granite-moe-1b-a400m",
+    "hymba-1.5b",
+    "granite-3-2b",
+    "stablelm-12b",
+    "command-r-35b",
+    "gemma2-27b",
+    "musicgen-medium",
+]
+
+_MODULES = {a: "repro.configs." + a.replace("-", "_").replace(".", "_")
+            for a in ARCH_IDS}
+
+
+def _module(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; choose from {ARCH_IDS}")
+    return importlib.import_module(_MODULES[arch_id])
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return _module(arch_id).config()
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    return _module(arch_id).smoke_config()
+
+
+def get_input_shape(name: str) -> InputShape:
+    return INPUT_SHAPES[name]

@@ -1,0 +1,24 @@
+"""musicgen-medium [arXiv:2306.05284] — decoder over EnCodec tokens.
+
+48L d_model=1536 24H (kv=24, MHA) d_ff=6144 vocab=2048, 4 codebooks.
+The EnCodec audio frontend is a stub per the assignment: ``input_specs()``
+feeds 4 parallel token streams; embeddings are summed, one output head per
+codebook; the serving engine applies the delay pattern. Deviation: RoPE
+instead of sinusoidal positions (DESIGN.md §8).
+"""
+from repro.models.types import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-medium", family="audio",
+        n_layers=48, d_model=1536, n_heads=24, n_kv_heads=24,
+        d_ff=6144, vocab_size=2048, n_codebooks=4,
+        source="[arXiv:2306.05284]")
+
+
+def smoke_config() -> ModelConfig:
+    return config().with_(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+        vocab_size=64, n_codebooks=2,
+        attn_impl="naive", remat="none", dtype="float32")

@@ -1,0 +1,12 @@
+from repro.core.hwa import HWAConfig, HWAState, hwa_init, hwa_inner_step, hwa_sync
+from repro.core.online import online_average, broadcast_to_replicas, replica_divergence
+from repro.core.offline import (
+    WindowState, window_init, window_update, window_average,
+    streaming_window_update,
+)
+from repro.core.baselines import (
+    SWAState, swa_init, swa_update,
+    EMAState, ema_init, ema_update,
+    LookaheadState, lookahead_init, lookahead_update,
+    sam_gradient,
+)

@@ -1,0 +1,130 @@
+"""The paper's comparison methods, rebuilt (Table II/III/V-VIII baselines).
+
+- SWA  [15]  — offline WA: running average of checkpoints sampled every H
+  steps after ``swa_start``, with a constant/cyclic sampling LR
+  (`repro.optim.schedules.swa_constant_schedule`).
+- EMA        — exponential moving average (common offline-WA variant).
+- Lookahead [32] — slow/fast weights; slow += α(fast − slow) every h steps,
+  fast ← slow.
+- SAM  [35]  — sharpness-aware minimization: gradient at the adversarially
+  perturbed point W + ρ g/‖g‖.
+- Online-only WA / local SGD [9-14] — HWAConfig(window=1).
+- Parallel mini-batch SGD [16, 30]  — HWAConfig(sync_period=1, window=1)
+  (weight-averaging every step ≡ gradient averaging for plain SGD).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.pytree import tree_lerp
+
+PyTree = Any
+
+
+# ------------------------------------------------------------------ SWA
+
+
+@dataclasses.dataclass
+class SWAState:
+    avg: PyTree
+    n: jax.Array
+
+
+jax.tree_util.register_dataclass(SWAState, data_fields=["avg", "n"],
+                                 meta_fields=[])
+
+
+def swa_init(params: PyTree) -> SWAState:
+    return SWAState(avg=jax.tree.map(lambda x: x.astype(jnp.float32), params),
+                    n=jnp.zeros((), jnp.int32))
+
+
+def swa_update(state: SWAState, params: PyTree) -> SWAState:
+    """avg <- (avg * n + params) / (n + 1)."""
+    n = state.n.astype(jnp.float32)
+    avg = jax.tree.map(
+        lambda a, p: a + (p.astype(jnp.float32) - a) / (n + 1.0),
+        state.avg, params)
+    return SWAState(avg=avg, n=state.n + 1)
+
+
+def swa_params(state: SWAState, like: PyTree) -> PyTree:
+    return jax.tree.map(lambda a, x: a.astype(x.dtype), state.avg, like)
+
+
+# ------------------------------------------------------------------ EMA
+
+
+@dataclasses.dataclass
+class EMAState:
+    avg: PyTree
+    decay: float
+
+
+jax.tree_util.register_dataclass(EMAState, data_fields=["avg"],
+                                 meta_fields=["decay"])
+
+
+def ema_init(params: PyTree, decay: float = 0.999) -> EMAState:
+    return EMAState(avg=jax.tree.map(lambda x: x.astype(jnp.float32), params),
+                    decay=decay)
+
+
+def ema_update(state: EMAState, params: PyTree) -> EMAState:
+    avg = tree_lerp(state.avg,
+                    jax.tree.map(lambda x: x.astype(jnp.float32), params),
+                    1.0 - state.decay)
+    return EMAState(avg=avg, decay=state.decay)
+
+
+# ------------------------------------------------------------- Lookahead
+
+
+@dataclasses.dataclass
+class LookaheadState:
+    slow: PyTree
+    k: int
+    alpha: float
+
+
+jax.tree_util.register_dataclass(LookaheadState, data_fields=["slow"],
+                                 meta_fields=["k", "alpha"])
+
+
+def lookahead_init(params: PyTree, k: int = 5, alpha: float = 0.5
+                   ) -> LookaheadState:
+    return LookaheadState(
+        slow=jax.tree.map(lambda x: x.astype(jnp.float32), params),
+        k=k, alpha=alpha)
+
+
+def lookahead_update(state: LookaheadState, fast: PyTree
+                     ) -> tuple[LookaheadState, PyTree]:
+    """Call every k fast steps: slow += α(fast − slow); fast ← slow."""
+    slow = tree_lerp(state.slow,
+                     jax.tree.map(lambda x: x.astype(jnp.float32), fast),
+                     state.alpha)
+    new_fast = jax.tree.map(lambda s, f: s.astype(f.dtype), slow, fast)
+    return LookaheadState(slow=slow, k=state.k, alpha=state.alpha), new_fast
+
+
+# ------------------------------------------------------------------ SAM
+
+
+def sam_gradient(loss_fn: Callable, params: PyTree, batch,
+                 rho: float = 0.05):
+    """Two-pass SAM gradient: ∇L(W + ρ ∇L(W)/‖∇L(W)‖)."""
+    (loss, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                         for l in jax.tree.leaves(g)))
+    scale = rho / jnp.maximum(gnorm, 1e-12)
+    perturbed = jax.tree.map(
+        lambda p, gl: (p.astype(jnp.float32)
+                       + scale * gl.astype(jnp.float32)).astype(p.dtype),
+        params, g)
+    (_, _), g_sam = jax.value_and_grad(loss_fn, has_aux=True)(perturbed, batch)
+    return (loss, metrics), g_sam

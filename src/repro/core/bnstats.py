@@ -1,0 +1,43 @@
+"""BatchNorm-statistics recompute (paper Algorithm 2, line 3).
+
+After forming averaged weights W̿, BN running statistics are invalid (they
+belong to no trained model). The standard SWA/HWA fix: one pass over
+training data collecting per-batch mean/var under W̿ and averaging them.
+Only the paper-faithful ResNet-CIFAR config carries BN; the transformer
+archs are RMSNorm/LayerNorm (stateless) — documented no-op (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.convnet import apply_resnet
+
+
+def recompute_bn_stats(cfg, params, bn_state_template, batches):
+    """Average the batch statistics observed under ``params``.
+
+    ``batches`` is an iterable of input arrays (NHWC). Returns a fresh
+    bn_state with mean of batch means and mean of batch vars.
+    """
+    acc = jax.tree.map(jnp.zeros_like, bn_state_template)
+    n = 0
+
+    @jax.jit
+    def batch_stats(x):
+        # train=True recomputes batch statistics; with BN_MOMENTUM m the
+        # new state is m*old + (1-m)*batch, so batch = (new - m*old)/(1-m).
+        from repro.models.convnet import BN_MOMENTUM
+        _, new_state = apply_resnet(cfg, params, bn_state_template, x,
+                                    train=True)
+        return jax.tree.map(
+            lambda new, old: (new - BN_MOMENTUM * old) / (1.0 - BN_MOMENTUM),
+            new_state, bn_state_template)
+
+    for x in batches:
+        stats = batch_stats(x)
+        acc = jax.tree.map(jnp.add, acc, stats)
+        n += 1
+    if n == 0:
+        return bn_state_template
+    return jax.tree.map(lambda a: a / n, acc)

@@ -1,0 +1,131 @@
+"""Hierarchical Weight Averaging — the paper's training framework.
+
+State machine (Algorithms 1 & 2):
+
+  every step   : each of the K replicas takes one optimizer step on its own
+                 batch (different sampling orders)           [hwa_inner_step]
+  every H steps: W̄_e = mean_k W^k ; every replica ← W̄_e ;
+                 slide-window update → W̿_e                   [hwa_sync]
+
+``inner`` state is stacked on a leading K axis (vmap on one device; the
+``replica``/``pod`` mesh axis at scale). Special cases: K=1 ∧ I>1 →
+slide-window offline WA (generalized SWA); K>1 ∧ I=1 → low-frequency
+online WA (local SGD); K=1 ∧ I=1 → plain SGD.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.pytree import tree_mean_axis0
+from repro.core.offline import WindowState, window_init, window_update
+from repro.core.online import broadcast_to_replicas, online_average, \
+    replica_divergence
+from repro.optim.base import Optimizer, apply_updates
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class HWAConfig:
+    n_replicas: int = 2          # K (paper Table IV: 2-4; K=2 suffices)
+    sync_period: int = 0         # H; 0 → one epoch (paper default H = N/B)
+    window: int = 20             # I (paper Fig. 13: {20, 50})
+    window_stride: int = 1       # sparse window (§III-B): every J-th cycle
+    window_kind: str = "ring"    # ring | streaming (O(1)-memory, beyond paper)
+    avg_opt_state: bool = False  # also average optimizer moments at sync
+    use_kernels: bool = False    # fused Pallas WA update path
+
+
+@dataclasses.dataclass
+class HWAState:
+    inner: PyTree                # (K, ...) stacked replica params
+    inner_opt: PyTree            # (K, ...) stacked optimizer state
+    window_state: WindowState    # offline module state
+    wa: PyTree                   # current W̿ (unstacked)
+    cycle: jax.Array             # e — completed synchronization cycles
+    step: jax.Array              # i — global optimizer steps taken
+
+
+jax.tree_util.register_dataclass(
+    HWAState,
+    data_fields=["inner", "inner_opt", "window_state", "wa", "cycle", "step"],
+    meta_fields=[])
+
+
+def hwa_init(cfg: HWAConfig, params: PyTree, optimizer: Optimizer) -> HWAState:
+    """All replicas start from the same initialization (Algorithm 1 line 1
+    with a shared init; replicas diverge through data order)."""
+    inner = broadcast_to_replicas(params, cfg.n_replicas)
+    inner_opt = jax.vmap(optimizer.init)(inner)
+    return HWAState(
+        inner=inner, inner_opt=inner_opt,
+        window_state=window_init(params, cfg.window, cfg.window_kind),
+        wa=params, cycle=jnp.zeros((), jnp.int32),
+        step=jnp.zeros((), jnp.int32))
+
+
+def hwa_inner_step(cfg: HWAConfig, state: HWAState, batches: PyTree,
+                   loss_fn: Callable, optimizer: Optimizer, lr) -> tuple[HWAState, PyTree]:
+    """One SGD step per replica (Algorithm 1 lines 5-7). ``batches`` leaves
+    have a leading K axis (different sampling order per replica)."""
+
+    def one(params, opt, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        updates, opt2 = optimizer.update(grads, opt, params, lr)
+        return apply_updates(params, updates), opt2, loss, metrics
+
+    inner, inner_opt, losses, metrics = jax.vmap(one)(
+        state.inner, state.inner_opt, batches)
+    new_state = HWAState(inner=inner, inner_opt=inner_opt,
+                         window_state=state.window_state, wa=state.wa,
+                         cycle=state.cycle, step=state.step + 1)
+    scalar = {k: jnp.mean(v) for k, v in metrics.items()
+              if isinstance(v, jax.Array)
+              and jnp.issubdtype(v.dtype, jnp.floating) and v.ndim <= 1}
+    return new_state, {"loss": jnp.mean(losses),
+                       "per_replica_loss": losses, **scalar}
+
+
+def hwa_sync(cfg: HWAConfig, state: HWAState) -> tuple[HWAState, PyTree]:
+    """End-of-cycle sync (Algorithm 1 lines 8-12 + Algorithm 2).
+
+    Returns (new state, metrics). The window update is skipped on cycles
+    not matching ``window_stride`` (sparse window, §III-B).
+    """
+    div = replica_divergence(state.inner)
+    outer = online_average(state.inner, use_kernel=cfg.use_kernels)
+    inner = broadcast_to_replicas(outer, cfg.n_replicas)
+    if cfg.avg_opt_state:
+        opt_mean = tree_mean_axis0(state.inner_opt)
+        inner_opt = broadcast_to_replicas(opt_mean, cfg.n_replicas)
+    else:
+        inner_opt = state.inner_opt
+
+    cycle = state.cycle + 1
+    take = jnp.mod(cycle - 1, cfg.window_stride) == 0
+
+    def do_update(ws):
+        return window_update(ws, outer, use_kernel=cfg.use_kernels)
+
+    def skip_update(ws):
+        from repro.core.offline import window_average
+        return ws, window_average(ws, like=outer)
+
+    if cfg.window_stride == 1:
+        window_state, wa = do_update(state.window_state)
+    else:
+        window_state, wa = jax.lax.cond(take, do_update, skip_update,
+                                        state.window_state)
+    # until the first window entry exists, W̿ = W̄
+    first = window_state.count == 0
+    wa = jax.tree.map(lambda w, o: jnp.where(first, o, w), wa, outer)
+
+    new_state = HWAState(inner=inner, inner_opt=inner_opt,
+                         window_state=window_state, wa=wa,
+                         cycle=cycle, step=state.step)
+    return new_state, {"replica_divergence": div, "cycle": cycle}

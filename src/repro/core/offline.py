@@ -1,0 +1,116 @@
+"""Offline WA module (paper §III-B, Algorithm 2): slide-window averaging.
+
+    W̿_e = (1/I) Σ_{t=e-I+1..e} W̄_t
+
+Three implementations with one state container:
+
+- **ring** (exact): a ring buffer of the last I outer weights + a running
+  f32 sum. Update cost is O(params) HBM traffic independent of I; memory is
+  I× params *per shard* (the buffer inherits the params' sharding —
+  DESIGN.md §2). The fused Pallas kernel (`repro.kernels.wa_update`) cuts
+  the update from 6 reads + 3 writes to 3 reads + 2 writes.
+- **streaming** (beyond paper, O(1) memory): a windowed running mean
+  ``wa += (outer - wa)/min(count, I)`` — SWA's running average whose gain
+  is clamped at 1/I, an EMA-like approximation of the slide window for
+  models too large to buffer I copies of.
+- **sparse** stride (paper §III-B remark): only every ``stride``-th cycle
+  enters the window (handled by the caller skipping updates).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.pytree import tree_scale, tree_zeros_like
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class WindowState:
+    ring: PyTree | None      # (I, ...) stacked outer weights (ring mode)
+    total: PyTree            # f32 running sum (ring) or running mean (streaming)
+    count: jax.Array         # filled slots (≤ I)
+    next_idx: jax.Array      # ring write cursor
+    window: int
+    kind: str = "ring"       # ring | streaming
+
+
+jax.tree_util.register_dataclass(
+    WindowState, data_fields=["ring", "total", "count", "next_idx"],
+    meta_fields=["window", "kind"])
+
+
+def window_init(params_like: PyTree, window: int, kind: str = "ring"
+                ) -> WindowState:
+    f32 = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params_like)
+    ring = None
+    if kind == "ring":
+        ring = jax.tree.map(
+            lambda x: jnp.zeros((window,) + x.shape, jnp.float32), params_like)
+    return WindowState(ring=ring, total=f32,
+                       count=jnp.zeros((), jnp.int32),
+                       next_idx=jnp.zeros((), jnp.int32),
+                       window=window, kind=kind)
+
+
+def window_update(state: WindowState, outer: PyTree, *,
+                  use_kernel: bool = False) -> tuple[WindowState, PyTree]:
+    """Push W̄_e; return (new state, current W̿_e). jit-safe."""
+    if state.kind == "streaming":
+        return streaming_window_update(state, outer)
+    I = state.window
+    idx = state.next_idx
+    full_flag = (state.count >= I).astype(jnp.float32)
+    new_count = jnp.minimum(state.count + 1, I)
+    inv_count = 1.0 / new_count.astype(jnp.float32)
+
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        def upd(ring, total, new):
+            return kops.wa_window_update(ring, total, new, idx, full_flag,
+                                         inv_count)
+    else:
+        from repro.kernels.ref import wa_window_update_ref as upd_ref
+
+        def upd(ring, total, new):
+            return upd_ref(ring, total, new.astype(jnp.float32), idx,
+                           full_flag, inv_count)
+
+    triples = jax.tree.map(upd, state.ring, state.total, outer)
+    is_triple = lambda x: isinstance(x, tuple) and len(x) == 3
+    new_ring = jax.tree.map(lambda t: t[0], triples, is_leaf=is_triple)
+    new_total = jax.tree.map(lambda t: t[1], triples, is_leaf=is_triple)
+    wa = jax.tree.map(lambda t, o: t[2].astype(o.dtype), triples, outer,
+                      is_leaf=is_triple)
+
+    new_state = WindowState(ring=new_ring, total=new_total, count=new_count,
+                            next_idx=jnp.mod(idx + 1, I), window=I,
+                            kind=state.kind)
+    return new_state, wa
+
+
+def streaming_window_update(state: WindowState, outer: PyTree
+                            ) -> tuple[WindowState, PyTree]:
+    n = jnp.minimum(state.count + 1, state.window).astype(jnp.float32)
+    new_total = jax.tree.map(
+        lambda m, x: m + (x.astype(jnp.float32) - m) / n, state.total, outer)
+    new_state = WindowState(ring=None, total=new_total,
+                            count=jnp.minimum(state.count + 1, state.window),
+                            next_idx=state.next_idx, window=state.window,
+                            kind="streaming")
+    wa = jax.tree.map(lambda m, x: m.astype(x.dtype), new_total, outer)
+    return new_state, wa
+
+
+def window_average(state: WindowState, like: PyTree) -> PyTree:
+    """Current W̿ in the dtype of ``like``."""
+    denom = jnp.maximum(state.count, 1).astype(jnp.float32)
+    if state.kind == "streaming":
+        return jax.tree.map(lambda m, x: m.astype(x.dtype), state.total, like)
+    return jax.tree.map(lambda s, x: (s / denom).astype(x.dtype),
+                        state.total, like)

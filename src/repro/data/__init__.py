@@ -1,0 +1,6 @@
+from repro.data.synthetic import (
+    SyntheticDataset,
+    make_markov_lm_dataset,
+    make_prototype_image_dataset,
+)
+from repro.data.pipeline import DataPipeline, replica_batch_indices

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the paper's hot spots + framework compute.
+
+- wa_update.py        : fused HWA slide-window update + K-replica mean
+- flash_attention.py  : causal GQA flash attention (window, softcap)
+- ops.py              : jit'd public wrappers (padding, interpret fallback)
+- ref.py              : pure-jnp oracles (allclose targets for tests)
+"""

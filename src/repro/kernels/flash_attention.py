@@ -1,0 +1,135 @@
+"""Pallas flash-attention kernel (TPU target, validated in interpret mode).
+
+Causal GQA attention with optional sliding window and logit softcap —
+the framework's perf-critical compute layer for training/prefill
+(the decode step is matmul-thin and stays in XLA; see
+``repro.models.attention.run_attention``).
+
+Tiling (DESIGN.md §6): grid = (B, Hq, nq, nk) with the key axis innermost
+("arbitrary" semantics → sequential), so the online-softmax accumulators
+(m, l, acc) live in VMEM scratch across the nk sweep. Block shapes are
+(block_q, head_dim) / (block_k, head_dim) with head_dim padded to 128 by
+``ops.py`` — MXU-aligned. Causality and the sliding window are enforced
+both by *block skipping* (pl.when — skipped blocks cost no MXU work, the
+banded-compute trick) and an in-block position mask.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  block_q: int, block_k: int, seq_k: int, causal: bool,
+                  window: int | None, logit_softcap: float, dscale: float):
+    i = pl.program_id(2)               # q block
+    j = pl.program_id(3)               # k block
+    nk = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = i * block_q
+    k_start = j * block_k
+
+    # Block-level skip: entirely-masked blocks do no work.
+    live = True
+    if causal:
+        live = k_start <= q_start + block_q - 1
+    if window is not None:
+        live = jnp.logical_and(live,
+                               k_start + block_k - 1 >= q_start - (window - 1))
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)          # (bq, d)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)          # (bk, d)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * dscale
+        if logit_softcap:
+            s = logit_softcap * jnp.tanh(s / logit_softcap)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 1)
+        mask = k_pos <= q_pos if causal else k_pos >= 0
+        if window is not None:
+            mask = jnp.logical_and(mask, q_pos - k_pos < window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=1)[:, None]                # (bq, 1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1)[:, None]
+        acc_scr[...] = alpha * acc_scr[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        l = l_scr[...]
+        safe = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0, :, 0, :] = (acc_scr[...] / safe).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           window: int | None = None,
+                           logit_softcap: float = 0.0,
+                           block_q: int = 128, block_k: int = 128,
+                           sm_scale: float | None = None,
+                           interpret: bool = True):
+    """q: (B, S, Hq, D); k/v: (B, T, Hkv, D); Hq = G·Hkv. D % 128 == 0
+    (ops.py pads; pass sm_scale=1/sqrt(unpadded_D)). Returns (B,S,Hq,D).
+    """
+    B, S, Hq, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    block_q = min(block_q, S)
+    block_k = min(block_k, T)
+    assert S % block_q == 0 and T % block_k == 0, (S, block_q, T, block_k)
+    grid = (B, Hq, S // block_q, T // block_k)
+    dscale = sm_scale if sm_scale is not None else 1.0 / (D ** 0.5)
+
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k, seq_k=T,
+        causal=causal, window=window, logit_softcap=logit_softcap,
+        dscale=dscale)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, D), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, block_k, 1, D),
+                         lambda b, h, i, j: (b, j, h // G, 0)),
+            pl.BlockSpec((1, block_k, 1, D),
+                         lambda b, h, i, j: (b, j, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, D),
+                               lambda b, h, i, j: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, Hq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,84 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handle arbitrary parameter-leaf shapes (flatten + pad to tile multiples),
+head-dim padding for attention, and interpret-mode fallback off-TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.wa_update import (TILE_COLS, TILE_ROWS, online_mean_2d,
+                                     wa_window_update_2d)
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_flat(x, tile=TILE_ROWS * TILE_COLS):
+    n = int(np.prod(x.shape))
+    pad = (-n) % tile
+    flat = jnp.pad(x.reshape(-1), (0, pad))
+    return flat.reshape(-1, TILE_COLS), n
+
+
+@functools.partial(jax.jit, static_argnames=())
+def wa_window_update(ring, total, new, idx, full_flag, inv_count):
+    """Fused slide-window update for one parameter leaf.
+
+    ring: (I, *shape) f32; total: (*shape) f32; new: (*shape) any float.
+    Returns (ring', total', avg) in the original shapes (avg f32).
+    """
+    I = ring.shape[0]
+    shape = total.shape
+    ring2d = ring.reshape(I, -1)
+    n = ring2d.shape[1]
+    pad = (-n) % (TILE_ROWS * TILE_COLS)
+    ring2d = jnp.pad(ring2d, ((0, 0), (0, pad))).reshape(I, -1, TILE_COLS)
+    total2d, _ = _pad_flat(total)
+    new2d, _ = _pad_flat(new.astype(jnp.float32))
+    ring_o, total_o, avg_o = wa_window_update_2d(
+        ring2d, total2d, new2d, jnp.asarray(idx, jnp.int32),
+        jnp.asarray(full_flag, jnp.float32),
+        jnp.asarray(inv_count, jnp.float32), interpret=_interpret())
+    ring_out = ring_o.reshape(I, -1)[:, :n].reshape(ring.shape)
+    total_out = total_o.reshape(-1)[:n].reshape(shape)
+    avg = avg_o.reshape(-1)[:n].reshape(shape)
+    return ring_out, total_out, avg
+
+
+@jax.jit
+def online_mean(stacked):
+    """(K, *shape) -> mean over replicas, original dtype of ``stacked``."""
+    K = stacked.shape[0]
+    shape = stacked.shape[1:]
+    x2d = stacked.reshape(K, -1)
+    n = x2d.shape[1]
+    pad = (-n) % (TILE_ROWS * TILE_COLS)
+    x2d = jnp.pad(x2d, ((0, 0), (0, pad))).reshape(K, -1, TILE_COLS)
+    out = online_mean_2d(x2d, interpret=_interpret())
+    return out.reshape(-1)[:n].reshape(shape).astype(stacked.dtype)
+
+
+def flash_attention(q, k, v, q_pos=None, k_pos=None, *, window=None,
+                    logit_softcap=0.0, block_q=128, block_k=128):
+    """run_attention-compatible wrapper (training/prefill layout:
+    contiguous positions starting at 0). Pads head_dim to 128."""
+    D = q.shape[-1]
+    sm_scale = 1.0 / (D ** 0.5)
+    pad = (-D) % 128
+    if pad:
+        padw = [(0, 0)] * 3 + [(0, pad)]
+        q = jnp.pad(q, padw)
+        k = jnp.pad(k, padw)
+        v = jnp.pad(v, padw)
+    out = flash_attention_pallas(
+        q, k, v, causal=True, window=window, logit_softcap=logit_softcap,
+        block_q=block_q, block_k=block_k, sm_scale=sm_scale,
+        interpret=_interpret())
+    return out[..., :D]

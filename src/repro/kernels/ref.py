@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wa_window_update_ref(ring, total, new, idx, full_flag, inv_count):
+    """ring: (I, *shape); total/new: (*shape). Returns (ring', total', avg).
+
+    The ring may be stored in a lower precision (e.g. bf16 — a 2× memory
+    saving for huge models, at the cost of slight drift in the running
+    total; see EXPERIMENTS.md §Perf pair 3). ``total`` stays f32.
+    """
+    newf = new.astype(jnp.float32)
+    old = ring[idx].astype(jnp.float32) * full_flag
+    total2 = total + newf - old
+    ring2 = jax.lax.dynamic_update_index_in_dim(
+        ring, newf.astype(ring.dtype), idx, 0)
+    return ring2, total2, total2 * inv_count
+
+
+def online_mean_ref(stacked):
+    """(K, *shape) -> f32 mean over axis 0."""
+    return jnp.mean(stacked.astype(jnp.float32), axis=0)
+
+
+def attention_ref(q, k, v, *, causal=True, window=None, logit_softcap=0.0,
+                  sm_scale=None):
+    """Naive GQA attention. q: (B,S,Hq,D); k/v: (B,T,Hkv,D)."""
+    B, S, Hq, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / (D ** 0.5)
+    qg = q.reshape(B, S, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, k.astype(jnp.float32)) * scale
+    if logit_softcap:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(T)[None, :]
+    mask = kp <= qp if causal else jnp.ones((S, T), bool)
+    if window is not None:
+        mask = mask & (qp - kp < window)
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    out = out.reshape(B, S, Hq, D)
+    # fully-masked rows -> zero output (matches kernel's l==0 guard)
+    out = jnp.where(jnp.any(mask, axis=-1)[None, :, None, None], out, 0.0)
+    return out.astype(q.dtype)

@@ -1,0 +1,115 @@
+"""Fused HWA weight-averaging kernels (Pallas, TPU target).
+
+The paper's per-cycle hot spot is elementwise arithmetic over the full
+parameter set (DESIGN.md §2). Two kernels:
+
+1. ``wa_window_update_kernel`` — fused slide-window update. Naively the
+   ring update is three HBM passes (read old slot + read/write sum;
+   write slot; read sum + write avg ⇒ 6N reads + 3N writes). Fused, each
+   VMEM tile does::
+
+       old       = ring[idx, tile]            (read)
+       total'    = total + new - full*old     (read total, read new)
+       ring[idx] = new                        (write)
+       avg       = total' * inv_count         (write; total' written too)
+
+   ⇒ 3N reads + 3N writes (total/ring-slot/avg), one pass. The ring slot
+   index and the ``full``/``inv_count`` scalars are scalar-prefetched so
+   the BlockSpec index_map can address ring row ``idx`` directly in HBM —
+   the untouched I−1 rows are never moved.
+
+2. ``online_mean_kernel`` — K-replica mean (W̄ = (1/K)Σ W^k) fused with
+   the f32 cast, tiled so each program reads K sub-tiles and writes one.
+
+Both operate on 2-D (rows, 128·k) views; ``ops.py`` handles flattening /
+padding of arbitrary parameter leaves and ``ref.py`` holds the jnp oracles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# VMEM tile: (8, 1024) f32 = 32 KiB per operand; 6 operands ≈ 192 KiB —
+# comfortably within the ~16 MiB VMEM budget, wide enough to stream HBM.
+TILE_ROWS = 8
+TILE_COLS = 1024
+
+
+def _wa_window_update_kernel(scalars_ref, ring_ref, total_ref, new_ref,
+                             ring_out_ref, total_out_ref, avg_ref):
+    """One (TILE_ROWS, TILE_COLS) tile of the fused window update.
+
+    scalars_ref holds [idx, full_flag_bits, inv_count_bits] (i32); the
+    f32 scalars are bitcast so a single scalar-prefetch operand suffices.
+    """
+    full = jax.lax.bitcast_convert_type(scalars_ref[1], jnp.float32)
+    inv_count = jax.lax.bitcast_convert_type(scalars_ref[2], jnp.float32)
+    old = ring_ref[0]                       # ring block is (1, rows, cols)
+    new = new_ref[...]
+    total = total_ref[...] + new - full * old
+    ring_out_ref[0] = new
+    total_out_ref[...] = total
+    avg_ref[...] = total * inv_count
+
+
+def wa_window_update_2d(ring, total, new, idx, full_flag, inv_count,
+                        *, interpret: bool = True):
+    """ring: (I, R, C) f32; total/new: (R, C) f32; idx: scalar int32.
+
+    Returns (ring', total', avg). R % TILE_ROWS == 0, C % TILE_COLS == 0.
+    """
+    I, R, C = ring.shape
+    assert total.shape == (R, C) and new.shape == (R, C)
+    assert R % TILE_ROWS == 0 and C % TILE_COLS == 0, (R, C)
+    grid = (R // TILE_ROWS, C // TILE_COLS)
+    scalars = jnp.stack([
+        idx.astype(jnp.int32),
+        jax.lax.bitcast_convert_type(full_flag.astype(jnp.float32), jnp.int32),
+        jax.lax.bitcast_convert_type(inv_count.astype(jnp.float32), jnp.int32),
+    ])
+
+    ring_spec = pl.BlockSpec((1, TILE_ROWS, TILE_COLS),
+                             lambda i, j, s: (s[0], i, j))
+    flat_spec = pl.BlockSpec((TILE_ROWS, TILE_COLS), lambda i, j, s: (i, j))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[ring_spec, flat_spec, flat_spec],
+        out_specs=[ring_spec, flat_spec, flat_spec],
+    )
+    ring_out, total_out, avg = pl.pallas_call(
+        _wa_window_update_kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct(ring.shape, jnp.float32),
+                   jax.ShapeDtypeStruct(total.shape, jnp.float32),
+                   jax.ShapeDtypeStruct(total.shape, jnp.float32)],
+        input_output_aliases={1: 0, 2: 1},   # ring->ring_out, total->total_out
+        interpret=interpret,
+    )(scalars, ring, total, new)
+    return ring_out, total_out, avg
+
+
+def _online_mean_kernel(x_ref, o_ref, *, inv_k: float):
+    # x_ref: (K, TILE_ROWS, TILE_COLS) — reduce the replica axis in VMEM.
+    o_ref[...] = jnp.sum(x_ref[...].astype(jnp.float32), axis=0) * inv_k
+
+
+def online_mean_2d(stacked, *, interpret: bool = True):
+    """stacked: (K, R, C) -> (R, C) f32 mean over axis 0."""
+    K, R, C = stacked.shape
+    assert R % TILE_ROWS == 0 and C % TILE_COLS == 0, (R, C)
+    grid = (R // TILE_ROWS, C // TILE_COLS)
+    return pl.pallas_call(
+        functools.partial(_online_mean_kernel, inv_k=1.0 / K),
+        grid=grid,
+        in_specs=[pl.BlockSpec((K, TILE_ROWS, TILE_COLS),
+                               lambda i, j: (0, i, j))],
+        out_specs=pl.BlockSpec((TILE_ROWS, TILE_COLS), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((R, C), jnp.float32),
+        interpret=interpret,
+    )(stacked)

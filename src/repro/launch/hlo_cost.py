@@ -1,0 +1,340 @@
+"""Loop-aware cost extraction from post-SPMD HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts every while-loop *body once* —
+verified: a scan of 10 matmuls reports the FLOPs of one. Our stacks scan
+layers (and microbatches, and xent chunks), so its numbers undercount by
+the trip counts. This module re-derives per-device costs structurally:
+
+- parse the module into computations with a per-computation symbol table
+  (instruction name → shape) including signature parameters;
+- FLOPs from ``dot``/``convolution`` (2 · prod(result dims) · prod(
+  contraction dims), batch dims handled since they appear in the result);
+- HBM bytes from operand+result sizes of memory-moving ops (fusion, dot,
+  copy, gather/scatter, dynamic-(update-)slice, reduce, convert, sort,
+  concatenate, broadcast, iota, transpose, reshape with layout change ≈
+  fusions dominate);
+- collectives: result bytes × ring-traffic factor (see factors below);
+- ``while`` trip counts parsed from the loop condition's comparison
+  constant; nested loops multiply (layer scan × microbatch scan).
+
+Approximations are documented in EXPERIMENTS.md §Roofline; cross-checked
+against an unrolled small model (test_hlo_cost.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "u1": 1, "s1": 1,
+}
+
+_SHAPE_TOKEN = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(?.*?\)?)\s+"
+                     r"([\w\-]+)\(")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*?)\)\s*->")
+_PARAM_RE = re.compile(r"([\w.\-]+):\s*((?:\([^)]*\))|(?:[\w\[\],]+))")
+_ATTR_COMP = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONTRACT_RE = re.compile(r"(lhs|rhs)_contracting_dims=\{([\d,]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# ops whose operands+result move through HBM. The CPU backend leaves many
+# elementwise ops (convert/broadcast/transpose/copy/...) unfused that the
+# TPU backend would fuse — counting them models the CPU, not the target,
+# and overcounts ~100×. Count only genuinely memory-moving ops; ``fusion``
+# nodes already represent fused elementwise groups.
+_MEM_OPS = {"fusion", "dot", "convolution", "gather", "scatter",
+            "dynamic-slice", "dynamic-update-slice", "reduce", "sort",
+            "reduce-window", "select-and-scatter"}
+
+
+def _shape_elems_bytes(type_str):
+    elems = bytes_ = 0
+    for dtype, dims in _SHAPE_TOKEN.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        bytes_ += n * _DTYPE_BYTES[dtype]
+    return elems, bytes_
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    type_str: str
+    op: str
+    line: str
+
+
+def _parse_computations(text):
+    comps: dict[str, list[_Instr]] = {}
+    params: dict[str, dict[str, str]] = {}
+    cur = None
+    for line in text.splitlines():
+        hdr = _COMP_HDR.match(line.strip()) if "{" in line and "->" in line else None
+        if hdr and not line.strip().startswith("%constant"):
+            cur = hdr.group(1)
+            comps[cur] = []
+            params[cur] = {m.group(1): m.group(2)
+                           for m in _PARAM_RE.finditer(hdr.group(2))}
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _DEF_RE.match(line)
+        if m:
+            comps[cur].append(_Instr(m.group(1), m.group(2), m.group(3), line))
+    return comps, params
+
+
+def _operand_names(line):
+    # text inside the first top-level parens after the op name
+    i = line.find("(", line.find("= "))
+    if i < 0:
+        return []
+    depth = 0
+    out = []
+    for j in range(i, len(line)):
+        c = line[j]
+        if c == "(":
+            depth += 1
+        elif c == ")":
+            depth -= 1
+            if depth == 0:
+                inner = line[i + 1:j]
+                out = re.findall(r"%([\w.\-]+)", inner)
+                break
+    return out
+
+
+def _mem_bytes(op, ins, tab, res_bytes, comps, symtab):
+    """HBM bytes for one memory-moving instruction (slice-aware).
+
+    - dynamic-slice/gather read only the slice: 2 × result;
+    - dynamic-update-slice/scatter touch only the update region;
+    - fusion: write result once; each operand is read fully UNLESS the
+      fused computation consumes it solely through dynamic-slice/gather
+      (the per-layer weight slice inside the scanned stack — counting the
+      full stacked operand per iteration overcounted ~40×).
+    """
+    ops_ = _operand_names(ins.line)
+    if op in ("dynamic-slice", "gather"):
+        return 2 * res_bytes
+    if op == "dynamic-update-slice":
+        upd = _shape_elems_bytes(tab.get(ops_[1], ""))[1] if len(ops_) > 1 \
+            else res_bytes
+        return 2 * upd
+    if op == "scatter":
+        upd = sum(_shape_elems_bytes(tab.get(o, ""))[1] for o in ops_[2:]) \
+            if len(ops_) > 2 else res_bytes
+        return 2 * upd
+    if op == "fusion":
+        # pure dtype/layout fusions are CPU-backend artifacts — the TPU
+        # backend fuses converts/copies into their consumers (bf16 MXU).
+        if ins.name.startswith(("convert_", "copy_", "bitcast_",
+                                "transpose_")):
+            return 0.0
+        called = [m.group(1) for m in _ATTR_COMP.finditer(ins.line)
+                  if "calls=" in m.group(0)]
+        sub = called[0] if called else None
+        rd = 0.0
+        sub_instrs = comps.get(sub, []) if sub else []
+        sub_tab = symtab.get(sub, {}) if sub else {}
+        # in-place update fusions (root = dynamic-update-slice): the write
+        # is the update region, not the whole buffer, and the aliased
+        # buffer operand is not re-read.
+        dus_root = sub_instrs[-1] if sub_instrs and \
+            sub_instrs[-1].op == "dynamic-update-slice" else None
+        dus_inplace_params: set[str] = set()
+        if dus_root is not None:
+            r_ops = _operand_names(dus_root.line)
+            upd = _shape_elems_bytes(sub_tab.get(r_ops[1], ""))[1] \
+                if len(r_ops) > 1 else res_bytes
+            res_bytes = 2 * upd
+            if r_ops:
+                dus_inplace_params.add(r_ops[0])
+        # consumers of each fusion parameter inside the fused computation;
+        # transparent ops (bitcast/reshape/copy/transpose/convert) are
+        # followed so `param -> bitcast -> dynamic-slice` still counts as
+        # a sliced read.
+        param_sliced: dict[int, float] = {}
+        _TRANSPARENT = ("bitcast", "reshape", "copy", "transpose", "convert")
+        if sub_instrs:
+            pnames = {}
+            for name, tstr in sub_tab.items():
+                m = re.match(r"param_(\d+)", name)
+                if m:
+                    pnames[name] = int(m.group(1))
+            consumers: dict[str, list] = {}
+            for si in sub_instrs:
+                for onm in _operand_names(si.line):
+                    consumers.setdefault(onm, []).append(si)
+
+            def leaf_consumers(name, depth=0):
+                out = []
+                for c in consumers.get(name, []):
+                    if c.op in _TRANSPARENT and depth < 6:
+                        out += leaf_consumers(c.name, depth + 1)
+                    else:
+                        out.append((name, c))
+                return out
+
+            for pname, pidx in pnames.items():
+                leaves = leaf_consumers(pname)
+                if leaves and all(
+                        (c.op in ("dynamic-slice", "gather")
+                         and _operand_names(c.line)[:1] == [src])
+                        or (c.op == "dynamic-update-slice"
+                            and _operand_names(c.line)[:1] == [src])
+                        for src, c in leaves):
+                    param_sliced[pidx] = sum(
+                        _shape_elems_bytes(c.type_str)[1]
+                        for _, c in leaves
+                        if c.op in ("dynamic-slice", "gather"))
+        for i, onm in enumerate(ops_):
+            full = _shape_elems_bytes(tab.get(onm, ""))[1]
+            rd += param_sliced.get(i, full) if i in param_sliced else full
+        return rd + res_bytes
+    # dot / convolution / reduce / sort / ...: full operand reads + write
+    rd = sum(_shape_elems_bytes(tab.get(o, ""))[1] for o in ops_)
+    return rd + res_bytes
+
+
+@dataclasses.dataclass
+class HLOCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_traffic: float = 0.0
+    coll_counts: dict = dataclasses.field(default_factory=dict)
+    coll_bytes: dict = dataclasses.field(default_factory=dict)
+
+    def scaled(self, k):
+        return HLOCost(self.flops * k, self.bytes * k, self.coll_traffic * k,
+                       {o: c * k for o, c in self.coll_counts.items()},
+                       {o: b * k for o, b in self.coll_bytes.items()})
+
+    def add(self, other):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        self.coll_traffic += other.coll_traffic
+        for o, c in other.coll_counts.items():
+            self.coll_counts[o] = self.coll_counts.get(o, 0) + c
+        for o, b in other.coll_bytes.items():
+            self.coll_bytes[o] = self.coll_bytes.get(o, 0) + b
+
+
+def analyze_hlo(text: str) -> HLOCost:
+    comps, comp_params = _parse_computations(text)
+    # symbol tables: instruction name -> type string
+    symtab: dict[str, dict[str, str]] = {}
+    for cname, instrs in comps.items():
+        tab = dict(comp_params.get(cname, {}))
+        for ins in instrs:
+            tab[ins.name] = ins.type_str
+        symtab[cname] = tab
+
+    memo: dict[str, HLOCost] = {}
+
+    def trip_count(cond_name: str) -> int:
+        consts = []
+        for ins in comps.get(cond_name, []):
+            consts += [int(c) for c in _CONST_RE.findall(ins.line)]
+        return max(consts) if consts else 1
+
+    def comp_cost(cname: str) -> HLOCost:
+        if cname in memo:
+            return memo[cname]
+        memo[cname] = HLOCost()        # guard cycles
+        total = HLOCost()
+        tab = symtab.get(cname, {})
+        for ins in comps.get(cname, []):
+            op = ins.op
+            res_elems, res_bytes = _shape_elems_bytes(ins.type_str)
+            if op == "while":
+                body = cond = None
+                for an in _ATTR_COMP.finditer(ins.line):
+                    if "body=" in an.group(0):
+                        body = an.group(1)
+                    elif "condition=" in an.group(0):
+                        cond = an.group(1)
+                if body:
+                    n = trip_count(cond) if cond else 1
+                    total.add(comp_cost(body).scaled(max(n, 1)))
+                continue
+            if op == "conditional":
+                br = _BRANCHES.search(ins.line)
+                subs = (re.findall(r"%?([\w.\-]+)", br.group(1)) if br else [])
+                for sub in subs:
+                    total.add(comp_cost(sub))
+                continue
+            called = [m.group(1) for m in _ATTR_COMP.finditer(ins.line)
+                      if "calls=" in m.group(0) or "to_apply=" in m.group(0)]
+            coll = next((c for c in COLLECTIVES if op.startswith(c)), None)
+            if coll and not op.endswith("-done"):
+                gm = _GROUPS_RE.search(ins.line)
+                g = int(gm.group(2)) if gm else 1
+                if g > 1:
+                    if coll == "all-reduce":
+                        factor = 2.0 * (g - 1) / g
+                    elif coll == "all-gather":
+                        factor = (g - 1) / g
+                    elif coll == "reduce-scatter":
+                        factor = float(g - 1)
+                    elif coll == "all-to-all":
+                        factor = (g - 1) / g
+                    else:
+                        factor = 1.0
+                    total.coll_traffic += res_bytes * factor
+                total.coll_counts[coll] = total.coll_counts.get(coll, 0) + 1
+                total.coll_bytes[coll] = total.coll_bytes.get(coll, 0) + res_bytes
+                total.bytes += 2 * res_bytes
+                continue
+            if op in ("dot", "convolution"):
+                # contraction size from lhs operand shape
+                ops_ = _operand_names(ins.line)
+                lhs_type = tab.get(ops_[0], "") if ops_ else ""
+                lhs_dims = []
+                mt = _SHAPE_TOKEN.search(lhs_type)
+                if mt:
+                    lhs_dims = [int(d) for d in mt.group(2).split(",") if d]
+                cm = dict((k, v) for k, v in _CONTRACT_RE.findall(ins.line))
+                cdims = [int(d) for d in cm.get("lhs", "").split(",") if d]
+                csize = math.prod(lhs_dims[d] for d in cdims) if cdims and \
+                    all(d < len(lhs_dims) for d in cdims) else \
+                    (lhs_dims[-1] if lhs_dims else 1)
+                total.flops += 2.0 * res_elems * max(csize, 1)
+            if called:
+                for sub in called:
+                    total.add(comp_cost(sub))
+            if op in _MEM_OPS:
+                total.bytes += _mem_bytes(op, ins, tab, res_bytes, comps,
+                                          symtab)
+        memo[cname] = total
+        return total
+
+    entry = None
+    for cname in comps:
+        if ".entry" in cname or cname.startswith("main"):
+            entry = cname
+    if entry is None and comps:
+        # ENTRY computation is usually the last or named after the jit fn
+        entry = list(comps.keys())[0]
+    # safest: sum nothing but the entry; find via "ENTRY" marker in text
+    m = re.search(r"ENTRY\s+%?([\w.\-]+)", text)
+    if m and m.group(1) in comps:
+        entry = m.group(1)
+    return comp_cost(entry) if entry else HLOCost()

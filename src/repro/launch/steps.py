@@ -1,0 +1,308 @@
+"""Step builders: plain data+tensor-parallel training/serving steps and the
+HWA-stacked variants, with in/out shardings resolved from the logical-dim
+trees. These are what the dry-run lowers and what real launches would run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.hwa import HWAConfig, hwa_inner_step, hwa_sync
+from repro.models.registry import LM
+from repro.optim import adamw, apply_updates, sgd
+from repro.sharding.rules import ShardingRules, make_tp_rules
+
+PyTree = Any
+
+
+def _prefix_dims(dim_tree, name):
+    """Prepend a logical dim to every dims-tuple leaf (e.g. 'replica')."""
+    is_dims = lambda t: isinstance(t, tuple) and all(
+        isinstance(e, (str, type(None))) for e in t)
+    return jax.tree.map(lambda t: (name,) + t, dim_tree, is_leaf=is_dims)
+
+
+def opt_state_dims(opt_state_abs, param_dims):
+    """Logical dims for optimizer state: moments mirror the params."""
+    def dims_for(path_leaf):
+        return param_dims
+    # adamw: {"m": params-like, "v": params-like, "count": scalar}
+    # sgd(momentum): {"mu": params-like}
+    out = {}
+    for k, v in opt_state_abs.items():
+        if k == "count":
+            out[k] = ()
+        else:
+            out[k] = param_dims
+    return out
+
+
+@dataclasses.dataclass
+class StepBundle:
+    """A step function plus its abstract args and in/out shardings."""
+    fn: Any
+    abstract_args: tuple
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple = ()
+
+    def lower(self, mesh: Mesh):
+        jitted = jax.jit(self.fn, in_shardings=self.in_shardings,
+                         out_shardings=self.out_shardings,
+                         donate_argnums=self.donate_argnums)
+        with mesh:
+            return jitted.lower(*self.abstract_args)
+
+
+def _mk_optimizer(name: str):
+    if name == "sgd":
+        return sgd(momentum=0.9, weight_decay=5e-4)
+    return adamw(weight_decay=0.1)
+
+
+def make_train_step(lm: LM, rules: ShardingRules, batch_specs, batch_dims,
+                    optimizer: str = "adamw", lr: float = 3e-4,
+                    opt_rules: ShardingRules | None = None,
+                    n_microbatches: int = 1) -> StepBundle:
+    """Plain data+tensor-parallel train step (the 40-combo baseline).
+
+    ``opt_rules`` lets the optimizer moments use a different (e.g. FSDP)
+    rule table than the compute params. ``n_microbatches`` > 1 enables
+    gradient accumulation: peak activation temps scale ~1/n_mb while the
+    f32 grad accumulator is fully sharded — the lever that fits the ≥27B
+    trainings into 16 GB/chip (EXPERIMENTS.md §Perf).
+    """
+    opt = _mk_optimizer(optimizer)
+    params_abs, param_dims = lm.abstract()
+    opt_abs = jax.eval_shape(opt.init, params_abs)
+    o_dims = opt_state_dims(opt_abs, param_dims)
+    opt_rules = opt_rules or rules
+    loss_fn = lambda p, b: lm.loss(p, b, rules=rules)
+
+    def step(params, opt_state, batch):
+        if n_microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape((n_microbatches,
+                                     x.shape[0] // n_microbatches)
+                                    + x.shape[1:]), batch)
+
+            def body(acc, mbatch):
+                g_acc, l_acc, a_acc = acc
+                (loss, metrics), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mbatch)
+                g_acc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + metrics["loss"],
+                        a_acc + metrics["acc"]), None
+
+            zeros = jax.tree.map(
+                lambda pp: jnp.zeros(pp.shape, jnp.float32), params)
+            (g_sum, l_sum, a_sum), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros(()), jnp.zeros(())), mb)
+            grads = jax.tree.map(
+                lambda g, pp: (g / n_microbatches).astype(pp.dtype),
+                g_sum, params)
+            metrics = {"loss": l_sum / n_microbatches,
+                       "aux": jnp.zeros(()),
+                       "acc": a_sum / n_microbatches}
+        updates, opt_state = opt.update(grads, opt_state, params, lr)
+        params = apply_updates(params, updates)
+        return params, opt_state, metrics
+
+    p_sh = rules.tree_shardings(params_abs, param_dims)
+    o_sh = opt_rules.tree_shardings(opt_abs, o_dims)
+    b_sh = rules.tree_shardings(batch_specs, batch_dims)
+    scalar_sh = NamedSharding(rules.mesh, P())
+    m_sh = {"loss": scalar_sh, "aux": scalar_sh, "acc": scalar_sh}
+    return StepBundle(
+        fn=step, abstract_args=(params_abs, opt_abs, batch_specs),
+        in_shardings=(p_sh, o_sh, b_sh),
+        out_shardings=(p_sh, o_sh, m_sh),
+        donate_argnums=(0, 1))
+
+
+def make_prefill_step(lm: LM, rules: ShardingRules, batch_specs, batch_dims,
+                      cache_abs, cache_dims) -> StepBundle:
+    def step(params, cache, batch):
+        return lm.prefill(params, cache, batch, rules=rules)
+
+    params_abs, param_dims = lm.abstract()
+    p_sh = rules.tree_shardings(params_abs, param_dims)
+    c_sh = rules.tree_shardings(cache_abs, cache_dims)
+    b_sh = rules.tree_shardings(batch_specs, batch_dims)
+    logits_abs = jax.eval_shape(step, params_abs, cache_abs, batch_specs)[0]
+    logits_dims = ("batch",) + (None,) * (len(logits_abs.shape) - 2) + ("vocab",)
+    l_sh = rules.tree_shardings(logits_abs, logits_dims)
+    return StepBundle(
+        fn=step, abstract_args=(params_abs, cache_abs, batch_specs),
+        in_shardings=(p_sh, c_sh, b_sh),
+        out_shardings=(l_sh, c_sh),
+        donate_argnums=(1,))
+
+
+def make_decode_step(lm: LM, rules: ShardingRules, token_specs, token_dims,
+                     cache_abs, cache_dims) -> StepBundle:
+    def step(params, cache, tokens):
+        return lm.decode_step(params, cache, tokens, rules=rules)
+
+    params_abs, param_dims = lm.abstract()
+    p_sh = rules.tree_shardings(params_abs, param_dims)
+    c_sh = rules.tree_shardings(cache_abs, cache_dims)
+    t_sh = rules.tree_shardings(token_specs, token_dims)
+    logits_abs = jax.eval_shape(step, params_abs, cache_abs, token_specs)[0]
+    logits_dims = ("batch",) + (None,) * (len(logits_abs.shape) - 2) + ("vocab",)
+    l_sh = rules.tree_shardings(logits_abs, logits_dims)
+    return StepBundle(
+        fn=step, abstract_args=(params_abs, cache_abs, token_specs),
+        in_shardings=(p_sh, c_sh, t_sh),
+        out_shardings=(l_sh, c_sh),
+        donate_argnums=(1,))
+
+
+# ------------------------------------------------------------- HWA steps
+
+
+def make_hwa_train_step(lm: LM, rules: ShardingRules, batch_specs, batch_dims,
+                        hwa_cfg: HWAConfig, optimizer: str = "adamw",
+                        lr: float = 3e-4,
+                        opt_rules: ShardingRules | None = None,
+                        n_microbatches: int = 1) -> StepBundle:
+    """Inner HWA step: K independent replicas, stacked on the replica axis.
+
+    Gradient all-reduce stays *inside* each replica's data shard; nothing
+    crosses the replica/pod axis here — that is the H-fold comm saving.
+    """
+    opt = _mk_optimizer(optimizer)
+    K = hwa_cfg.n_replicas
+    params_abs, param_dims = lm.abstract()
+    stacked_abs = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((K,) + s.shape, s.dtype), params_abs)
+    stacked_dims = _prefix_dims(param_dims, "replica")
+    opt_abs = jax.eval_shape(lambda p: jax.vmap(opt.init)(p), stacked_abs)
+    o_dims = opt_state_dims(opt_abs, stacked_dims)
+    if "count" in o_dims:          # adamw step counter, vmapped to (K,)
+        o_dims["count"] = ("replica",)
+    opt_rules = opt_rules or rules
+    kbatch_abs = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((K,) + s.shape, s.dtype), batch_specs)
+    kbatch_dims = _prefix_dims(batch_dims, "replica")
+
+    def loss_fn(params, batch):
+        return lm.loss(params, batch, rules=rules)
+
+    def step(inner, inner_opt, batches):
+        def one(params, opt_state, batch):
+            if n_microbatches == 1:
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, batch)
+            else:
+                mb = jax.tree.map(
+                    lambda x: x.reshape((n_microbatches,
+                                         x.shape[0] // n_microbatches)
+                                        + x.shape[1:]), batch)
+
+                def body(acc, mbatch):
+                    g_acc, l_acc = acc
+                    (l, m), g = jax.value_and_grad(
+                        loss_fn, has_aux=True)(params, mbatch)
+                    g_acc = jax.tree.map(
+                        lambda a, gi: a + gi.astype(jnp.float32), g_acc, g)
+                    return (g_acc, l_acc + m["loss"]), None
+
+                zeros = jax.tree.map(
+                    lambda pp: jnp.zeros(pp.shape, jnp.float32), params)
+                (g_sum, l_sum), _ = jax.lax.scan(
+                    body, (zeros, jnp.zeros(())), mb)
+                grads = jax.tree.map(
+                    lambda g, pp: (g / n_microbatches).astype(pp.dtype),
+                    g_sum, params)
+                metrics = {"loss": l_sum / n_microbatches}
+            updates, opt_state = opt.update(grads, opt_state, params, lr)
+            return apply_updates(params, updates), opt_state, metrics["loss"]
+
+        inner, inner_opt, losses = jax.vmap(one)(inner, inner_opt, batches)
+        return inner, inner_opt, jnp.mean(losses)
+
+    p_sh = rules.tree_shardings(stacked_abs, stacked_dims)
+    o_sh = opt_rules.tree_shardings(opt_abs, o_dims)
+    b_sh = rules.tree_shardings(kbatch_abs, kbatch_dims)
+    scalar_sh = NamedSharding(rules.mesh, P())
+    return StepBundle(
+        fn=step, abstract_args=(stacked_abs, opt_abs, kbatch_abs),
+        in_shardings=(p_sh, o_sh, b_sh),
+        out_shardings=(p_sh, o_sh, scalar_sh),
+        donate_argnums=(0, 1))
+
+
+def make_hwa_sync_step(lm: LM, rules: ShardingRules, hwa_cfg: HWAConfig,
+                       ring_dtype=jnp.float32) -> StepBundle:
+    """Synchronization + window update: the once-per-H-steps collective.
+
+    outer = mean over the replica axis (one all-reduce across pods);
+    inner ← broadcast(outer); slide-window update (sharded state).
+
+    Variants (EXPERIMENTS.md §Perf pair 3): exact f32 ring (paper),
+    bf16 ring (2× window memory saving), or hwa_cfg.window_kind ==
+    "streaming" (O(1) extra copies, windowed-running-mean approximation).
+    """
+    from repro.core.offline import WindowState, window_update
+    from repro.core.online import broadcast_to_replicas, online_average
+
+    K = hwa_cfg.n_replicas
+    I = hwa_cfg.window
+    streaming = hwa_cfg.window_kind == "streaming"
+    params_abs, param_dims = lm.abstract()
+    stacked_abs = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((K,) + s.shape, s.dtype), params_abs)
+    stacked_dims = _prefix_dims(param_dims, "replica")
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    ring_abs = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((I,) + s.shape, ring_dtype),
+        params_abs)
+    ring_dims = _prefix_dims(param_dims, None)
+    total_abs = jax.tree.map(f32, params_abs)
+    scalar_i = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def step_ring(inner, ring, total, count, next_idx):
+        outer = online_average(inner)
+        new_inner = broadcast_to_replicas(outer, K)
+        ws = WindowState(ring=ring, total=total, count=count,
+                         next_idx=next_idx, window=I, kind="ring")
+        ws2, wa = window_update(ws, outer)
+        return new_inner, ws2.ring, ws2.total, ws2.count, ws2.next_idx, wa
+
+    def step_streaming(inner, total, count):
+        outer = online_average(inner)
+        new_inner = broadcast_to_replicas(outer, K)
+        ws = WindowState(ring=None, total=total, count=count,
+                         next_idx=jnp.zeros((), jnp.int32), window=I,
+                         kind="streaming")
+        ws2, wa = window_update(ws, outer)
+        return new_inner, ws2.total, ws2.count, wa
+
+    p_sh = rules.tree_shardings(stacked_abs, stacked_dims)
+    r_sh = rules.tree_shardings(ring_abs, ring_dims)
+    t_sh = rules.tree_shardings(total_abs, param_dims)
+    w_sh = rules.tree_shardings(params_abs, param_dims)
+    s_sh = NamedSharding(rules.mesh, P())
+    if streaming:
+        return StepBundle(
+            fn=step_streaming,
+            abstract_args=(stacked_abs, total_abs, scalar_i),
+            in_shardings=(p_sh, t_sh, s_sh),
+            out_shardings=(p_sh, t_sh, s_sh, w_sh),
+            donate_argnums=(0, 1))
+    return StepBundle(
+        fn=step_ring,
+        abstract_args=(stacked_abs, ring_abs, total_abs, scalar_i, scalar_i),
+        in_shardings=(p_sh, r_sh, t_sh, s_sh, s_sh),
+        out_shardings=(p_sh, r_sh, t_sh, s_sh, s_sh, w_sh),
+        donate_argnums=(0, 1, 2))

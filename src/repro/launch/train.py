@@ -1,0 +1,67 @@
+"""Training launcher: HWA (and baselines) on any assigned architecture.
+
+CPU-scale entry point (smoke configs by default) that exercises the full
+stack: config registry → synthetic data → HWA trainer → checkpoints.
+The production path for real hardware is the same Trainer with the
+HWA mesh (``repro.launch.mesh.make_hwa_mesh``) — see examples/.
+
+  PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b \
+      --method hwa --steps 300 --k 2 --window 10
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.core.hwa import HWAConfig
+from repro.data import DataPipeline, make_markov_lm_dataset
+from repro.models.registry import build_model
+from repro.train.trainer import TrainConfig, Trainer, lm_task
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b", choices=ARCH_IDS)
+    ap.add_argument("--method", default="hwa",
+                    choices=["base", "ca", "swa", "ema", "lookahead", "sam",
+                             "online", "pmsgd", "hwa"])
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch-size", type=int, default=16)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=0.3)
+    ap.add_argument("--k", type=int, default=2, help="HWA replicas K")
+    ap.add_argument("--sync-period", type=int, default=0, help="H (0=epoch)")
+    ap.add_argument("--window", type=int, default=10, help="I")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    if cfg.family in ("vlm", "audio"):
+        raise SystemExit(f"{args.arch}: use examples/serve_decode.py-style "
+                         "drivers for modality-frontend archs")
+    lm = build_model(cfg)
+    ds = make_markov_lm_dataset(vocab=cfg.vocab_size, seq_len=args.seq_len,
+                                n_train=2048, n_test=512, seed=args.seed)
+    K = args.k if args.method in ("hwa", "online", "pmsgd") else 1
+    pipe = DataPipeline(ds, batch_size=args.batch_size, n_replicas=K,
+                        seed=args.seed)
+    tc = TrainConfig(
+        method=args.method, total_steps=args.steps,
+        batch_size=args.batch_size, base_lr=args.lr, seed=args.seed,
+        hwa=HWAConfig(n_replicas=K, sync_period=args.sync_period,
+                      window=args.window))
+    out = Trainer(lm_task(lm, pipe), tc).run(log=True)
+    print(f"[train] {args.arch}/{args.method}: final {out['final']}, "
+          f"best {out['best']}")
+    if args.out:
+        os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump({"final": out["final"], "best": out["best"],
+                       "history": out["history"]}, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.models.types import ModelConfig, InputShape
+from repro.models.registry import build_model, LM

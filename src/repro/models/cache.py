@@ -1,0 +1,53 @@
+"""KV / recurrent-state caches for batched decode.
+
+Cache layout (leaves carry a leading ``layers`` axis so the decode step
+scans over layers with the per-layer cache as scan xs/ys):
+
+- attention: ``k``/``v``: (L, B, C, Hkv, D) with C = min(seq_len, window);
+  a ring buffer under sliding windows. ``k_pos``: (C,) global positions of
+  each slot (-1 = empty, masked out).
+- ssm (mamba/mLSTM/sLSTM): constant-size per-layer state tensors.
+
+``pos`` is the number of tokens already consumed (scalar int32).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attn_cache_len(seq_len: int, window) -> int:
+    return seq_len if window is None else min(seq_len, window)
+
+
+def init_attn_cache(n_layers, batch, cache_len, n_kv, head_dim, dtype):
+    params = {
+        "k": jnp.zeros((n_layers, batch, cache_len, n_kv, head_dim), dtype),
+        "v": jnp.zeros((n_layers, batch, cache_len, n_kv, head_dim), dtype),
+    }
+    dims = {
+        "k": ("layers", "batch", "seq", "kv_heads", "head_dim"),
+        "v": ("layers", "batch", "seq", "kv_heads", "head_dim"),
+    }
+    return params, dims
+
+
+def update_attn_cache(layer_cache, k_new, v_new, pos):
+    """Write one token's K/V at ring slot ``pos % C``. k_new: (B,1,Hkv,D)."""
+    C = layer_cache["k"].shape[1]
+    slot = jnp.mod(pos, C)
+    k = jax.lax.dynamic_update_slice_in_dim(layer_cache["k"], k_new, slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(layer_cache["v"], v_new, slot, axis=1)
+    return {"k": k, "v": v}
+
+
+def cache_positions(cache_len: int, pos):
+    """Global position held by each ring slot after ``pos+1`` writes.
+
+    Slot s holds the largest position p <= pos with p % C == s; slots never
+    written yet get -1 (masked).
+    """
+    slots = jnp.arange(cache_len)
+    rem = jnp.mod(pos, cache_len)
+    p = jnp.where(slots <= rem, pos - rem + slots, pos - rem + slots - cache_len)
+    return jnp.where(p >= 0, p, -1)

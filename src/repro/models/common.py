@@ -1,0 +1,83 @@
+"""Shared building blocks: initializers, norms, RoPE, activations.
+
+Every ``init_*`` helper returns ``(params, dims)`` — parallel pytrees where
+``dims`` holds the logical dim names consumed by ``repro.sharding.rules``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def normal_init(key, shape, dims, dtype, fan_in=None):
+    """Truncated-normal-ish init scaled by 1/sqrt(fan_in)."""
+    fan_in = fan_in if fan_in is not None else shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape) * scale).astype(dtype), tuple(dims)
+
+
+def zeros_init(shape, dims, dtype):
+    return jnp.zeros(shape, dtype), tuple(dims)
+
+
+def ones_init(shape, dims, dtype):
+    return jnp.ones(shape, dtype), tuple(dims)
+
+
+# ---------------------------------------------------------------- norms
+
+
+def init_norm(cfg, d=None):
+    d = d or cfg.d_model
+    params = {"scale": jnp.ones((d,), jnp.float32)}
+    dims = {"scale": ("embed",)}
+    if cfg.norm == "layernorm":
+        params["bias"] = jnp.zeros((d,), jnp.float32)
+        dims["bias"] = ("embed",)
+    return params, dims
+
+
+def apply_norm(cfg, p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mean) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- rope
+
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                       # (half,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, half)
+    cos = jnp.cos(angles)[..., None, :]                        # (..., seq, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- act
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)

@@ -1,0 +1,133 @@
+"""ResNet-CIFAR with BatchNorm — the paper's own architecture family.
+
+The paper evaluates HWA on ResNet-20/32/56/110 (+VGG16, MobileNetV2) on
+CIFAR. We implement the CIFAR ResNet exactly (3 stages × n blocks, widths
+16/32/64, stride-2 stage transitions, identity shortcuts with zero-padding)
+so the paper-faithful pipeline — SGD momentum 0.9, weight decay 5e-4,
+cosine LR, HWA with H = one epoch — runs end-to-end, including the
+BatchNorm-statistics recompute of Algorithm 2 line 3.
+
+API (BN has running state, so this is not the LM API):
+    params, bn_state = init_resnet(cfg, key)
+    logits, new_bn_state = apply_resnet(cfg, params, bn_state, x, train=True)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import normal_init
+from repro.models.types import ModelConfig
+
+BN_MOMENTUM = 0.9
+
+
+def resnet_cifar_config(depth: int = 20, n_classes: int = 10,
+                        image_size: int = 32) -> ModelConfig:
+    assert (depth - 2) % 6 == 0, "CIFAR ResNet depth must be 6n+2"
+    n = (depth - 2) // 6
+    return ModelConfig(
+        name=f"resnet{depth}-cifar", family="convnet", n_layers=depth,
+        d_model=64, n_heads=1, n_kv_heads=1, d_ff=0, vocab_size=n_classes,
+        widths=(16, 32, 64), blocks_per_stage=n, image_size=image_size,
+        n_classes=n_classes, dtype="float32",
+        source="[He et al. 2016; paper §V]")
+
+
+def _conv_init(key, k, cin, cout):
+    fan_in = k * k * cin
+    w = jax.random.normal(key, (k, k, cin, cout)) * jnp.sqrt(2.0 / fan_in)
+    return w.astype(jnp.float32)
+
+
+def _bn_init(c):
+    params = {"scale": jnp.ones((c,), jnp.float32),
+              "bias": jnp.zeros((c,), jnp.float32)}
+    state = {"mean": jnp.zeros((c,), jnp.float32),
+             "var": jnp.ones((c,), jnp.float32)}
+    return params, state
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _bn(p, s, x, train: bool, eps=1e-5):
+    if train:
+        mean = jnp.mean(x, axis=(0, 1, 2))
+        var = jnp.var(x, axis=(0, 1, 2))
+        new_s = {"mean": BN_MOMENTUM * s["mean"] + (1 - BN_MOMENTUM) * mean,
+                 "var": BN_MOMENTUM * s["var"] + (1 - BN_MOMENTUM) * var}
+    else:
+        mean, var = s["mean"], s["var"]
+        new_s = s
+    y = (x - mean) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return y, new_s
+
+
+def init_resnet(cfg: ModelConfig, key):
+    widths = cfg.widths
+    n = cfg.blocks_per_stage
+    keys = iter(jax.random.split(key, 4 + 6 * len(widths) * n))
+    params, state = {}, {}
+    params["stem"] = _conv_init(next(keys), 3, 3, widths[0])
+    params["stem_bn"], state["stem_bn"] = _bn_init(widths[0])
+    cin = widths[0]
+    for si, w in enumerate(widths):
+        for bi in range(n):
+            name = f"s{si}b{bi}"
+            stride = 2 if (si > 0 and bi == 0) else 1
+            blk, blk_state = {}, {}
+            blk["conv1"] = _conv_init(next(keys), 3, cin, w)
+            blk["bn1"], blk_state["bn1"] = _bn_init(w)
+            blk["conv2"] = _conv_init(next(keys), 3, w, w)
+            blk["bn2"], blk_state["bn2"] = _bn_init(w)
+            params[name], state[name] = blk, blk_state
+            cin = w
+    params["fc_w"] = (jax.random.normal(next(keys), (widths[-1], cfg.n_classes))
+                      / jnp.sqrt(widths[-1])).astype(jnp.float32)
+    params["fc_b"] = jnp.zeros((cfg.n_classes,), jnp.float32)
+    return params, state
+
+
+def apply_resnet(cfg: ModelConfig, params, bn_state, x, train: bool = True):
+    new_state = {}
+    h = _conv(x, params["stem"])
+    h, new_state["stem_bn"] = _bn(params["stem_bn"], bn_state["stem_bn"], h, train)
+    h = jax.nn.relu(h)
+    n = cfg.blocks_per_stage
+    for si, w in enumerate(cfg.widths):
+        for bi in range(n):
+            name = f"s{si}b{bi}"
+            blk, blk_s = params[name], bn_state[name]
+            stride = 2 if (si > 0 and bi == 0) else 1
+            ns = {}
+            y = _conv(h, blk["conv1"], stride)
+            y, ns["bn1"] = _bn(blk["bn1"], blk_s["bn1"], y, train)
+            y = jax.nn.relu(y)
+            y = _conv(y, blk["conv2"])
+            y, ns["bn2"] = _bn(blk["bn2"], blk_s["bn2"], y, train)
+            if stride != 1 or h.shape[-1] != w:
+                # identity shortcut: stride-2 subsample + zero-pad channels
+                sc = h[:, ::stride, ::stride]
+                pad = w - sc.shape[-1]
+                sc = jnp.pad(sc, ((0, 0), (0, 0), (0, 0), (0, pad)))
+            else:
+                sc = h
+            h = jax.nn.relu(y + sc)
+            new_state[name] = ns
+    h = jnp.mean(h, axis=(1, 2))
+    logits = h @ params["fc_w"] + params["fc_b"]
+    return logits, new_state
+
+
+def resnet_loss(cfg, params, bn_state, batch, train: bool = True):
+    logits, new_state = apply_resnet(cfg, params, bn_state,
+                                     batch["tokens"], train)
+    targets = batch["targets"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    loss = -jnp.mean(jnp.take_along_axis(logp, targets[:, None], axis=-1))
+    acc = jnp.mean((jnp.argmax(logits, -1) == targets).astype(jnp.float32))
+    return loss, {"loss": loss, "acc": acc, "bn_state": new_state}

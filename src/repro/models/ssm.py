@@ -1,0 +1,432 @@
+"""Recurrent sequence-mixing cells: mLSTM + sLSTM (xLSTM) and Mamba heads
+(Hymba's parallel-SSM branch).
+
+All cells share one calling convention so training, prefill and cached
+decode use the same code path:
+
+    y, state_out = <cell>_scan(cfg, params, x, state_in)
+
+with x: (B, T, ...) and constant-size state pytrees — T=1 with a carried
+state is exactly the decode step. Training passes the zero state.
+
+TPU note (DESIGN.md §2): the recurrences are expressed as ``lax.scan`` over
+time — sequential but VMEM-resident state; the chunkwise-parallel form is
+a recorded beyond-paper optimization lever, not required for HWA itself.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_norm, normal_init
+
+
+def _rms_head_norm(x, eps=1e-6):
+    """Per-head RMS norm (GroupNorm-style) over the last dim, no params."""
+    xf = x.astype(jnp.float32)
+    return (xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+            ).astype(x.dtype)
+
+
+def _causal_conv(x, kernel, conv_state=None):
+    """Depthwise causal 1-D conv. x: (B, T, C), kernel: (K, C).
+
+    If ``conv_state`` (B, K-1, C) is given it is prepended (decode path) and
+    the updated state is returned; otherwise zero left-padding (train path).
+    """
+    K = kernel.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros(x.shape[:1] + (K - 1,) + x.shape[2:], x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                     # (B, T+K-1, C)
+    out = sum(xp[:, i:i + x.shape[1]] * kernel[i] for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else pad
+    return out, new_state
+
+
+# ===================================================================
+# mLSTM (matrix-memory LSTM) — xLSTM [arXiv:2405.04517] eq. (19)-(27)
+# ===================================================================
+
+
+def init_mlstm(cfg, key, dtype):
+    D = cfg.d_model
+    H = cfg.n_heads
+    d_inner = 2 * D                       # proj_factor 2 (xLSTM default)
+    P = d_inner // H
+    ks = jax.random.split(key, 8)
+    params, dims = {}, {}
+    params["w_up"], dims["w_up"] = normal_init(
+        ks[0], (D, 2 * d_inner), ("embed", "mlp"), dtype, fan_in=D)
+    params["conv"], dims["conv"] = normal_init(
+        ks[1], (cfg.conv_kernel, d_inner), (None, "mlp"), dtype,
+        fan_in=cfg.conv_kernel)
+    params["w_q"], dims["w_q"] = normal_init(
+        ks[2], (d_inner, d_inner), ("mlp", None), dtype, fan_in=d_inner)
+    params["w_k"], dims["w_k"] = normal_init(
+        ks[3], (d_inner, d_inner), ("mlp", None), dtype, fan_in=d_inner)
+    params["w_v"], dims["w_v"] = normal_init(
+        ks[4], (d_inner, d_inner), ("mlp", None), dtype, fan_in=d_inner)
+    params["w_if"], dims["w_if"] = normal_init(
+        ks[5], (d_inner, 2 * H), ("mlp", None), jnp.float32, fan_in=d_inner)
+    params["b_if"] = jnp.concatenate(
+        [jnp.zeros((H,), jnp.float32), 3.0 * jnp.ones((H,), jnp.float32)])
+    dims["b_if"] = (None,)
+    params["w_out"], dims["w_out"] = normal_init(
+        ks[6], (d_inner, D), ("mlp", "embed"), dtype, fan_in=d_inner)
+    return params, dims
+
+
+def init_mlstm_state(cfg, batch, dtype=jnp.float32):
+    D, H = cfg.d_model, cfg.n_heads
+    d_inner = 2 * D
+    P = d_inner // H
+    return {
+        "C": jnp.zeros((batch, H, P, P), jnp.float32),
+        "n": jnp.zeros((batch, H, P), jnp.float32),
+        "m": jnp.zeros((batch, H), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, d_inner), dtype),
+    }
+
+
+def mlstm_state_dims(cfg):
+    return {"C": ("batch", "heads", None, None), "n": ("batch", "heads", None),
+            "m": ("batch", "heads"), "conv": ("batch", None, "mlp")}
+
+
+MLSTM_CHUNK = 256
+
+
+def _pick_chunk(T: int, target: int) -> int:
+    """Largest divisor of T ≤ target (sequences with meta-token prefixes
+    are not powers of two; a non-divisible chunk would silently fall back
+    to the O(T·state) sequential scan — 28 GB/device for hymba train)."""
+    if target <= 0 or T < 2 * 32:
+        return 0
+    for b in range(min(target, T), 31, -1):
+        if T % b == 0:
+            return b
+    return 0
+
+
+def _mlstm_chunkwise(q, k, v, i_pre, f_pre, state, chunk: int):
+    """Chunkwise-parallel mLSTM (xLSTM App. A parallel form + stabilizer).
+
+    Sequential-scan backward would store the (P,P) matrix memory per time
+    step (O(T·P²) residuals — the 34 GB/device OOM found in the dry-run);
+    chunkwise stores it only at the T/chunk boundaries and computes
+    intra-chunk interactions as a masked (L×L) decay-score matmul.
+    q/k/v: (B,T,H,P); i_pre/f_pre: (B,T,H). Returns (h (B,T,H,P), state').
+    """
+    B, T, H, P = q.shape
+    L = chunk
+    nc = T // L
+    f32 = jnp.float32
+
+    def to_chunks(a, tail):  # (B,T,...) -> (nc, B, H, L, ...)
+        a = jnp.moveaxis(a.reshape(B, nc, L, *tail), 1, 0)
+        return jnp.swapaxes(a, 2, 3) if len(tail) == 2 else jnp.swapaxes(a, -1, -2)
+
+    qc = to_chunks(q.astype(f32), (H, P))            # (nc,B,H,L,P)
+    kc = to_chunks(k.astype(f32), (H, P))
+    vc = to_chunks(v.astype(f32), (H, P))
+    ic = to_chunks(i_pre.astype(f32), (H,))          # (nc,B,H,L)
+    logf = -jax.nn.softplus(-f_pre.astype(f32))
+    fc = to_chunks(logf, (H,))
+
+    mask = jnp.tril(jnp.ones((L, L), bool))
+
+    def chunk_step(carry, xs):
+        C0, n0, m0 = carry                           # (B,H,P,P),(B,H,P),(B,H)
+        qb, kb, vb, ib, fb = xs
+        b = jnp.cumsum(fb, axis=-1)                  # (B,H,L)
+        g = jax.lax.cummax(ib - b, axis=ib.ndim - 1)
+        m = b + jnp.maximum(m0[..., None], g)        # (B,H,L)
+        # intra-chunk decay scores: exp(b_t - m_t + i_s - b_s), s<=t
+        logS = (b - m)[..., :, None] + (ib - b)[..., None, :]
+        S = jnp.where(mask, jnp.exp(logS), 0.0)      # (B,H,L,L)
+        qk = jnp.einsum("bhtp,bhsp->bhts", qb, kb)
+        num = jnp.einsum("bhts,bhsp->bhtp", S * qk, vb)
+        den = jnp.einsum("bhts,bhts->bht", S, qk)
+        decay0 = jnp.exp(b + m0[..., None] - m)      # (B,H,L)
+        num = num + decay0[..., None] * jnp.einsum("bhpq,bhtq->bhtp", C0, qb)
+        den = den + decay0 * jnp.einsum("bhq,bhtq->bht", n0, qb)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m))[..., None]
+        # carry to next chunk
+        mL = m[..., -1]
+        w = jnp.exp(b[..., -1:] - b + ib - mL[..., None])   # (B,H,L)
+        CL = (jnp.exp(b[..., -1] + m0 - mL)[..., None, None] * C0
+              + jnp.einsum("bhs,bhsp,bhsq->bhpq", w, vb, kb))
+        nL = (jnp.exp(b[..., -1] + m0 - mL)[..., None] * n0
+              + jnp.einsum("bhs,bhsp->bhp", w, kb))
+        return (CL, nL, mL), h
+
+    (C, n, m), hs = jax.lax.scan(
+        chunk_step, (state["C"], state["n"], state["m"]),
+        (qc, kc, vc, ic, fc))
+    # hs: (nc, B, H, L, P) -> (B, T, H, P)
+    h = jnp.moveaxis(hs, 0, 1).swapaxes(2, 3).reshape(B, T, H, P)
+    return h, {"C": C, "n": n, "m": m}
+
+
+def mlstm_scan(cfg, p, x, state):
+    """x: (B, T, D) -> (y: (B, T, D), state')."""
+    B, T, D = x.shape
+    H = cfg.n_heads
+    d_inner = 2 * D
+    P = d_inner // H
+    up = x @ p["w_up"]
+    xm, z = jnp.split(up, 2, axis=-1)                           # (B,T,d_inner)
+    xc, conv_state = _causal_conv(xm, p["conv"], state["conv"])
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    q = (xc @ p["w_q"]).reshape(B, T, H, P)
+    k = (xc @ p["w_k"]).reshape(B, T, H, P) / jnp.sqrt(P).astype(x.dtype)
+    v = (xm @ p["w_v"]).reshape(B, T, H, P)
+    gates = xc.astype(jnp.float32) @ p["w_if"] + p["b_if"]      # (B,T,2H)
+    i_pre, f_pre = jnp.split(gates, 2, axis=-1)                  # (B,T,H)
+
+    chunk = _pick_chunk(T, MLSTM_CHUNK)
+    if chunk and T >= 2 * chunk:
+        hs_bthp, new_carry = _mlstm_chunkwise(q, k, v, i_pre, f_pre, state,
+                                              chunk)
+        h = _rms_head_norm(hs_bthp).reshape(B, T, d_inner).astype(x.dtype)
+        y = (h * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)) @ p["w_out"]
+        return y, {**new_carry, "conv": conv_state}
+
+    def step(carry, t_in):
+        C, n, m = carry
+        qt, kt, vt, it, ft = t_in                                # (B,H,P) ...
+        log_f = -jax.nn.softplus(-ft)                            # log sigmoid(f)
+        m_new = jnp.maximum(log_f + m, it)
+        i_g = jnp.exp(it - m_new)                                # (B,H)
+        f_g = jnp.exp(log_f + m - m_new)
+        kf, vf, qf = (a.astype(jnp.float32) for a in (kt, vt, qt))
+        C_new = f_g[..., None, None] * C + i_g[..., None, None] * (
+            vf[..., :, None] * kf[..., None, :])                 # (B,H,P,P)
+        n_new = f_g[..., None] * n + i_g[..., None] * kf
+        num = jnp.einsum("bhpq,bhq->bhp", C_new, qf)
+        # true-scale denominator max(|n·q|, 1) expressed in stabilized space
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", n_new, qf)),
+                          jnp.exp(-m_new))
+        h = num / den[..., None]
+        return (C_new, n_new, m_new), h.astype(x.dtype)
+
+    xs = (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+          i_pre.swapaxes(0, 1), f_pre.swapaxes(0, 1))
+    (C, n, m), hs = jax.lax.scan(step, (state["C"], state["n"], state["m"]), xs)
+    h = hs.swapaxes(0, 1).reshape(B, T, d_inner)                 # (B,T,H*P)
+    h = _rms_head_norm(h.reshape(B, T, H, P)).reshape(B, T, d_inner)
+    y = (h * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)) @ p["w_out"]
+    return y, {"C": C, "n": n, "m": m, "conv": conv_state}
+
+
+# ===================================================================
+# sLSTM (scalar-memory LSTM with exponential gating + recurrence)
+# ===================================================================
+
+
+def init_slstm(cfg, key, dtype):
+    D, H = cfg.d_model, cfg.n_heads
+    P = D // H
+    ks = jax.random.split(key, 4)
+    params, dims = {}, {}
+    params["w_in"], dims["w_in"] = normal_init(
+        ks[0], (D, 4 * D), ("embed", "mlp"), dtype, fan_in=D)     # z,i,f,o
+    params["r"], dims["r"] = normal_init(
+        ks[1], (H, P, 4 * P), ("heads", None, None), jnp.float32, fan_in=P)
+    params["b"] = jnp.zeros((4 * D,), jnp.float32)
+    params["b"] = params["b"].at[2 * D:3 * D].set(3.0)            # f-gate bias
+    dims["b"] = (None,)
+    params["w_out"], dims["w_out"] = normal_init(
+        ks[2], (D, D), ("embed", "embed2"), dtype, fan_in=D)
+    # post-cell FFN (xLSTM sLSTM blocks carry one)
+    ff = max(2 * D, 64)
+    params["ff_up"], dims["ff_up"] = normal_init(
+        ks[3], (D, ff), ("embed", "mlp"), dtype, fan_in=D)
+    params["ff_down"], dims["ff_down"] = normal_init(
+        jax.random.fold_in(ks[3], 1), (ff, D), ("mlp", "embed"), dtype, fan_in=ff)
+    return params, dims
+
+
+def init_slstm_state(cfg, batch, dtype=jnp.float32):
+    D, H = cfg.d_model, cfg.n_heads
+    P = D // H
+    z = lambda: jnp.zeros((batch, H, P), jnp.float32)
+    return {"c": z(), "n": z(), "m": z(), "h": z()}
+
+
+def slstm_state_dims(cfg):
+    d = ("batch", "heads", None)
+    return {"c": d, "n": d, "m": d, "h": d}
+
+
+def slstm_scan(cfg, p, x, state, rules=None):
+    B, T, D = x.shape
+    H = cfg.n_heads
+    P = D // H
+    pre_in = (x @ p["w_in"]).astype(jnp.float32) + p["b"]        # (B,T,4D)
+    # NOTE: an explicit gather of the model-sharded 4D dim here was tried
+    # and REFUTED (EXPERIMENTS.md §Perf pair 2-adjacent): the forced f32
+    # replication + its reverse reduce-scatter cost MORE (ICI 54→165
+    # GB/step) than the many small per-step permutes it removed.
+    del rules
+
+    def step(carry, pre_t):
+        c, n, m, h = carry
+        rec = jnp.einsum("bhp,hpq->bhq", h, p["r"])              # (B,H,4P)
+        # pre_t is (B, 4D) laid out as [z | i | f | o], each (B, H, P).
+        pre = pre_t.reshape(B, 4, H, P).transpose(0, 2, 1, 3).reshape(B, H, 4 * P)
+        zp, ip, fp, op = jnp.split(pre + rec, 4, axis=-1)        # (B,H,P)
+        z_ = jnp.tanh(zp)
+        o = jax.nn.sigmoid(op)
+        log_f = -jax.nn.softplus(-fp)
+        m_new = jnp.maximum(log_f + m, ip)
+        i_g = jnp.exp(ip - m_new)
+        f_g = jnp.exp(log_f + m - m_new)
+        c_new = f_g * c + i_g * z_
+        n_new = f_g * n + i_g
+        h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    (c, n, m, h), hs = jax.lax.scan(
+        step, (state["c"], state["n"], state["m"], state["h"]),
+        pre_in.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1)                                        # (B,T,H,P) f32
+    y = _rms_head_norm(y).reshape(B, T, D).astype(x.dtype)
+    y = y @ p["w_out"]
+    ff = jax.nn.gelu((y @ p["ff_up"]).astype(jnp.float32)).astype(x.dtype)
+    y = y + ff @ p["ff_down"]
+    return y, {"c": c, "n": n, "m": m, "h": h}
+
+
+# ===================================================================
+# Mamba2-style selective-SSM heads (Hymba's parallel branch)
+# ===================================================================
+
+
+def init_mamba(cfg, key, dtype):
+    D = cfg.d_model
+    H = cfg.ssm_heads or cfg.n_heads
+    N = cfg.ssm_state
+    d_inner = D                                # hymba: SSM branch width = D
+    ks = jax.random.split(key, 6)
+    params, dims = {}, {}
+    params["w_in"], dims["w_in"] = normal_init(
+        ks[0], (D, 2 * d_inner), ("embed", "mlp"), dtype, fan_in=D)
+    params["conv"], dims["conv"] = normal_init(
+        ks[1], (cfg.conv_kernel, d_inner), (None, "mlp"), dtype,
+        fan_in=cfg.conv_kernel)
+    params["w_bc"], dims["w_bc"] = normal_init(
+        ks[2], (d_inner, 2 * N), ("mlp", None), dtype, fan_in=d_inner)
+    params["w_dt"], dims["w_dt"] = normal_init(
+        ks[3], (d_inner, H), ("mlp", "ssm_heads"), jnp.float32, fan_in=d_inner)
+    params["dt_bias"] = jnp.zeros((H,), jnp.float32)
+    dims["dt_bias"] = ("ssm_heads",)
+    params["A_log"] = jnp.log(jnp.ones((H,), jnp.float32))
+    dims["A_log"] = ("ssm_heads",)
+    params["D_skip"] = jnp.ones((H,), jnp.float32)
+    dims["D_skip"] = ("ssm_heads",)
+    params["w_out"], dims["w_out"] = normal_init(
+        ks[4], (d_inner, D), ("mlp", "embed"), dtype, fan_in=d_inner)
+    return params, dims
+
+
+def init_mamba_state(cfg, batch, dtype=jnp.float32):
+    D = cfg.d_model
+    H = cfg.ssm_heads or cfg.n_heads
+    N = cfg.ssm_state
+    P = D // H
+    return {"S": jnp.zeros((batch, H, P, N), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_kernel - 1, D), dtype)}
+
+
+def mamba_state_dims(cfg):
+    return {"S": ("batch", "ssm_heads", None, None),
+            "conv": ("batch", None, "mlp")}
+
+
+MAMBA_CHUNK = 256
+
+
+def _mamba_chunkwise(xh, b_in, c_out, dt, a, state, chunk: int):
+    """Chunkwise-parallel selective SSM (Mamba2 SSD form).
+
+    Same motivation as ``_mlstm_chunkwise``: the sequential backward stores
+    the (P,N) state per step; chunkwise stores it per chunk boundary. No
+    stabilizer needed — the decay exp(dt·a) is ≤ 1.
+    xh: (B,T,H,P); b_in/c_out: (B,T,N); dt: (B,T,H); a: (H,).
+    """
+    B, T, H, P = xh.shape
+    N = b_in.shape[-1]
+    L = chunk
+    nc = T // L
+    la = dt * a                                        # (B,T,H) log-decay ≤ 0
+
+    xc_ = jnp.moveaxis(xh.reshape(B, nc, L, H, P), 1, 0).swapaxes(2, 3)
+    dtc = jnp.moveaxis(dt.reshape(B, nc, L, H), 1, 0).swapaxes(-1, -2)
+    lac = jnp.moveaxis(la.reshape(B, nc, L, H), 1, 0).swapaxes(-1, -2)
+    bc_ = jnp.moveaxis(b_in.reshape(B, nc, L, N), 1, 0)   # (nc,B,L,N)
+    cc_ = jnp.moveaxis(c_out.reshape(B, nc, L, N), 1, 0)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+
+    def chunk_step(S0, xs):
+        xb, dtb, lab, bb, cb = xs          # (B,H,L,P),(B,H,L),(B,H,L),(B,L,N)
+        cum = jnp.cumsum(lab, axis=-1)     # (B,H,L)
+        # intra: w[t,s] = exp(cum_t - cum_s) * dt_s   for s<=t
+        w = jnp.exp(cum[..., :, None] - cum[..., None, :]) * dtb[..., None, :]
+        w = jnp.where(mask, w, 0.0)
+        bcs = jnp.einsum("btn,bsn->bts", cb, bb)        # (B,L,L)
+        y = jnp.einsum("bhts,bts,bhsp->bhtp", w, bcs, xb)
+        y = y + jnp.exp(cum)[..., None] * jnp.einsum(
+            "bhpn,btn->bhtp", S0, cb)
+        # carry
+        wL = jnp.exp(cum[..., -1:] - cum) * dtb          # (B,H,L)
+        SL = (jnp.exp(cum[..., -1])[..., None, None] * S0
+              + jnp.einsum("bhs,bhsp,bsn->bhpn", wL, xb, bb))
+        return SL, y
+
+    S, ys = jax.lax.scan(chunk_step, state["S"], (xc_, dtc, lac, bc_, cc_))
+    y = jnp.moveaxis(ys, 0, 1).swapaxes(2, 3).reshape(B, T, H, P)
+    return y, S
+
+
+def mamba_scan(cfg, p, x, state):
+    B, T, D = x.shape
+    H = cfg.ssm_heads or cfg.n_heads
+    N = cfg.ssm_state
+    P = D // H
+    xz = x @ p["w_in"]
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = _causal_conv(xs, p["conv"], state["conv"])
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    bc = xc @ p["w_bc"]                                          # (B,T,2N)
+    b_in, c_out = jnp.split(bc.astype(jnp.float32), 2, axis=-1)  # (B,T,N)
+    dt = jax.nn.softplus(xc.astype(jnp.float32) @ p["w_dt"] + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])                                     # (H,)
+    xh = xc.reshape(B, T, H, P).astype(jnp.float32)
+
+    chunk = _pick_chunk(T, MAMBA_CHUNK)
+    if chunk and T >= 2 * chunk:
+        y_bthp, S = _mamba_chunkwise(xh, b_in, c_out, dt, a, state, chunk)
+        y = y_bthp + p["D_skip"][:, None] * xh
+        y = _rms_head_norm(y).reshape(B, T, D).astype(x.dtype)
+        y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+        return y @ p["w_out"], {"S": S, "conv": conv_state}
+
+    def step(S, t_in):
+        xt, bt, ct, dtt = t_in                                   # (B,H,P),(B,N),(B,N),(B,H)
+        dA = jnp.exp(dtt * a)                                    # (B,H)
+        dBx = dtt[..., None, None] * (xt[..., :, None] * bt[:, None, None, :])
+        S_new = dA[..., None, None] * S + dBx                    # (B,H,P,N)
+        y = jnp.einsum("bhpn,bn->bhp", S_new, ct)
+        return S_new, y
+
+    xs_t = (xh.swapaxes(0, 1), b_in.swapaxes(0, 1), c_out.swapaxes(0, 1),
+            dt.swapaxes(0, 1))
+    S, ys = jax.lax.scan(step, state["S"], xs_t)
+    y = ys.swapaxes(0, 1)                                        # (B,T,H,P)
+    y = y + p["D_skip"][:, None] * xh
+    y = _rms_head_norm(y).reshape(B, T, D).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return y @ p["w_out"], {"S": S, "conv": conv_state}

@@ -1,0 +1,487 @@
+"""Unified decoder stack for all assigned architecture families.
+
+A model is a *pattern* of sub-layer specs (a "super-block") scanned
+``n_layers / len(pattern)`` times with stacked parameters — one compiled
+block body regardless of depth (bounded HLO size / compile time; see
+DESIGN.md §5). Heterogeneous stacks are patterns longer than 1:
+
+  dense / moe / vlm / audio : [attn+mlp]            (window per spec)
+  gemma2                    : [local attn, global attn]  × 23
+  xlstm                     : [mLSTM block, sLSTM block] × 6
+  hymba                     : [parallel attn ‖ mamba + mlp]
+
+Sub-layer kinds:
+  "attn"   — GQA attention (+ MLP or MoE per cfg.family)
+  "mlstm"  — xLSTM matrix-memory block
+  "slstm"  — xLSTM scalar-memory block (own FFN)
+  "hybrid" — Hymba parallel attention+mamba heads (+ MLP)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ssm
+from repro.models.attention import run_attention
+from repro.models.cache import (attn_cache_len, cache_positions,
+                                init_attn_cache, update_attn_cache)
+from repro.models.common import (activation, apply_norm, init_norm,
+                                 normal_init, apply_rope, softcap)
+from repro.models.moe import (init_moe, moe_forward, moe_forward_ep,
+                              moe_forward_sharded)
+from repro.models.types import ModelConfig
+
+INT_MAX = 2**31 - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    kind: str                    # attn | mlstm | slstm | hybrid
+    window: int | None = None    # sliding window (None = full causal)
+    use_moe: bool = False
+
+
+def block_pattern(cfg: ModelConfig) -> list[LayerSpec]:
+    if cfg.family == "ssm":          # xlstm: alternate mLSTM / sLSTM
+        return [LayerSpec("mlstm"), LayerSpec("slstm")]
+    if cfg.family == "hybrid":       # hymba: parallel attn+SSM, SWA
+        return [LayerSpec("hybrid", window=cfg.sliding_window)]
+    if cfg.global_every:             # gemma2: local / global alternation
+        return [LayerSpec("attn", window=cfg.sliding_window,
+                          use_moe=False),
+                LayerSpec("attn", window=None, use_moe=False)]
+    return [LayerSpec("attn", window=cfg.sliding_window,
+                      use_moe=cfg.family == "moe")]
+
+
+# ------------------------------------------------------------------
+# per-sub-layer init/apply
+# ------------------------------------------------------------------
+
+
+def _init_attn(cfg, key, dtype):
+    D = cfg.d_model
+    H, K, P = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    params, dims = {}, {}
+    params["wq"], dims["wq"] = normal_init(
+        ks[0], (D, H, P), ("embed", "heads", "head_dim"), dtype, fan_in=D)
+    params["wk"], dims["wk"] = normal_init(
+        ks[1], (D, K, P), ("embed", "kv_heads", "head_dim"), dtype, fan_in=D)
+    params["wv"], dims["wv"] = normal_init(
+        ks[2], (D, K, P), ("embed", "kv_heads", "head_dim"), dtype, fan_in=D)
+    params["wo"], dims["wo"] = normal_init(
+        ks[3], (H, P, D), ("heads", "head_dim", "embed"), dtype, fan_in=H * P)
+    return params, dims
+
+
+def _init_mlp(cfg, key, dtype):
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    params, dims = {}, {}
+    params["w_gate"], dims["w_gate"] = normal_init(
+        ks[0], (D, F), ("embed", "mlp"), dtype, fan_in=D)
+    params["w_up"], dims["w_up"] = normal_init(
+        ks[1], (D, F), ("embed", "mlp"), dtype, fan_in=D)
+    params["w_down"], dims["w_down"] = normal_init(
+        ks[2], (F, D), ("mlp", "embed"), dtype, fan_in=F)
+    return params, dims
+
+
+def _apply_mlp(cfg, p, x, rules=None):
+    act = activation(cfg.act)
+    h = (act((x @ p["w_gate"]).astype(jnp.float32))
+         * (x @ p["w_up"]).astype(jnp.float32)).astype(x.dtype)
+    if rules is not None:
+        # Megatron-SP: with a seq-sharded residual stream XLA otherwise
+        # keeps seq sharding inside the layer and all-gathers the FULL
+        # mlp weights per layer (1.4 GB/layer measured). Forcing the
+        # hidden to ff-sharded makes it gather activations (16 MB) and
+        # reduce-scatter the output instead.
+        h = rules.constrain(h, ("batch", None, "mlp"))
+    return h @ p["w_down"]
+
+
+def _init_layer(cfg: ModelConfig, spec: LayerSpec, key, dtype):
+    ks = jax.random.split(key, 6)
+    params, dims = {}, {}
+    if spec.kind in ("attn", "hybrid"):
+        params["ln1"], dims["ln1"] = init_norm(cfg)
+        params["ln2"], dims["ln2"] = init_norm(cfg)
+        if cfg.name.startswith("gemma2"):
+            params["ln1_post"], dims["ln1_post"] = init_norm(cfg)
+            params["ln2_post"], dims["ln2_post"] = init_norm(cfg)
+        params["attn"], dims["attn"] = _init_attn(cfg, ks[0], dtype)
+        if spec.kind == "hybrid":
+            params["mamba"], dims["mamba"] = ssm.init_mamba(cfg, ks[1], dtype)
+            params["fuse"] = jnp.ones((2,), jnp.float32)
+            dims["fuse"] = (None,)
+        if spec.use_moe:
+            params["moe"], dims["moe"] = init_moe(cfg, ks[2], dtype)
+        else:
+            params["mlp"], dims["mlp"] = _init_mlp(cfg, ks[2], dtype)
+    elif spec.kind == "mlstm":
+        params["ln1"], dims["ln1"] = init_norm(cfg)
+        params["cell"], dims["cell"] = ssm.init_mlstm(cfg, ks[0], dtype)
+    elif spec.kind == "slstm":
+        params["ln1"], dims["ln1"] = init_norm(cfg)
+        params["cell"], dims["cell"] = ssm.init_slstm(cfg, ks[0], dtype)
+    else:
+        raise ValueError(spec.kind)
+    return params, dims
+
+
+def _attn_shard_dims(cfg, rules, decode: bool):
+    """Consistent q vs k/v activation sharding (DESIGN.md §4 table).
+
+    The naive fallthrough (q on heads, k/v on head_dim when kv_heads
+    doesn't divide the model axis) makes the score contraction cross-shard
+    — the dry-run measured it at >100 GB/device of psum traffic. Policy:
+
+    - kv_heads % model == 0: q on heads, k/v on kv_heads (groups align,
+      contraction local).
+    - else, train/prefill: q on heads, k/v *replicated* over model (one
+      K/V all-gather per layer ≪ score psums).
+    - else, decode (S == 1): q AND k/v on head_dim — the score psum is a
+      (B, Hkv, G, 1, T) tile, cheap for one token, and the big KV cache
+      stays sharded.
+    """
+    if rules is None:
+        return None, None
+    msize = rules.mesh.shape.get("model", 1)
+    if cfg.n_kv_heads % msize == 0:
+        return (("batch", None, "heads", None),
+                ("batch", None, "kv_heads", None))
+    if decode:
+        return (("batch", None, None, "head_dim"),
+                ("batch", None, None, "head_dim"))
+    return (("batch", None, "heads", None), ("batch", None, None, None))
+
+
+def _attn_call(cfg, p_attn, x, q_pos, k, v, k_pos, window, rules=None):
+    """Project q from x, run attention against provided k/v.
+
+    ``q_pos``: (S,) and ``k_pos``: (T,) global positions (shared over batch).
+    """
+    q = jnp.einsum("bsd,dhp->bshp", x, p_attn["wq"])
+    q = apply_rope(q, q_pos, cfg.rope_theta)
+    if rules is not None:
+        q_dims, kv_dims = _attn_shard_dims(cfg, rules, decode=x.shape[1] == 1)
+        q = rules.constrain(q, q_dims)
+        k = rules.constrain(k, kv_dims)
+        v = rules.constrain(v, kv_dims)
+    out = run_attention(cfg.attn_impl, q, k, v, q_pos, k_pos, window=window,
+                        logit_softcap=cfg.logit_softcap)
+    return jnp.einsum("bshp,hpd->bsd", out, p_attn["wo"])
+
+
+def _project_kv(cfg, p_attn, x, k_pos):
+    """K/V projections with RoPE on K. ``k_pos``: (S,)."""
+    k = jnp.einsum("bsd,dkp->bskp", x, p_attn["wk"])
+    v = jnp.einsum("bsd,dkp->bskp", x, p_attn["wv"])
+    k = apply_rope(k, k_pos, cfg.rope_theta)
+    return k, v
+
+
+def apply_layer_train(cfg, spec: LayerSpec, p, x, positions, rules=None):
+    """Full-sequence (teacher-forcing) layer application. Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+
+    def gather_seq(h):
+        # Megatron-SP: explicitly all-gather the sequence dim after the
+        # norm so projections run against model-sharded weights; without
+        # this XLA keeps seq sharding and all-gathers full weight matrices
+        # per layer instead (measured 1.4 GB/layer for the 35B config).
+        if rules is None:
+            return h
+        return rules.constrain(h, ("batch", None, None))
+
+    if spec.kind in ("attn", "hybrid"):
+        h = gather_seq(apply_norm(cfg, p["ln1"], x))
+        k, v = _project_kv(cfg, p["attn"], h, positions)
+        attn_out = _attn_call(cfg, p["attn"], h, positions, k, v, positions,
+                              spec.window, rules=rules)
+        if spec.kind == "hybrid":
+            m_out, _ = ssm.mamba_scan(
+                cfg, p["mamba"], h,
+                ssm.init_mamba_state(cfg, x.shape[0], x.dtype))
+            w = jax.nn.softmax(p["fuse"])
+            attn_out = (w[0] * attn_out.astype(jnp.float32)
+                        + w[1] * m_out.astype(jnp.float32)).astype(x.dtype)
+        if "ln1_post" in p:
+            attn_out = apply_norm(cfg, p["ln1_post"], attn_out)
+        x = x + attn_out
+        h = gather_seq(apply_norm(cfg, p["ln2"], x))
+        if spec.use_moe:
+            if cfg.expert_parallel and rules is not None:
+                mlp_out, aux = moe_forward_ep(cfg, p["moe"], h,
+                                              mesh=rules.mesh)
+            elif rules is not None:
+                mlp_out, aux = moe_forward_sharded(cfg, p["moe"], h, rules)
+            else:
+                mlp_out, aux = moe_forward(cfg, p["moe"], h)
+        else:
+            mlp_out = _apply_mlp(cfg, p["mlp"], h, rules=rules)
+        if "ln2_post" in p:
+            mlp_out = apply_norm(cfg, p["ln2_post"], mlp_out)
+        x = x + mlp_out
+    elif spec.kind in ("mlstm", "slstm"):
+        # gather_seq: under sequence parallelism a seq-sharded input makes
+        # the recurrent per-timestep slices cross-shard — the dry-run
+        # measured 24.7k all-reduces/step for xlstm. Gather once instead.
+        h = gather_seq(apply_norm(cfg, p["ln1"], x))
+        if spec.kind == "mlstm":
+            y, _ = ssm.mlstm_scan(cfg, p["cell"], h,
+                                  ssm.init_mlstm_state(cfg, x.shape[0],
+                                                       x.dtype))
+        else:
+            y, _ = ssm.slstm_scan(cfg, p["cell"], h,
+                                  ssm.init_slstm_state(cfg, x.shape[0],
+                                                       x.dtype),
+                                  rules=rules)
+        x = x + y
+    return x, aux
+
+
+def _write_prefill_cache(attn_cache, k, v, positions):
+    """Populate the ring cache from a full-sequence prefill.
+
+    Only the last C positions can survive in a ring of size C.
+    """
+    C = attn_cache["k"].shape[1]
+    S = k.shape[1]
+    if S >= C:
+        k_tail, v_tail = k[:, -C:], v[:, -C:]
+        slots = positions[-C:] % C
+    else:
+        k_tail, v_tail = k, v
+        slots = positions % C
+    return {"k": attn_cache["k"].at[:, slots].set(k_tail),
+            "v": attn_cache["v"].at[:, slots].set(v_tail)}
+
+
+def apply_layer_prefill(cfg, spec: LayerSpec, p, cache, x, positions,
+                        rules=None):
+    """Full-sequence forward that also populates the cache."""
+    new_cache = dict(cache)
+    if spec.kind in ("attn", "hybrid"):
+        h = apply_norm(cfg, p["ln1"], x)
+        k, v = _project_kv(cfg, p["attn"], h, positions)
+        new_cache["attn"] = _write_prefill_cache(cache["attn"], k, v, positions)
+        attn_out = _attn_call(cfg, p["attn"], h, positions, k, v, positions,
+                              spec.window, rules=rules)
+        if spec.kind == "hybrid":
+            m_out, new_cache["mamba"] = ssm.mamba_scan(
+                cfg, p["mamba"], h, cache["mamba"])
+            w = jax.nn.softmax(p["fuse"])
+            attn_out = (w[0] * attn_out.astype(jnp.float32)
+                        + w[1] * m_out.astype(jnp.float32)).astype(x.dtype)
+        if "ln1_post" in p:
+            attn_out = apply_norm(cfg, p["ln1_post"], attn_out)
+        x = x + attn_out
+        h = apply_norm(cfg, p["ln2"], x)
+        if spec.use_moe:
+            if rules is not None:
+                mlp_out, _ = moe_forward_sharded(cfg, p["moe"], h, rules)
+            else:
+                mlp_out, _ = moe_forward(cfg, p["moe"], h)
+        else:
+            mlp_out = _apply_mlp(cfg, p["mlp"], h, rules=rules)
+        if "ln2_post" in p:
+            mlp_out = apply_norm(cfg, p["ln2_post"], mlp_out)
+        x = x + mlp_out
+    elif spec.kind in ("mlstm", "slstm"):
+        h = apply_norm(cfg, p["ln1"], x)
+        scan_fn = ssm.mlstm_scan if spec.kind == "mlstm" else ssm.slstm_scan
+        y, new_cache["cell"] = scan_fn(cfg, p["cell"], h, cache["cell"])
+        x = x + y
+    return x, new_cache
+
+
+def apply_stack_prefill(cfg: ModelConfig, stack_params, caches, x, positions,
+                        rules=None):
+    pattern = block_pattern(cfg)
+
+    def body(x, xs):
+        layer_params, layer_caches = xs
+        new_caches = []
+        for spec, p, c in zip(pattern, layer_params, layer_caches):
+            x, nc = apply_layer_prefill(cfg, spec, p, c, x, positions,
+                                        rules=rules)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    x, new_caches = jax.lax.scan(body, x, (tuple(stack_params), tuple(caches)))
+    return x, list(new_caches)
+
+
+# ------------------------------------------------------------------
+# decode-path layer (cached)
+# ------------------------------------------------------------------
+
+
+def init_layer_cache(cfg, spec: LayerSpec, batch, seq_len, dtype):
+    """Per-layer cache (no leading layers dim — the stack adds it)."""
+    cache, dims = {}, {}
+    if spec.kind in ("attn", "hybrid"):
+        clen = attn_cache_len(seq_len, spec.window)
+        (c, d) = init_attn_cache(1, batch, clen, cfg.n_kv_heads,
+                                 cfg.resolved_head_dim, dtype)
+        cache["attn"] = {k: v[0] for k, v in c.items()}
+        dims["attn"] = {k: v[1:] for k, v in d.items()}
+    if spec.kind == "hybrid":
+        cache["mamba"] = ssm.init_mamba_state(cfg, batch, dtype)
+        dims["mamba"] = ssm.mamba_state_dims(cfg)
+    if spec.kind == "mlstm":
+        cache["cell"] = ssm.init_mlstm_state(cfg, batch, dtype)
+        dims["cell"] = ssm.mlstm_state_dims(cfg)
+    if spec.kind == "slstm":
+        cache["cell"] = ssm.init_slstm_state(cfg, batch, dtype)
+        dims["cell"] = ssm.slstm_state_dims(cfg)
+    return cache, dims
+
+
+def apply_layer_decode(cfg, spec: LayerSpec, p, cache, x, pos, rules=None):
+    """One-token layer step. x: (B, 1, D); pos: scalar int32 (tokens so far).
+
+    Returns (x, new_cache).
+    """
+    new_cache = dict(cache)
+    if spec.kind in ("attn", "hybrid"):
+        h = apply_norm(cfg, p["ln1"], x)
+        q_pos = jnp.reshape(pos, (1,))
+        k_new, v_new = _project_kv(cfg, p["attn"], h, q_pos)
+        new_cache["attn"] = update_attn_cache(cache["attn"], k_new, v_new, pos)
+        clen = cache["attn"]["k"].shape[1]
+        k_pos = cache_positions(clen, pos)
+        attn_out = _attn_call(cfg, p["attn"], h, q_pos,
+                              new_cache["attn"]["k"], new_cache["attn"]["v"],
+                              k_pos, spec.window, rules=rules)
+        if spec.kind == "hybrid":
+            m_out, new_cache["mamba"] = ssm.mamba_scan(
+                cfg, p["mamba"], h, cache["mamba"])
+            w = jax.nn.softmax(p["fuse"])
+            attn_out = (w[0] * attn_out.astype(jnp.float32)
+                        + w[1] * m_out.astype(jnp.float32)).astype(x.dtype)
+        if "ln1_post" in p:
+            attn_out = apply_norm(cfg, p["ln1_post"], attn_out)
+        x = x + attn_out
+        h = apply_norm(cfg, p["ln2"], x)
+        if spec.use_moe:
+            if rules is not None:
+                mlp_out, _ = moe_forward_sharded(cfg, p["moe"], h, rules)
+            else:
+                mlp_out, _ = moe_forward(cfg, p["moe"], h)
+        else:
+            mlp_out = _apply_mlp(cfg, p["mlp"], h, rules=rules)
+        if "ln2_post" in p:
+            mlp_out = apply_norm(cfg, p["ln2_post"], mlp_out)
+        x = x + mlp_out
+    elif spec.kind in ("mlstm", "slstm"):
+        h = apply_norm(cfg, p["ln1"], x)
+        scan_fn = ssm.mlstm_scan if spec.kind == "mlstm" else ssm.slstm_scan
+        y, new_cache["cell"] = scan_fn(cfg, p["cell"], h, cache["cell"])
+        x = x + y
+    return x, new_cache
+
+
+# ------------------------------------------------------------------
+# the scanned stack
+# ------------------------------------------------------------------
+
+
+def init_stack(cfg: ModelConfig, key, dtype):
+    pattern = block_pattern(cfg)
+    n_blocks = cfg.n_layers // len(pattern)
+    assert n_blocks * len(pattern) == cfg.n_layers, (cfg.n_layers, pattern)
+    params, dims = [], []
+    for i, spec in enumerate(pattern):
+        keys = jax.random.split(jax.random.fold_in(key, i), n_blocks)
+        stacked = jax.vmap(lambda k: _init_layer(cfg, spec, k, dtype)[0])(keys)
+        _, d = _init_layer(cfg, spec, keys[0], dtype)
+        d = jax.tree.map(
+            lambda t: ("layers",) + t, d,
+            is_leaf=lambda t: isinstance(t, tuple) and all(
+                isinstance(e, (str, type(None))) for e in t))
+        params.append(stacked)
+        dims.append(d)
+    return params, dims
+
+
+def _maybe_remat(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def _constrain_act(x, rules):
+    """Residual-stream sharding constraint (batch→data, seq→model when
+    sequence_parallel; spec resolution falls through on indivisibility)."""
+    if rules is None:
+        return x
+    return rules.constrain(x, ("batch", "act_seq") + (None,) * (x.ndim - 2))
+
+
+def apply_stack_train(cfg: ModelConfig, stack_params, x, positions, rules=None):
+    """x: (B, S, D) -> (y, aux_loss_sum). Scans super-blocks."""
+    pattern = block_pattern(cfg)
+
+    def block(x, layer_params):
+        aux = jnp.zeros((), jnp.float32)
+        x = _constrain_act(x, rules)
+        for spec, p in zip(pattern, layer_params):
+            x, a = apply_layer_train(cfg, spec, p, x, positions, rules=rules)
+            aux = aux + a
+        return _constrain_act(x, rules), aux
+
+    block = _maybe_remat(cfg, block)
+
+    def body(carry, layer_params):
+        x, aux = carry
+        x, a = block(x, layer_params)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               tuple(stack_params))
+    return x, aux
+
+
+def init_stack_cache(cfg: ModelConfig, batch, seq_len, dtype):
+    pattern = block_pattern(cfg)
+    n_blocks = cfg.n_layers // len(pattern)
+    caches, dims = [], []
+    for spec in pattern:
+        c, d = init_layer_cache(cfg, spec, batch, seq_len, dtype)
+        stacked = jax.tree.map(
+            lambda l: jnp.broadcast_to(l, (n_blocks,) + l.shape).copy(), c)
+        d = jax.tree.map(
+            lambda t: ("layers",) + t, d,
+            is_leaf=lambda t: isinstance(t, tuple) and all(
+                isinstance(e, (str, type(None))) for e in t))
+        caches.append(stacked)
+        dims.append(d)
+    return caches, dims
+
+
+def apply_stack_decode(cfg: ModelConfig, stack_params, caches, x, pos,
+                       rules=None):
+    """One-token step through all layers. Returns (y, new_caches)."""
+    pattern = block_pattern(cfg)
+
+    def body(carry, xs):
+        x = carry
+        layer_params, layer_caches = xs
+        new_caches = []
+        for spec, p, c in zip(pattern, layer_params, layer_caches):
+            x, nc = apply_layer_decode(cfg, spec, p, c, x, pos, rules=rules)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    x, new_caches = jax.lax.scan(body, x, (tuple(stack_params), tuple(caches)))
+    return x, list(new_caches)

@@ -1,0 +1,11 @@
+from repro.optim.base import Optimizer, apply_updates
+from repro.optim.sgd import sgd
+from repro.optim.adamw import adamw
+from repro.optim.schedules import (
+    constant_schedule,
+    cosine_schedule,
+    step_decay_schedule,
+    warmup_cosine_schedule,
+    cyclic_schedule,
+    swa_constant_schedule,
+)

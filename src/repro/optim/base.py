@@ -1,0 +1,31 @@
+"""Minimal functional optimizer API (built from scratch — no optax).
+
+An ``Optimizer`` is a pair of pure functions:
+
+  init(params)                      -> opt_state
+  update(grads, opt_state, params, lr) -> (updates, opt_state)
+
+``updates`` are *additive* deltas: new_params = params + updates.
+Learning-rate schedules are plain callables ``step -> lr`` evaluated by the
+training loop and passed in as a traced scalar, so one compiled step works
+for the whole schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[..., tuple[PyTree, PyTree]]
+    name: str = "optimizer"
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)

@@ -1,0 +1,60 @@
+"""Learning-rate schedules.
+
+All schedules are pure callables ``step -> lr`` (jnp-friendly, so they can
+be traced inside the compiled train step). The paper uses:
+
+- step decay ×0.1 / 60 epochs   (its "Baseline")
+- cosine over the whole budget  (its "CA" and the schedule under HWA)
+- constant / cyclic sampling LR (what SWA needs in Stage II — implemented
+  to reproduce the paper's Fig. 2 LR-sensitivity analysis)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float):
+    def sched(step):
+        return jnp.asarray(lr, jnp.float32) + 0.0 * step
+    return sched
+
+
+def cosine_schedule(base_lr: float, total_steps: int, final_lr: float = 0.0):
+    def sched(step):
+        frac = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return final_lr + (base_lr - final_lr) * cos
+    return sched
+
+
+def step_decay_schedule(base_lr: float, decay_every: int, gamma: float = 0.1):
+    def sched(step):
+        k = jnp.floor(step / max(decay_every, 1))
+        return base_lr * gamma ** k
+    return sched
+
+
+def warmup_cosine_schedule(base_lr: float, warmup_steps: int, total_steps: int,
+                           final_lr: float = 0.0):
+    cos = cosine_schedule(base_lr, max(total_steps - warmup_steps, 1), final_lr)
+    def sched(step):
+        warm = base_lr * step / max(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, warm, cos(step - warmup_steps))
+    return sched
+
+
+def cyclic_schedule(lr_max: float, lr_min: float, cycle_steps: int):
+    """SWA's cyclical sampling LR: linear saw from lr_max down to lr_min."""
+    def sched(step):
+        t = jnp.mod(step, cycle_steps) / max(cycle_steps - 1, 1)
+        return lr_max - (lr_max - lr_min) * t
+    return sched
+
+
+def swa_constant_schedule(base_sched, swa_start_step: int, swa_lr: float):
+    """The paper's offline-WA Stage I/II split: regular schedule until
+    ``swa_start_step``, then a constant sampling LR (Fig. 2)."""
+    def sched(step):
+        return jnp.where(step < swa_start_step, base_sched(step),
+                         jnp.asarray(swa_lr, jnp.float32))
+    return sched

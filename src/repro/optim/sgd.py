@@ -1,0 +1,40 @@
+"""SGD with momentum / Nesterov / decoupled weight decay.
+
+This is the optimizer used throughout the paper (momentum 0.9, weight decay
+5e-4, cosine or step LR decay).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer
+
+
+def sgd(momentum: float = 0.0, nesterov: bool = False,
+        weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return {}
+        return {"mu": jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)}
+
+    def update(grads, state, params, lr):
+        # Coupled L2 weight decay (the paper's torch-SGD semantics:
+        # grad <- grad + wd * param).
+        if weight_decay:
+            grads = jax.tree.map(
+                lambda g, p: g + weight_decay * p.astype(g.dtype), grads, params)
+        if momentum == 0.0:
+            updates = jax.tree.map(lambda g: -lr * g, grads)
+            return updates, state
+        mu = jax.tree.map(
+            lambda m, g: momentum * m + g.astype(jnp.float32), state["mu"], grads)
+        if nesterov:
+            step_dir = jax.tree.map(
+                lambda m, g: momentum * m + g.astype(jnp.float32), mu, grads)
+        else:
+            step_dir = mu
+        updates = jax.tree.map(lambda d: (-lr * d), step_dir)
+        return updates, {"mu": mu}
+
+    return Optimizer(init=init, update=update, name="sgd")

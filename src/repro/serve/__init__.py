@@ -1,0 +1,1 @@
+from repro.serve.engine import DecodeEngine, apply_delay_pattern, undo_delay_pattern

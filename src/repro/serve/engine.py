@@ -1,0 +1,71 @@
+"""Batched serving engine: prefill + greedy/temperature decode.
+
+Works for every architecture family (KV caches, SSM states, hybrid,
+multi-codebook audio). MusicGen's codebook *delay pattern* (codebook c is
+shifted c steps so step t emits codebook c's frame t-c) is applied here,
+in the engine — the model itself sees plain parallel streams.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import LM
+
+
+def apply_delay_pattern(tokens, pad_token: int = 0):
+    """(B, S, CB) -> (B, S+CB-1, CB) with codebook c delayed by c steps."""
+    B, S, CB = tokens.shape
+    out = jnp.full((B, S + CB - 1, CB), pad_token, tokens.dtype)
+    for c in range(CB):
+        out = out.at[:, c:c + S, c].set(tokens[..., c])
+    return out
+
+
+def undo_delay_pattern(tokens, n_frames: int):
+    """(B, S+CB-1, CB) -> (B, n_frames, CB)."""
+    CB = tokens.shape[-1]
+    cols = [tokens[:, c:c + n_frames, c] for c in range(CB)]
+    return jnp.stack(cols, axis=-1)
+
+
+@dataclasses.dataclass
+class DecodeEngine:
+    lm: LM
+    params: object
+    max_seq_len: int
+    rules: object = None
+
+    def __post_init__(self):
+        cfg = self.lm.cfg
+        self._prefill = jax.jit(
+            lambda p, c, b: self.lm.prefill(p, c, b, rules=self.rules))
+        self._step = jax.jit(
+            lambda p, c, t: self.lm.decode_step(p, c, t, rules=self.rules))
+
+    def _sample(self, logits, key, temperature):
+        if temperature == 0.0:
+            return jnp.argmax(logits, axis=-1)
+        return jax.random.categorical(key, logits / temperature, axis=-1)
+
+    def generate(self, batch, n_new_tokens: int, *, temperature: float = 0.0,
+                 seed: int = 0):
+        """Prefill ``batch`` then decode ``n_new_tokens`` greedily/sampled.
+
+        Returns generated tokens: (B, n_new) or (B, n_new, CB) for audio.
+        """
+        cfg = self.lm.cfg
+        B = batch["tokens"].shape[0]
+        cache, _ = self.lm.init_cache(B, self.max_seq_len)
+        logits, cache = self._prefill(self.params, cache, batch)
+        key = jax.random.key(seed)
+        outs = []
+        tok = None
+        for i in range(n_new_tokens):
+            key, sub = jax.random.split(key)
+            tok = self._sample(logits, sub, temperature)
+            outs.append(tok)
+            logits, cache = self._step(self.params, cache, tok)
+        return jnp.stack(outs, axis=1)

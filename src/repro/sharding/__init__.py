@@ -1,0 +1,6 @@
+from repro.sharding.rules import (
+    ShardingRules,
+    make_tp_rules,
+    spec_for_dims,
+    named_sharding,
+)

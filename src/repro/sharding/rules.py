@@ -1,0 +1,129 @@
+"""Logical-axis → mesh-axis sharding rules.
+
+Every parameter leaf produced by the model builders carries a tuple of
+*logical dim names* (e.g. ``("layers", "embed", "kv_heads", "head_dim")``).
+``ShardingRules`` turns those into concrete ``PartitionSpec``s against a
+mesh, with two hard guarantees:
+
+1. **Divisibility** — a dim is only sharded if its size divides the mesh
+   axis product; otherwise the rule silently falls through to the next
+   candidate dim. This is what resolves GQA archs whose ``kv_heads`` don't
+   divide the 16-way model axis: the spec falls through to ``head_dim``
+   (DESIGN.md §4 table).
+2. **No axis reuse** — a mesh axis is used at most once per leaf.
+
+This keeps all 10 assigned architectures shardable on both production
+meshes with one rule table per parallelism style.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Candidate mesh-axis assignments per logical dim, in priority order.
+# Values are tuples of mesh-axis names (a tuple shards one array dim over
+# several mesh axes jointly, e.g. batch over ("pod", "data")).
+LogicalRules = dict[str, tuple[str, ...]]
+
+
+def _axes_size(mesh: Mesh, axes: tuple[str, ...]) -> int:
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def spec_for_dims(mesh: Mesh, rules: LogicalRules, dims: Sequence[str | None],
+                  shape: Sequence[int]) -> P:
+    """Resolve one leaf's logical dims into a PartitionSpec."""
+    assert len(dims) == len(shape), (dims, shape)
+    used: set[str] = set()
+    out: list[Any] = []
+    for name, size in zip(dims, shape):
+        assignment = None
+        if name is not None and name in rules:
+            axes = tuple(a for a in rules[name] if a in mesh.shape)
+            if axes and not (set(axes) & used):
+                if size % _axes_size(mesh, axes) == 0 and size > 0:
+                    assignment = axes if len(axes) > 1 else axes[0]
+                    used.update(axes)
+        out.append(assignment)
+    while out and out[-1] is None:  # canonical short form
+        out.pop()
+    return P(*out)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    mesh: Mesh
+    rules: LogicalRules
+
+    def spec(self, dims: Sequence[str | None], shape: Sequence[int]) -> P:
+        return spec_for_dims(self.mesh, self.rules, dims, shape)
+
+    def tree_specs(self, params: Any, dim_tree: Any) -> Any:
+        """PartitionSpec pytree for ``params`` given matching logical dims."""
+        return jax.tree.map(
+            lambda p, d: self.spec(d, p.shape), params, dim_tree,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x))
+
+    def tree_shardings(self, params: Any, dim_tree: Any) -> Any:
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                            self.tree_specs(params, dim_tree))
+
+    def constrain(self, x: jax.Array, dims: Sequence[str | None]) -> jax.Array:
+        """with_sharding_constraint by logical dims (no-op off-mesh)."""
+        spec = self.spec(dims, x.shape)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+
+def named_sharding(mesh: Mesh, *spec) -> NamedSharding:
+    return NamedSharding(mesh, P(*spec))
+
+
+def make_tp_rules(mesh: Mesh, *, expert_parallel: bool = False,
+                  replica_axis: str | None = None,
+                  fsdp: bool = False,
+                  sequence_parallel: bool = False) -> ShardingRules:
+    """Default data+tensor-parallel rule table.
+
+    - batch over every data-like axis present ("pod","data") so the plain
+      (non-HWA) train step uses the full mesh for data parallelism;
+    - vocab / mlp / heads / kv_heads / head_dim over "model" (priority is
+      positional per leaf: earlier dims win the axis, later dims fall
+      through — giving the GQA head_dim fallback);
+    - ``fsdp``: additionally shard the "embed" weight dim over the data
+      axes (ZeRO-3 style; params + optimizer moments fully sharded,
+      per-block all-gather inside the layer scan). Required to fit the
+      ≥12B trainings on 16 GB chips (EXPERIMENTS.md §Dry-run);
+    - ``sequence_parallel``: residual-stream activations between blocks
+      carry ("batch", "act_seq", None) constraints with act_seq → model
+      (Megatron-SP) so saved activations shard over the model axis too;
+    - experts over "model" only when expert_parallel (otherwise experts
+      stay replicated/looped and their d_ff dim is sharded);
+    - "replica" marks the stacked-K axis of HWA state (maps to the pod
+      axis on the multi-pod mesh).
+    """
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape
+                      and a != replica_axis)
+    rules: LogicalRules = {
+        "batch": data_axes,
+        "vocab": ("model",),
+        "mlp": ("model",),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "head_dim": ("model",),
+        "ssm_heads": ("model",),
+        "conv_out": ("model",),
+        "embed": data_axes if fsdp else (),
+        "layers": (),     # scan axis, never sharded
+        "seq": (),
+        "act_seq": ("model",) if sequence_parallel else (),
+    }
+    if expert_parallel:
+        rules["experts"] = ("model",)
+    if replica_axis is not None:
+        rules["replica"] = (replica_axis,)
+    return ShardingRules(mesh=mesh, rules=rules)

@@ -1,0 +1,1 @@
+from repro.train.trainer import Task, TrainConfig, Trainer, lm_task

@@ -1,0 +1,256 @@
+"""Training orchestration: HWA + every paper baseline under one loop.
+
+Methods (paper §V experiment set):
+  base      — SGD, step-decay LR ×0.1 every ``decay_every`` (paper Baseline)
+  ca        — SGD, cosine LR over the whole budget
+  swa       — offline WA: Stage I regular LR, Stage II constant sampling LR,
+              running average of every-H checkpoints (SWA [15])
+  ema       — exponential moving average of weights
+  lookahead — Lookahead optimizer [32]
+  sam       — sharpness-aware minimization [35]
+  online    — low-frequency online WA only (HWA with I=1)
+  pmsgd     — parallel mini-batch SGD (sync every step, K replicas)
+  hwa       — the full method (K replicas, period H, window I)
+
+The trainer evaluates the *method-appropriate* weights (W̿ for HWA, the
+running average for SWA/EMA, slow weights for Lookahead) and tracks the
+best snapshot (paper §IV-C early-stopping remark).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.baselines import (ema_init, ema_update, lookahead_init,
+                                  lookahead_update, sam_gradient, swa_init,
+                                  swa_params, swa_update)
+from repro.core.hwa import HWAConfig, HWAState, hwa_init, hwa_inner_step, \
+    hwa_sync
+from repro.data.pipeline import DataPipeline
+from repro.models.registry import LM
+from repro.optim import (adamw, apply_updates, cosine_schedule, sgd,
+                         step_decay_schedule, swa_constant_schedule)
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    method: str = "hwa"
+    total_steps: int = 1000
+    batch_size: int = 16
+    base_lr: float = 0.1
+    optimizer: str = "sgd"          # sgd | adamw
+    momentum: float = 0.9
+    weight_decay: float = 5e-4
+    decay_every_frac: float = 0.33  # step-decay interval (method=base)
+    hwa: HWAConfig = HWAConfig()
+    swa_start_frac: float = 0.75
+    swa_lr: float = 0.05
+    ema_decay: float = 0.99
+    lookahead_k: int = 5
+    lookahead_alpha: float = 0.5
+    sam_rho: float = 0.05
+    eval_every: int = 0             # 0 → every sync cycle
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Task:
+    init: Callable[[jax.Array], PyTree]
+    loss_fn: Callable[[PyTree, Any], tuple[jax.Array, dict]]
+    pipeline: DataPipeline
+    name: str = "task"
+
+
+def lm_task(lm: LM, pipeline: DataPipeline, name: str | None = None) -> Task:
+    def loss_fn(params, batch):
+        if isinstance(batch, tuple):
+            batch = {"tokens": batch[0], "targets": batch[1]}
+        return lm.loss(params, batch)
+    return Task(init=lm.init, loss_fn=loss_fn, pipeline=pipeline,
+                name=name or lm.cfg.name)
+
+
+def _make_optimizer(tc: TrainConfig):
+    if tc.optimizer == "adamw":
+        return adamw(weight_decay=tc.weight_decay)
+    return sgd(momentum=tc.momentum, weight_decay=tc.weight_decay)
+
+
+def _make_schedule(tc: TrainConfig):
+    if tc.method == "base":
+        return step_decay_schedule(
+            tc.base_lr, max(int(tc.total_steps * tc.decay_every_frac), 1))
+    sched = cosine_schedule(tc.base_lr, tc.total_steps)
+    if tc.method == "swa":
+        return swa_constant_schedule(
+            sched, int(tc.total_steps * tc.swa_start_frac), tc.swa_lr)
+    return sched
+
+
+class Trainer:
+    def __init__(self, task: Task, tc: TrainConfig):
+        self.task = task
+        self.tc = tc
+        self.optimizer = _make_optimizer(tc)
+        self.schedule = _make_schedule(tc)
+        self.is_parallel = tc.method in ("hwa", "online", "pmsgd")
+        if tc.method == "online":
+            self.hwa_cfg = dataclasses.replace(tc.hwa, window=1)
+        elif tc.method == "pmsgd":
+            self.hwa_cfg = dataclasses.replace(tc.hwa, sync_period=1, window=1)
+        else:
+            self.hwa_cfg = tc.hwa
+        self.sync_period = self.hwa_cfg.sync_period or \
+            task.pipeline.steps_per_epoch
+        if tc.method == "pmsgd":
+            self.sync_period = 1
+        self._build_steps()
+
+    # -------------------------------------------------------- jit steps
+
+    def _build_steps(self):
+        task, tc, opt = self.task, self.tc, self.optimizer
+        loss_fn, sched = task.loss_fn, self.schedule
+
+        @jax.jit
+        def hwa_step(state: HWAState, step):
+            batches = task.pipeline.stacked_batch(step)
+            return hwa_inner_step(self.hwa_cfg, state, batches, loss_fn,
+                                  opt, sched(step))
+
+        @jax.jit
+        def sync_step(state: HWAState):
+            return hwa_sync(self.hwa_cfg, state)
+
+        @jax.jit
+        def single_step(params, opt_state, step):
+            batch = task.pipeline.replica_batch(0, step)
+            if tc.method == "sam":
+                (loss, metrics), grads = sam_gradient(loss_fn, params, batch,
+                                                      rho=tc.sam_rho)
+            else:
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, batch)
+            updates, opt_state = opt.update(grads, opt_state, params,
+                                            sched(step))
+            return apply_updates(params, updates), opt_state, loss, metrics
+
+        @jax.jit
+        def eval_batch(params, inputs, targets):
+            loss, metrics = loss_fn(params, {"tokens": inputs,
+                                             "targets": targets})
+            return metrics["loss"], metrics.get("acc", jnp.zeros(()))
+
+        self._hwa_step, self._sync_step = hwa_step, sync_step
+        self._single_step, self._eval_batch = single_step, eval_batch
+        self._swa_update = jax.jit(swa_update)
+        self._ema_update = jax.jit(ema_update)
+        self._lookahead_update = jax.jit(lookahead_update)
+
+    # ------------------------------------------------------------ eval
+
+    def evaluate(self, params) -> dict:
+        losses, accs = [], []
+        for inputs, targets in self.task.pipeline.eval_batches():
+            l, a = self._eval_batch(params, inputs, targets)
+            losses.append(float(l))
+            accs.append(float(a))
+        return {"test_loss": sum(losses) / max(len(losses), 1),
+                "test_acc": sum(accs) / max(len(accs), 1)}
+
+    # ------------------------------------------------------------- run
+
+    def run(self, eval_views: bool = False, log: bool = False) -> dict:
+        tc = self.tc
+        key = jax.random.key(tc.seed)
+        params = self.task.init(key)
+        history = []
+        best = {"test_acc": -1.0, "test_loss": float("inf"), "step": 0}
+        eval_every = tc.eval_every or self.sync_period
+
+        def record(step, train_loss, eval_params, views=None):
+            rec = {"step": step, "train_loss": float(train_loss)}
+            rec.update(self.evaluate(eval_params))
+            if views:
+                for name, p in views.items():
+                    v = self.evaluate(p)
+                    rec[f"{name}_loss"] = v["test_loss"]
+                    rec[f"{name}_acc"] = v["test_acc"]
+            history.append(rec)
+            if rec["test_acc"] > best["test_acc"]:
+                best.update({"test_acc": rec["test_acc"],
+                             "test_loss": rec["test_loss"], "step": step})
+            if log:
+                print(f"[{self.task.name}/{tc.method}] step {step} "
+                      f"train {rec['train_loss']:.4f} "
+                      f"test {rec['test_loss']:.4f} acc {rec['test_acc']:.4f}")
+            return rec
+
+        if self.is_parallel:
+            state = hwa_init(self.hwa_cfg, params, self.optimizer)
+            train_loss = jnp.zeros(())
+            for step in range(tc.total_steps):
+                state, metrics = self._hwa_step(state, step)
+                train_loss = metrics["loss"]
+                if (step + 1) % self.sync_period == 0:
+                    views = None
+                    if eval_views:
+                        # snapshot BEFORE the sync resets inner <- outer
+                        views = {
+                            "inner": jax.tree.map(lambda x: x[0],
+                                                  state.inner),
+                            "outer": jax.tree.map(
+                                lambda x: jnp.mean(x, 0).astype(x.dtype),
+                                state.inner),
+                        }
+                    state, _ = self._sync_step(state)
+                    if ((step + 1) // self.sync_period) % max(
+                            eval_every // self.sync_period, 1) == 0:
+                        record(step + 1, train_loss, state.wa, views)
+            final_params = state.wa
+        else:
+            opt_state = self.optimizer.init(params)
+            swa_state = swa_init(params) if tc.method == "swa" else None
+            ema_state = (ema_init(params, tc.ema_decay)
+                         if tc.method == "ema" else None)
+            la_state = (lookahead_init(params, tc.lookahead_k,
+                                       tc.lookahead_alpha)
+                        if tc.method == "lookahead" else None)
+            swa_start = int(tc.total_steps * tc.swa_start_frac)
+            swa_period = self.task.pipeline.steps_per_epoch
+            train_loss = jnp.zeros(())
+            for step in range(tc.total_steps):
+                params, opt_state, train_loss, _ = self._single_step(
+                    params, opt_state, step)
+                if tc.method == "ema":
+                    ema_state = self._ema_update(ema_state, params)
+                if tc.method == "lookahead" and (step + 1) % tc.lookahead_k == 0:
+                    la_state, params = self._lookahead_update(la_state, params)
+                if (tc.method == "swa" and step + 1 > swa_start
+                        and (step + 1) % swa_period == 0):
+                    swa_state = self._swa_update(swa_state, params)
+                if (step + 1) % eval_every == 0:
+                    eval_params = params
+                    if tc.method == "swa" and int(swa_state.n) > 0:
+                        eval_params = swa_params(swa_state, params)
+                    elif tc.method == "ema":
+                        eval_params = jax.tree.map(
+                            lambda a, p: a.astype(p.dtype),
+                            ema_state.avg, params)
+                    record(step + 1, train_loss, eval_params)
+            final_params = params
+            if tc.method == "swa" and int(swa_state.n) > 0:
+                final_params = swa_params(swa_state, params)
+            elif tc.method == "ema":
+                final_params = jax.tree.map(lambda a, p: a.astype(p.dtype),
+                                            ema_state.avg, params)
+
+        final = self.evaluate(final_params)
+        return {"history": history, "best": best, "final": final,
+                "params": final_params}

@@ -1,0 +1,29 @@
+"""Shared fixtures. NOTE: no XLA device-count flags here — smoke tests and
+benches must see the real single CPU device; only the dry-run (its own
+process) forces 512 host devices."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.key(0)
+
+
+def make_lm_batch(cfg, B=2, S=32, seed=1):
+    ks = jax.random.split(jax.random.key(seed), 3)
+    batch = {}
+    if cfg.family == "audio":
+        batch["tokens"] = jax.random.randint(
+            ks[0], (B, S, cfg.n_codebooks), 0, cfg.vocab_size)
+        batch["targets"] = jax.random.randint(
+            ks[1], (B, S, cfg.n_codebooks), 0, cfg.vocab_size)
+    else:
+        batch["tokens"] = jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size)
+        batch["targets"] = jax.random.randint(ks[1], (B, S), 0,
+                                              cfg.vocab_size)
+    if cfg.family == "vlm":
+        batch["vis_embeds"] = jax.random.normal(
+            ks[2], (B, cfg.n_vis_tokens, cfg.d_vis), jnp.float32)
+    return batch

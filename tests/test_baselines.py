@@ -1,0 +1,54 @@
+"""SWA / EMA / Lookahead / SAM baseline correctness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.baselines import (ema_init, ema_update, lookahead_init,
+                                  lookahead_update, sam_gradient, swa_init,
+                                  swa_params, swa_update)
+
+
+def t(seed):
+    return {"w": jax.random.normal(jax.random.key(seed), (5,))}
+
+
+def test_swa_running_average_exact():
+    ps = [t(i) for i in range(6)]
+    st = swa_init(ps[0])
+    st = st.__class__(avg=jax.tree.map(jnp.zeros_like, st.avg),
+                      n=st.n)  # start empty
+    for p in ps:
+        st = swa_update(st, p)
+    expect = np.mean([np.asarray(p["w"]) for p in ps], axis=0)
+    np.testing.assert_allclose(np.asarray(swa_params(st, ps[0])["w"]),
+                               expect, rtol=1e-5)
+
+
+def test_ema_decay():
+    p0, p1 = t(0), t(1)
+    st = ema_init(p0, decay=0.9)
+    st = ema_update(st, p1)
+    expect = 0.9 * np.asarray(p0["w"]) + 0.1 * np.asarray(p1["w"])
+    np.testing.assert_allclose(np.asarray(st.avg["w"]), expect, rtol=1e-5)
+
+
+def test_lookahead_pulls_fast_toward_slow():
+    slow0, fast = t(0), t(1)
+    st = lookahead_init(slow0, k=5, alpha=0.5)
+    st, new_fast = lookahead_update(st, fast)
+    expect = 0.5 * (np.asarray(slow0["w"]) + np.asarray(fast["w"]))
+    np.testing.assert_allclose(np.asarray(new_fast["w"]), expect, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(st.slow["w"]), expect, rtol=1e-5)
+
+
+def test_sam_gradient_differs_from_plain():
+    def loss_fn(p, batch):
+        l = jnp.sum(jnp.sin(p["w"]) ** 2)
+        return l, {"loss": l}
+
+    p = t(3)
+    (_, _), g_plain = jax.value_and_grad(loss_fn, has_aux=True)(p, None)
+    (_, _), g_sam = sam_gradient(loss_fn, p, None, rho=0.5)
+    diff = float(jnp.max(jnp.abs(g_plain["w"] - g_sam["w"])))
+    assert diff > 1e-5
+    assert bool(jnp.all(jnp.isfinite(g_sam["w"])))

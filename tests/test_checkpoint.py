@@ -1,0 +1,47 @@
+"""Checkpoint io + outer-weight store (Algorithm 2's checkpoint path)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import OuterWeightStore, load_pytree, save_pytree
+from repro.common.pytree import tree_mean_axis0, tree_stack
+
+
+def params_like(seed):
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    return {"stack": [{"w": jax.random.normal(k1, (3, 4))}],
+            "b": jax.random.normal(k2, (5,)).astype(jnp.bfloat16)}
+
+
+def test_roundtrip(tmp_path):
+    p = params_like(0)
+    path = str(tmp_path / "ckpt.npz")
+    save_pytree(path, p)
+    q = load_pytree(path, jax.tree.map(jnp.zeros_like, p))
+    for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(q)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_store_window_average_matches_memory(tmp_path):
+    store = OuterWeightStore(str(tmp_path / "outer"))
+    outers = [params_like(i) for i in range(6)]
+    for e, o in enumerate(outers):
+        store.save(e, o)
+    like = jax.tree.map(jnp.zeros_like, outers[0])
+    wa = store.window_average(end_cycle=5, window=3, like=like)
+    expect = tree_mean_axis0(tree_stack(
+        [jax.tree.map(lambda x: x.astype(jnp.float32), o)
+         for o in outers[3:]]))
+    for a, b in zip(jax.tree.leaves(wa), jax.tree.leaves(expect)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-2, atol=1e-2)
+
+
+def test_store_cycles_listing(tmp_path):
+    store = OuterWeightStore(str(tmp_path / "outer"))
+    for e in [3, 1, 7]:
+        store.save(e, params_like(e))
+    assert store.cycles() == [1, 3, 7]

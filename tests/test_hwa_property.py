@@ -1,0 +1,82 @@
+"""Property-based tests (hypothesis) on the weight-averaging invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.common.pytree import tree_mean_axis0, tree_stack
+from repro.core import (broadcast_to_replicas, online_average, window_init,
+                        window_update)
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def _tree(seed, scale=1.0):
+    k = jax.random.key(seed)
+    k1, k2 = jax.random.split(k)
+    return {"a": scale * jax.random.normal(k1, (3, 5)),
+            "b": scale * jax.random.normal(k2, (4,))}
+
+
+@given(st.integers(2, 5), st.integers(0, 1000))
+@settings(**SETTINGS)
+def test_online_average_permutation_invariant(k, seed):
+    trees = [_tree(seed + i) for i in range(k)]
+    perm = np.random.RandomState(seed).permutation(k)
+    a = online_average(tree_stack(trees))
+    b = online_average(tree_stack([trees[i] for i in perm]))
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(x, y, rtol=1e-5, atol=1e-6)
+
+
+@given(st.integers(2, 5), st.integers(0, 100))
+@settings(**SETTINGS)
+def test_average_of_identical_replicas_is_identity(k, seed):
+    t = _tree(seed)
+    stacked = broadcast_to_replicas(t, k)
+    avg = online_average(stacked)
+    for x, y in zip(jax.tree.leaves(avg), jax.tree.leaves(t)):
+        np.testing.assert_allclose(x, y, rtol=1e-6)
+
+
+@given(st.integers(1, 6), st.integers(1, 12), st.integers(0, 50))
+@settings(**SETTINGS)
+def test_window_equals_bruteforce(window, n_updates, seed):
+    ws = window_init(_tree(seed), window)
+    outers = [_tree(seed + 10 + t) for t in range(n_updates)]
+    wa = None
+    for t, o in enumerate(outers):
+        ws, wa = window_update(ws, o)
+    lo = max(0, n_updates - window)
+    expect = tree_mean_axis0(tree_stack(outers[lo:]))
+    for a, b in zip(jax.tree.leaves(wa), jax.tree.leaves(expect)):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+@given(st.integers(2, 4), st.floats(0.1, 10.0), st.integers(0, 50))
+@settings(**SETTINGS)
+def test_online_average_linearity(k, scale, seed):
+    """mean(c·W) = c·mean(W) — scaling commutes with the averaging."""
+    trees = [_tree(seed + i) for i in range(k)]
+    a = online_average(tree_stack([jax.tree.map(lambda x: scale * x, t)
+                                   for t in trees]))
+    b = jax.tree.map(lambda x: scale * x, online_average(tree_stack(trees)))
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(x, y, rtol=1e-4, atol=1e-5)
+
+
+@given(st.integers(1, 5), st.integers(0, 30))
+@settings(**SETTINGS)
+def test_window_average_bounded_by_extremes(window, seed):
+    """Every coordinate of W̿ lies within [min, max] of the window entries."""
+    ws = window_init(_tree(seed), window)
+    entries = []
+    wa = None
+    for t in range(window):
+        o = _tree(seed + 100 + t)
+        entries.append(o)
+        ws, wa = window_update(ws, o)
+    for key in ("a", "b"):
+        stack = np.stack([np.asarray(e[key]) for e in entries])
+        assert np.all(np.asarray(wa[key]) <= stack.max(0) + 1e-5)
+        assert np.all(np.asarray(wa[key]) >= stack.min(0) - 1e-5)

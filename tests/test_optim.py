@@ -1,0 +1,65 @@
+"""Optimizer + schedule unit tests (closed-form checks)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import (adamw, apply_updates, cosine_schedule, sgd,
+                         step_decay_schedule, swa_constant_schedule,
+                         cyclic_schedule)
+
+
+def test_sgd_momentum_matches_torch_semantics():
+    """mu <- m*mu + g (+wd*p);  p <- p - lr*mu."""
+    p = {"w": jnp.asarray([1.0, -2.0])}
+    opt = sgd(momentum=0.9, weight_decay=0.1)
+    state = opt.init(p)
+    g = {"w": jnp.asarray([0.5, 0.5])}
+    lr = 0.1
+    mu = np.zeros(2)
+    pw = np.array([1.0, -2.0])
+    for _ in range(3):
+        upd, state = opt.update(g, state, p, lr)
+        p = apply_updates(p, upd)
+        geff = np.array([0.5, 0.5]) + 0.1 * pw
+        mu = 0.9 * mu + geff
+        pw = pw - lr * mu
+        np.testing.assert_allclose(np.asarray(p["w"]), pw, rtol=1e-5)
+
+
+def test_adamw_first_step_is_lr_sized():
+    p = {"w": jnp.ones((4,))}
+    opt = adamw(b1=0.9, b2=0.999, weight_decay=0.0)
+    state = opt.init(p)
+    g = {"w": jnp.full((4,), 0.3)}
+    upd, state = opt.update(g, state, p, 1e-3)
+    # bias-corrected first step = -lr * g/|g| = -lr (sign step)
+    np.testing.assert_allclose(np.asarray(upd["w"]),
+                               -1e-3 * np.ones(4), rtol=1e-3)
+
+
+def test_cosine_schedule_endpoints():
+    s = cosine_schedule(0.1, 100)
+    assert abs(float(s(0)) - 0.1) < 1e-6
+    assert float(s(100)) < 1e-6
+    assert 0 < float(s(50)) < 0.1
+
+
+def test_step_decay():
+    s = step_decay_schedule(1.0, decay_every=10, gamma=0.1)
+    np.testing.assert_allclose(float(s(0)), 1.0)
+    np.testing.assert_allclose(float(s(10)), 0.1, rtol=1e-5)
+    np.testing.assert_allclose(float(s(25)), 0.01, rtol=1e-5)
+
+
+def test_swa_schedule_switches_to_constant():
+    base = cosine_schedule(0.1, 100)
+    s = swa_constant_schedule(base, swa_start_step=80, swa_lr=0.05)
+    assert abs(float(s(10)) - float(base(10))) < 1e-7
+    assert abs(float(s(90)) - 0.05) < 1e-7
+
+
+def test_cyclic_schedule_saw():
+    s = cyclic_schedule(0.1, 0.01, cycle_steps=10)
+    assert abs(float(s(0)) - 0.1) < 1e-6
+    assert abs(float(s(9)) - 0.01) < 1e-6
+    assert abs(float(s(10)) - 0.1) < 1e-6

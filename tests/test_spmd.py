@@ -1,0 +1,22 @@
+"""Multi-device SPMD correctness, run in a subprocess so the forced
+8-device host platform never leaks into other tests."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.timeout(900)
+def test_spmd_subprocess():
+    script = os.path.join(os.path.dirname(__file__), "spmd_check.py")
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep + \
+        os.path.dirname(__file__) + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, script], capture_output=True,
+                          text=True, env=env, timeout=850)
+    print(proc.stdout)
+    print(proc.stderr[-2000:] if proc.stderr else "")
+    assert proc.returncode == 0, proc.stdout + proc.stderr[-2000:]
+    assert "ALL_OK" in proc.stdout

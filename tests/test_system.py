@@ -1,0 +1,52 @@
+"""End-to-end behaviour: the paper's headline claims at micro scale.
+
+These are the system-level acceptance tests; per-module details live in
+the sibling test files.
+"""
+import jax
+import pytest
+
+from repro.core import HWAConfig
+from repro.data import DataPipeline, make_markov_lm_dataset
+from repro.models import build_model
+from repro.models.types import ModelConfig
+from repro.train import TrainConfig, Trainer, lm_task
+
+TINY = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=48,
+                   n_heads=4, n_kv_heads=2, d_ff=96, vocab_size=48,
+                   attn_impl="naive", remat="none", dtype="float32")
+
+
+def run(method, steps=96, seed=0, base_lr=0.5):
+    lm = build_model(TINY)
+    ds = make_markov_lm_dataset(vocab=48, seq_len=48, n_train=512,
+                                n_test=128, seed=0)
+    k = 2 if method in ("hwa", "online", "pmsgd") else 1
+    pipe = DataPipeline(ds, batch_size=8, n_replicas=k, seed=seed)
+    tc = TrainConfig(method=method, total_steps=steps, batch_size=8,
+                     base_lr=base_lr, eval_every=24, seed=seed,
+                     hwa=HWAConfig(n_replicas=k, sync_period=12, window=4),
+                     swa_start_frac=0.5, swa_lr=0.1)
+    return Trainer(lm_task(lm, pipe), tc).run()
+
+
+@pytest.fixture(scope="module")
+def results():
+    return {m: run(m) for m in ("ca", "online", "hwa")}
+
+
+def test_all_methods_learn(results):
+    for m, out in results.items():
+        assert out["final"]["test_loss"] < 3.8, (m, out["final"])
+
+
+def test_hwa_not_worse_than_online_only(results):
+    """Table III: offline module adds on top of online WA (allow noise)."""
+    assert results["hwa"]["best"]["test_loss"] <= \
+        results["online"]["best"]["test_loss"] + 0.1
+
+
+def test_hwa_competitive_with_cosine_baseline(results):
+    """Table II at micro scale: HWA >= CA (cosine) baseline."""
+    assert results["hwa"]["best"]["test_loss"] <= \
+        results["ca"]["best"]["test_loss"] + 0.1
