@@ -1,0 +1,24 @@
+# One-command verify recipes (see ROADMAP.md "Tier-1 verify").
+
+PY ?= python
+export PYTHONPATH := src:$(PYTHONPATH)
+
+.PHONY: test spmd mesh-hwa bench train-smoke
+
+# tier-1: the full CPU suite (SPMD checks run in their own subprocesses)
+test:
+	$(PY) -m pytest -x -q
+
+# 8-host-device subprocess checks only (SPMD + mesh-native HWA)
+spmd:
+	$(PY) -m pytest -q tests/test_spmd.py tests/test_mesh_hwa.py
+
+# drive the mesh-native HWA trainer end-to-end on 8 forced host devices
+mesh-hwa:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+	$(PY) -m repro.launch.train --mesh-native --steps 8 --sync-period 4 \
+	    --batch-size 8 --seq-len 16 --k 2
+
+# communication-amortization numbers from real lowered HLO
+bench:
+	$(PY) -m benchmarks.run --only mesh_comm

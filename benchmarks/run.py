@@ -20,6 +20,7 @@ BENCHES = [
     ("fig7", "benchmarks.fig7_convergence"),
     ("fig9", "benchmarks.fig9_interpolation"),
     ("comm", "benchmarks.comm_amortization"),
+    ("mesh_comm", "benchmarks.mesh_comm"),
     ("kernels", "benchmarks.kernel_bench"),
     ("roofline", "benchmarks.roofline"),
 ]

@@ -13,6 +13,8 @@ import jax
 import ml_dtypes
 import numpy as np
 
+from repro.common.compat import tree_flatten_with_path
+
 _SEP = "|"
 
 # numpy's npz format cannot store ml_dtypes (bfloat16, fp8); round-trip
@@ -34,7 +36,7 @@ def _keystr(path) -> str:
 
 
 def save_pytree(path: str, tree: Any) -> None:
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    flat, treedef = tree_flatten_with_path(tree)
     arrays = {}
     keys = []
     dtypes = []
@@ -66,7 +68,7 @@ def load_pytree(path: str, like: Any) -> Any:
             if dt in _VIEW:
                 arr = arr.view(dt)
             leaves.append(arr)
-    flat, treedef = jax.tree.flatten_with_path(like)
+    flat, treedef = tree_flatten_with_path(like)
     if len(flat) != len(leaves):
         raise ValueError(f"checkpoint has {len(leaves)} leaves, "
                          f"template has {len(flat)}")

@@ -1,0 +1,111 @@
+"""JAX cross-version compatibility shims.
+
+Compat policy (the repo's one rule for version drift): **every call into a
+JAX API that moved, was renamed, or grew a replacement between 0.4.x and
+≥0.5 goes through this module** — never a direct ``jax.<new_api>`` call
+with a local try/except at the call site. Each shim prefers the newest
+public API when present and falls back to the oldest one the pinned
+container (jax 0.4.37) ships, so the same source runs unmodified on both.
+Shims are plain functions/objects resolved at import time where possible
+(zero per-call overhead) and covered by ``tests/test_compat.py``, which
+monkeypatches both branches.
+
+Currently papered-over drift:
+
+- ``jax.tree.flatten_with_path`` / ``jax.tree.map_with_path`` (≥0.5 /
+  late 0.4): fall back to ``jax.tree_util.tree_flatten_with_path`` /
+  ``tree_map_with_path`` (present since 0.4.6).
+- ``jax.set_mesh`` (≥0.6) / ``jax.sharding.use_mesh`` (0.5.x): fall back
+  to the ``Mesh`` context manager (``with mesh:``), which all 0.4.x
+  releases support.
+- ``jax.make_mesh`` (≥0.4.34): fall back to
+  ``mesh_utils.create_device_mesh`` + ``jax.sharding.Mesh``.
+- ``jax.shard_map`` (≥0.8, experimental graduation): fall back to
+  ``jax.experimental.shard_map.shard_map``.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any
+
+import jax
+
+__all__ = ["tree_flatten_with_path", "tree_map_with_path", "use_mesh",
+           "make_mesh", "shard_map"]
+
+
+# ------------------------------------------------------------ pytree paths
+
+if hasattr(jax.tree, "flatten_with_path"):          # jax ≥ 0.5
+    tree_flatten_with_path = jax.tree.flatten_with_path
+else:                                               # jax 0.4.x
+    tree_flatten_with_path = jax.tree_util.tree_flatten_with_path
+
+if hasattr(jax.tree, "map_with_path"):
+    tree_map_with_path = jax.tree.map_with_path
+else:
+    tree_map_with_path = jax.tree_util.tree_map_with_path
+
+
+# ------------------------------------------------------------------- mesh
+
+def use_mesh(mesh) -> contextlib.AbstractContextManager:
+    """Context manager installing ``mesh`` as the ambient mesh.
+
+    ``jax.set_mesh`` (≥0.6) → ``jax.sharding.use_mesh`` (0.5.x) → the
+    ``Mesh`` object's own context manager (0.4.x).
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return mesh
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None):
+    """``jax.make_mesh`` with a pre-0.4.34 fallback via mesh_utils."""
+    if devices is None and hasattr(jax, "make_mesh"):
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
+    from jax.experimental import mesh_utils
+    devs = mesh_utils.create_device_mesh(tuple(axis_shapes), devices=devices)
+    return jax.sharding.Mesh(devs, tuple(axis_names))
+
+
+# -------------------------------------------------------------- shard_map
+
+def _resolve_shard_map():
+    if hasattr(jax, "shard_map"):                   # jax ≥ 0.8
+        return jax.shard_map
+    from jax.experimental.shard_map import shard_map as _sm  # 0.4.x–0.7
+    return _sm
+
+
+def shard_map(f, mesh, *, in_specs, out_specs, auto=frozenset(),
+              check_rep=None, check_vma=None):
+    """``shard_map`` across the keyword drift.
+
+    0.4.x–0.7 take ``check_rep``/``auto`` keywords; ≥0.8 renamed
+    ``check_rep`` to ``check_vma`` and replaced ``auto`` with mesh
+    ``axis_types``. Callers may pass either replication-check spelling;
+    both default to disabled. We try the old keywords first and degrade to
+    the new-style call on TypeError — on new versions the mesh built by
+    :func:`make_mesh` carries every axis as manual, which is only correct
+    for fully-manual maps, so callers that need partial-auto on ≥0.8
+    should migrate the mesh's axis_types (noted here so the failure mode
+    is a documented one, not a silent one).
+    """
+    check = check_rep if check_rep is not None else \
+        (check_vma if check_vma is not None else False)
+    sm = _resolve_shard_map()
+    try:
+        return sm(f, mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=check, auto=auto)
+    except TypeError:
+        if auto:
+            raise NotImplementedError(
+                "this jax's shard_map has no auto= keyword; dropping it "
+                "would silently turn a partial-auto map fully manual. "
+                "Migrate the mesh to axis_types-based auto axes "
+                "(see repro.common.compat docstring).")
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check)

@@ -1,5 +1,8 @@
-from repro.core.hwa import HWAConfig, HWAState, hwa_init, hwa_inner_step, hwa_sync
-from repro.core.online import online_average, broadcast_to_replicas, replica_divergence
+from repro.core.hwa import (HWAConfig, HWAState, hwa_init, hwa_inner_step,
+                            hwa_local_inner_step, hwa_sync, hwa_sync_named)
+from repro.core.online import (online_average, online_average_named,
+                               broadcast_to_replicas, replica_divergence,
+                               replica_divergence_named)
 from repro.core.offline import (
     WindowState, window_init, window_update, window_average,
     streaming_window_update,

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from repro.common.pytree import tree_mean_axis0
 from repro.core.offline import WindowState, window_init, window_update
 from repro.core.online import broadcast_to_replicas, online_average, \
-    replica_divergence
+    online_average_named, replica_divergence
 from repro.optim.base import Optimizer, apply_updates
 
 PyTree = Any
@@ -91,6 +91,33 @@ def hwa_inner_step(cfg: HWAConfig, state: HWAState, batches: PyTree,
                        "per_replica_loss": losses, **scalar}
 
 
+def _window_push(cfg: HWAConfig, outer: PyTree, window_state: WindowState,
+                 cycle: jax.Array) -> tuple[WindowState, PyTree, jax.Array]:
+    """Shared Algorithm-2 tail of both sync paths: push W̄ into the slide
+    window unless the cycle misses ``window_stride`` (sparse window,
+    §III-B), with W̿ = W̄ until the first entry exists.
+
+    Returns (window state, W̿_e, incremented cycle counter).
+    """
+    new_cycle = cycle + 1
+    take = jnp.mod(new_cycle - 1, cfg.window_stride) == 0
+
+    def do_update(ws):
+        return window_update(ws, outer, use_kernel=cfg.use_kernels)
+
+    def skip_update(ws):
+        from repro.core.offline import window_average
+        return ws, window_average(ws, like=outer)
+
+    if cfg.window_stride == 1:
+        new_ws, wa = do_update(window_state)
+    else:
+        new_ws, wa = jax.lax.cond(take, do_update, skip_update, window_state)
+    first = new_ws.count == 0
+    wa = jax.tree.map(lambda w, o: jnp.where(first, o, w), wa, outer)
+    return new_ws, wa, new_cycle
+
+
 def hwa_sync(cfg: HWAConfig, state: HWAState) -> tuple[HWAState, PyTree]:
     """End-of-cycle sync (Algorithm 1 lines 8-12 + Algorithm 2).
 
@@ -106,26 +133,48 @@ def hwa_sync(cfg: HWAConfig, state: HWAState) -> tuple[HWAState, PyTree]:
     else:
         inner_opt = state.inner_opt
 
-    cycle = state.cycle + 1
-    take = jnp.mod(cycle - 1, cfg.window_stride) == 0
-
-    def do_update(ws):
-        return window_update(ws, outer, use_kernel=cfg.use_kernels)
-
-    def skip_update(ws):
-        from repro.core.offline import window_average
-        return ws, window_average(ws, like=outer)
-
-    if cfg.window_stride == 1:
-        window_state, wa = do_update(state.window_state)
-    else:
-        window_state, wa = jax.lax.cond(take, do_update, skip_update,
-                                        state.window_state)
-    # until the first window entry exists, W̿ = W̄
-    first = window_state.count == 0
-    wa = jax.tree.map(lambda w, o: jnp.where(first, o, w), wa, outer)
-
+    window_state, wa, cycle = _window_push(cfg, outer, state.window_state,
+                                           state.cycle)
     new_state = HWAState(inner=inner, inner_opt=inner_opt,
                          window_state=window_state, wa=wa,
                          cycle=cycle, step=state.step)
     return new_state, {"replica_divergence": div, "cycle": cycle}
+
+
+# ------------------------------------------------- mesh-native (per-replica)
+#
+# The functions below are the *local* view of Algorithms 1 & 2: they see one
+# replica's unstacked params and communicate through a named axis (the
+# ``replica`` mesh axis under shard_map, or a vmap axis_name on one device).
+# The stacked functions above and these local ones compute identical math —
+# tests/mesh_hwa_check.py verifies it numerically on a forced-host mesh.
+
+
+def hwa_local_inner_step(params: PyTree, opt_state: PyTree, batch: PyTree,
+                         loss_fn: Callable, optimizer: Optimizer, lr
+                         ) -> tuple[PyTree, PyTree, jax.Array, dict]:
+    """One replica's SGD step (Algorithm 1 lines 5-7), no leading K axis.
+
+    Deliberately collective-free over the replica axis: inter-replica
+    traffic may only happen in :func:`hwa_sync_named`, every H steps.
+    """
+    (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, batch)
+    updates, opt2 = optimizer.update(grads, opt_state, params, lr)
+    return apply_updates(params, updates), opt2, loss, metrics
+
+
+def hwa_sync_named(cfg: HWAConfig, params: PyTree,
+                   window_state: WindowState, cycle: jax.Array,
+                   axis_name: str = "replica"
+                   ) -> tuple[PyTree, WindowState, PyTree, jax.Array]:
+    """Mesh-native end-of-cycle sync: W̄_e = pmean(W^k) over ``axis_name``
+    — the single inter-replica collective of the whole cycle — then the
+    slide-window update, computed identically (replica-invariantly) on
+    every replica since pmean leaves all replicas with the same W̄_e.
+
+    Returns (restarted params, window state, W̿_e, new cycle counter).
+    """
+    outer = online_average_named(params, axis_name)
+    new_ws, wa, new_cycle = _window_push(cfg, outer, window_state, cycle)
+    return outer, new_ws, wa, new_cycle

@@ -37,6 +37,27 @@ def broadcast_to_replicas(outer: Any, n_replicas: int) -> Any:
         outer)
 
 
+def online_average_named(params: Any, axis_name: str = "replica") -> Any:
+    """Outer weights W̄_e in the mesh-native path: each replica holds its
+    own *unstacked* params and the average is a single ``pmean`` over the
+    named mesh axis — the one inter-replica collective per sync cycle.
+
+    Only valid inside ``shard_map``/``vmap`` binding ``axis_name``.
+    """
+    return jax.tree.map(lambda x: jax.lax.pmean(x, axis_name), params)
+
+
+def replica_divergence_named(params: Any, axis_name: str = "replica"
+                             ) -> jax.Array:
+    """Mesh-native :func:`replica_divergence` (costs a second collective —
+    keep it out of the hot sync path unless the metric is wanted)."""
+    mean = online_average_named(params, axis_name)
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)
+                                - m.astype(jnp.float32)))
+             for x, m in zip(jax.tree.leaves(params), jax.tree.leaves(mean)))
+    return jax.lax.pmean(jnp.sqrt(sq), axis_name)
+
+
 def replica_divergence(stacked_params: Any) -> jax.Array:
     """Mean L2 distance of each replica from the average — the 'restart'
     magnitude the paper visualizes in Fig. 12 (exposed as a metric)."""

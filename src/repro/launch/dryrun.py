@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.common.compat import tree_flatten_with_path
 from repro.configs import ARCH_IDS, get_config, get_input_shape
 from repro.core.hwa import HWAConfig
 from repro.launch.hlo import roofline_terms
@@ -44,7 +45,7 @@ HBM_PER_CHIP = 16e9   # v5e
 
 def count_params(params_abs, cfg):
     total = embed = moe_routed = 0
-    for path, leaf in jax.tree.flatten_with_path(params_abs)[0]:
+    for path, leaf in tree_flatten_with_path(params_abs)[0]:
         n = int(np.prod(leaf.shape))
         keys = "/".join(str(getattr(p, "key", p)) for p in path)
         total += n

@@ -94,6 +94,89 @@ def collective_stats(hlo_text: str) -> CollectiveStats:
                            traffic_bytes=traffic)
 
 
+# ------------------------------------------------ replica-group structure
+#
+# Which mesh axes does each collective actually cross? XLA prints groups in
+# two forms: explicit ``replica_groups={{0,4},{1,5}}`` and iota
+# ``replica_groups=[n,g]<=[dims]`` with an optional ``T(perm)`` transpose.
+# Mapping member device ids back to mesh coordinates tells us whether a
+# collective crosses a given axis — the property the mesh-native HWA path
+# is built around (no replica-axis traffic outside hwa_sync).
+
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{(\{[\d,]*\}(?:,\{[\d,]*\})*)\}")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{((?:\{\d+,\d+\},?)*)\}")
+
+
+def parse_replica_groups(line: str) -> list[list[int]] | None:
+    """Participant groups of one HLO collective line, or None if absent.
+
+    Members are *logical* partition indices (positions in the jit's
+    device assignment, i.e. mesh.devices.flat order), not physical device
+    ids. collective-permute carries source_target_pairs instead; each
+    pair is returned as a two-member group.
+    """
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return [[int(x) for x in g.split(",") if x]
+                for g in re.findall(r"\{([\d,]*)\}", m.group(1))]
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        n, g = int(m.group(1)), int(m.group(2))
+        dims = [int(d) for d in m.group(3).split(",")]
+        import numpy as np
+        arr = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            arr = arr.transpose([int(d) for d in m.group(4).split(",")])
+        return [list(map(int, row)) for row in arr.reshape(n, g)]
+    m = _PAIRS_RE.search(line)
+    if m:
+        return [[int(a), int(b)] for a, b in
+                re.findall(r"\{(\d+),(\d+)\}", m.group(1))]
+    return None
+
+
+def axis_coords(mesh) -> dict[str, dict[int, int]]:
+    """logical partition index (mesh.devices.flat position — what HLO
+    replica_groups refer to) → coordinate along each mesh axis."""
+    import numpy as np
+    shape = mesh.devices.shape
+    out: dict[str, dict[int, int]] = {a: {} for a in mesh.axis_names}
+    for pos, idx in enumerate(np.ndindex(*shape)):
+        for a, c in zip(mesh.axis_names, idx):
+            out[a][pos] = c
+    return out
+
+
+def collectives_crossing_axis(hlo_text: str, mesh, axis: str
+                              ) -> list[tuple[str, str]]:
+    """(op, hlo line) of every collective whose groups span ``axis``.
+
+    A group "spans" the axis when two of its members sit at different
+    coordinates along it. A collective whose participants cannot be
+    parsed at all is conservatively counted as crossing — a false
+    positive beats silently voiding the no-replica-traffic guarantee.
+    """
+    coords = axis_coords(mesh)[axis]
+    hits = []
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        groups = parse_replica_groups(line)
+        if groups is None:
+            hits.append((m.group(2), line.strip()))
+            continue
+        for grp in groups:
+            if len({coords.get(d, -1) for d in grp}) > 1:
+                hits.append((m.group(2), line.strip()))
+                break
+    return hits
+
+
 def roofline_terms(flops_per_device: float, bytes_per_device: float,
                    traffic_bytes: float) -> dict:
     compute_s = flops_per_device / PEAK_FLOPS

@@ -5,16 +5,19 @@ Target: TPU v5e. Single pod = 16×16 = 256 chips, axes (data, model);
 multi-pod = 2 pods = 512 chips, axes (pod, data, model). For HWA the
 replica axis is the pod axis at multi-pod scale, or carved out of the data
 axis on a single pod (DESIGN.md §2).
+
+Mesh construction goes through ``repro.common.compat.make_mesh`` so the
+same code runs on jax 0.4.x and newer releases.
 """
 from __future__ import annotations
 
-import jax
+from repro.common.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+    return make_mesh(shape, axes)
 
 
 def make_hwa_mesh(n_replicas: int = 2, *, multi_pod: bool = False):
@@ -25,12 +28,12 @@ def make_hwa_mesh(n_replicas: int = 2, *, multi_pod: bool = False):
     single pod: (replica=K, data=16/K, model=16).
     """
     if multi_pod:
-        return jax.make_mesh((n_replicas, 16, 16), ("replica", "data", "model"))
+        return make_mesh((n_replicas, 16, 16), ("replica", "data", "model"))
     assert 16 % n_replicas == 0, n_replicas
-    return jax.make_mesh((n_replicas, 16 // n_replicas, 16),
-                         ("replica", "data", "model"))
+    return make_mesh((n_replicas, 16 // n_replicas, 16),
+                     ("replica", "data", "model"))
 
 
 def make_test_mesh(shape=(2, 2, 2), axes=("replica", "data", "model")):
     """Small mesh for CI-scale SPMD tests (requires forced host devices)."""
-    return jax.make_mesh(shape, axes)
+    return make_mesh(shape, axes)

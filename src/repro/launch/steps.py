@@ -12,10 +12,13 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.hwa import HWAConfig, hwa_inner_step, hwa_sync
+from repro.common.compat import shard_map
+from repro.core.hwa import (HWAConfig, hwa_inner_step, hwa_local_inner_step,
+                            hwa_sync, hwa_sync_named)
 from repro.models.registry import LM
 from repro.optim import adamw, apply_updates, sgd
-from repro.sharding.rules import ShardingRules, make_tp_rules
+from repro.sharding.rules import (ShardingRules, make_tp_rules,
+                                  replicated_specs, stacked_replica_specs)
 
 PyTree = Any
 
@@ -305,4 +308,164 @@ def make_hwa_sync_step(lm: LM, rules: ShardingRules, hwa_cfg: HWAConfig,
         abstract_args=(stacked_abs, ring_abs, total_abs, scalar_i, scalar_i),
         in_shardings=(p_sh, r_sh, t_sh, s_sh, s_sh),
         out_shardings=(p_sh, r_sh, t_sh, s_sh, s_sh, w_sh),
+        donate_argnums=(0, 1, 2))
+
+
+# ----------------------------------------------- mesh-native HWA (shard_map)
+#
+# Same storage layout as the vmap path — stacked (K, ...) state with the
+# leading dim sharded over the ``replica`` mesh axis — but the step runs
+# under shard_map *manual* over replica (data/model stay auto/GSPMD):
+# each replica block squeezes its (1, ...) slice and steps locally, so the
+# lowered inner-step HLO provably contains no collective crossing the
+# replica axis, and hwa_sync is one jax.lax.pmean over it. That makes the
+# paper's H-fold inter-replica communication amortization a structural
+# property of the program rather than a GSPMD-propagation accident.
+
+
+def _squeeze0(tree):
+    return jax.tree.map(lambda x: x[0], tree)
+
+
+def _expand0(tree):
+    return jax.tree.map(lambda x: x[None], tree)
+
+
+def make_mesh_hwa_train_step(lm: LM, rules: ShardingRules, batch_specs,
+                             batch_dims, hwa_cfg: HWAConfig,
+                             optimizer: str = "adamw", lr: float = 3e-4,
+                             opt_rules: ShardingRules | None = None,
+                             replica_axis: str = "replica") -> StepBundle:
+    """Mesh-native inner HWA step.
+
+    Collective-free over ``replica_axis`` by construction (shard_map keeps
+    the replica blocks independent; the only collectives GSPMD may insert
+    live inside a block, over the data/model axes). Returns per-replica
+    losses as a (K,) array sharded over the replica axis — averaging them
+    to a replicated scalar would itself be a replica collective, so the
+    caller takes the mean after fetching.
+    """
+    opt = _mk_optimizer(optimizer)
+    K = hwa_cfg.n_replicas
+    mesh = rules.mesh
+    assert replica_axis in mesh.shape, (replica_axis, mesh.shape)
+    assert K == mesh.shape[replica_axis], \
+        f"mesh-native path needs K == mesh axis size ({K} != " \
+        f"{mesh.shape[replica_axis]}); use the vmap path otherwise"
+    auto = frozenset(a for a in mesh.axis_names if a != replica_axis)
+    if not lm.cfg.scan_unroll:
+        # XLA (0.4.x) fatals on a while loop under manual-subgroup
+        # shardings; unrolling the layer scan keeps the body loop-free.
+        from repro.models.registry import build_model
+        lm = build_model(lm.cfg.with_(scan_unroll=True))
+    params_abs, param_dims = lm.abstract()
+    stacked_abs = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((K,) + s.shape, s.dtype), params_abs)
+    stacked_dims = _prefix_dims(param_dims, "replica")
+    opt_abs = jax.eval_shape(lambda p: jax.vmap(opt.init)(p), stacked_abs)
+    o_dims = opt_state_dims(opt_abs, stacked_dims)
+    if "count" in o_dims:
+        o_dims["count"] = ("replica",)
+    opt_rules = opt_rules or rules
+    kbatch_abs = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((K,) + s.shape, s.dtype), batch_specs)
+    kbatch_dims = _prefix_dims(batch_dims, "replica")
+
+    # The body runs the model's pure-jnp path (rules=None): the rules-aware
+    # path opens nested shard_maps (vocab-sharded gather, EP MoE) which 0.4.x
+    # cannot nest inside a partial-auto map. Layouts over the auto axes are
+    # still driven by the jit in/out shardings; constraints are hints only,
+    # so the math is unchanged.
+    def loss_fn(params, batch):
+        return lm.loss(params, batch, rules=None)
+
+    def local_step(inner, inner_opt, batch):
+        params, opt_state, loss, _ = hwa_local_inner_step(
+            _squeeze0(inner), _squeeze0(inner_opt), _squeeze0(batch),
+            loss_fn, opt, lr)
+        return _expand0(params), _expand0(opt_state), loss[None]
+
+    step = shard_map(
+        local_step, mesh,
+        in_specs=(stacked_replica_specs(stacked_abs, replica_axis),
+                  stacked_replica_specs(opt_abs, replica_axis),
+                  stacked_replica_specs(kbatch_abs, replica_axis)),
+        out_specs=(stacked_replica_specs(stacked_abs, replica_axis),
+                   stacked_replica_specs(opt_abs, replica_axis),
+                   P(replica_axis)),
+        check_rep=False, auto=auto)
+
+    p_sh = rules.tree_shardings(stacked_abs, stacked_dims)
+    o_sh = opt_rules.tree_shardings(opt_abs, o_dims)
+    b_sh = rules.tree_shardings(kbatch_abs, kbatch_dims)
+    losses_sh = NamedSharding(mesh, P(replica_axis))
+    return StepBundle(
+        fn=step, abstract_args=(stacked_abs, opt_abs, kbatch_abs),
+        in_shardings=(p_sh, o_sh, b_sh),
+        out_shardings=(p_sh, o_sh, losses_sh),
+        donate_argnums=(0, 1))
+
+
+def make_mesh_hwa_sync_step(lm: LM, rules: ShardingRules, hwa_cfg: HWAConfig,
+                            ring_dtype=jnp.float32,
+                            replica_axis: str = "replica") -> StepBundle:
+    """Mesh-native synchronization: the once-per-H-steps collective.
+
+    Inside the shard_map body each replica pmeans its weights over the
+    replica axis — the *only* inter-replica collective of the whole HWA
+    cycle — then performs the slide-window update redundantly on the
+    (now replica-invariant) outer weights. Window state rides along
+    replicated over replica and sharded over data/model per the rules,
+    exactly like the vmap-path sync bundle.
+    """
+    from repro.core.offline import WindowState
+
+    K = hwa_cfg.n_replicas
+    I = hwa_cfg.window
+    mesh = rules.mesh
+    assert replica_axis in mesh.shape and K == mesh.shape[replica_axis], \
+        (K, mesh.shape)
+    auto = frozenset(a for a in mesh.axis_names if a != replica_axis)
+    params_abs, param_dims = lm.abstract()
+    stacked_abs = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((K,) + s.shape, s.dtype), params_abs)
+    stacked_dims = _prefix_dims(param_dims, "replica")
+    ring_abs = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((I,) + s.shape, ring_dtype),
+        params_abs)
+    ring_dims = _prefix_dims(param_dims, None)
+    total_abs = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), params_abs)
+    scalar_i = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def local_sync(inner, ring, total, count, next_idx, cycle):
+        params = _squeeze0(inner)
+        ws = WindowState(ring=ring, total=total, count=count,
+                         next_idx=next_idx, window=I, kind="ring")
+        outer, ws2, wa, new_cycle = hwa_sync_named(
+            hwa_cfg, params, ws, cycle, replica_axis)
+        return (_expand0(outer), ws2.ring, ws2.total, ws2.count,
+                ws2.next_idx, wa, new_cycle)
+
+    step = shard_map(
+        local_sync, mesh,
+        in_specs=(stacked_replica_specs(stacked_abs, replica_axis),
+                  replicated_specs(ring_abs), replicated_specs(total_abs),
+                  P(), P(), P()),
+        out_specs=(stacked_replica_specs(stacked_abs, replica_axis),
+                   replicated_specs(ring_abs), replicated_specs(total_abs),
+                   P(), P(), replicated_specs(params_abs), P()),
+        check_rep=False, auto=auto)
+
+    p_sh = rules.tree_shardings(stacked_abs, stacked_dims)
+    r_sh = rules.tree_shardings(ring_abs, ring_dims)
+    t_sh = rules.tree_shardings(total_abs, param_dims)
+    w_sh = rules.tree_shardings(params_abs, param_dims)
+    s_sh = NamedSharding(mesh, P())
+    return StepBundle(
+        fn=step,
+        abstract_args=(stacked_abs, ring_abs, total_abs, scalar_i, scalar_i,
+                       scalar_i),
+        in_shardings=(p_sh, r_sh, t_sh, s_sh, s_sh, s_sh),
+        out_shardings=(p_sh, r_sh, t_sh, s_sh, s_sh, w_sh, s_sh),
         donate_argnums=(0, 1, 2))

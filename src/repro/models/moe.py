@@ -20,6 +20,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.common.compat import shard_map
 from repro.models.common import activation, normal_init
 
 
@@ -193,7 +194,7 @@ def moe_forward_sharded(cfg, p, x, rules):
         p_specs.update({"sh_gate": P(None, maxis), "sh_up": P(None, maxis),
                         "sh_down": P(maxis, None), "sh_route": P()})
     x_spec = P(bspec if bspec else None, None, None)
-    fn = jax.shard_map(local, mesh=mesh,
+    fn = shard_map(local, mesh=mesh,
                        in_specs=(x_spec, p_specs),
                        out_specs=(x_spec, P()),
                        check_vma=False)
@@ -273,7 +274,7 @@ def moe_forward_ep(cfg, p, x, *, mesh, axis: str = "model",
     # FLOPs). Falls back to batch-only sharding when S % n != 0 (decode).
     seq_axis = axis if x.shape[1] % n_shards == 0 else None
     batch_spec = P(data_axes if data_axes else None, seq_axis)
-    fn = jax.shard_map(
+    fn = shard_map(
         local_fn, mesh=mesh,
         in_specs=(batch_spec, P(), P(axis), P(axis), P(axis)),
         out_specs=(batch_spec, P()),

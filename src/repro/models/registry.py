@@ -20,6 +20,7 @@ import jax
 import numpy as np
 import jax.numpy as jnp
 
+from repro.common.compat import shard_map
 from repro.models import transformer as tfm
 from repro.models.common import apply_norm, init_norm, normal_init, softcap
 from repro.models.types import ModelConfig
@@ -98,7 +99,7 @@ def _sharded_gather(embed, tokens, rules):
     tok_rest = (None,) * (tokens.ndim - 1)
     in_specs = (P(vaxis), P(bspec if bspec else None, *tok_rest))
     out_specs = P(bspec if bspec else None, *tok_rest, None)
-    fn = jax.shard_map(local, mesh=mesh, in_specs=in_specs,
+    fn = shard_map(local, mesh=mesh, in_specs=in_specs,
                        out_specs=out_specs, check_vma=False)
     return fn(embed, tokens)
 

@@ -448,7 +448,8 @@ def apply_stack_train(cfg: ModelConfig, stack_params, x, positions, rules=None):
         return (x, aux + a), None
 
     (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
-                               tuple(stack_params))
+                               tuple(stack_params),
+                               unroll=True if cfg.scan_unroll else 1)
     return x, aux
 
 

@@ -56,6 +56,9 @@ class ModelConfig:
 
     dtype: str = "bfloat16"
     remat: str = "full"                  # none | full | dots
+    scan_unroll: bool = False            # unroll the layer scan (no XLA
+    # while loop — required inside partial-auto shard_map on jax 0.4.x,
+    # whose SPMD partitioner fatals on while+manual-subgroup shardings)
     source: str = ""                     # citation bracket from the assignment
 
     @property

@@ -83,6 +83,21 @@ def named_sharding(mesh: Mesh, *spec) -> NamedSharding:
     return NamedSharding(mesh, P(*spec))
 
 
+# shard_map in/out specs for the mesh-native HWA path: the map is *manual*
+# over the replica axis only (data/model stay auto-sharded by GSPMD), so
+# specs may mention nothing but the replica axis.
+
+def stacked_replica_specs(tree: Any, axis: str = "replica") -> Any:
+    """P(axis) on the leading stacked-K dim of every leaf."""
+    return jax.tree.map(lambda _: P(axis), tree)
+
+
+def replicated_specs(tree: Any) -> Any:
+    """P() for every leaf: replica-invariant state (window ring/totals,
+    counters) that every replica holds and updates identically."""
+    return jax.tree.map(lambda _: P(), tree)
+
+
 def make_tp_rules(mesh: Mesh, *, expert_parallel: bool = False,
                   replica_axis: str | None = None,
                   fsdp: bool = False,

@@ -1,0 +1,124 @@
+"""repro.common.compat: both API branches of every shim, monkeypatched,
+plus a checkpoint bf16 round-trip regression through the shim."""
+import contextlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common import compat
+from repro.checkpoint import load_pytree, save_pytree
+
+
+# ----------------------------------------------------- tree_flatten_with_path
+
+def test_tree_flatten_with_path_matches_tree_util():
+    tree = {"a": [jnp.ones((2,)), jnp.zeros((3,))], "b": {"c": jnp.ones(())}}
+    got_flat, got_def = compat.tree_flatten_with_path(tree)
+    want_flat, want_def = jax.tree_util.tree_flatten_with_path(tree)
+    assert got_def == want_def
+    assert [p for p, _ in got_flat] == [p for p, _ in want_flat]
+
+
+def test_tree_flatten_with_path_resolves_new_api_when_present():
+    """On jax ≥0.5 the shim must pick jax.tree.flatten_with_path; on the
+    pinned 0.4.x it must fall back to tree_util. Assert the resolution
+    matches whichever branch this interpreter actually has."""
+    if hasattr(jax.tree, "flatten_with_path"):
+        assert compat.tree_flatten_with_path is jax.tree.flatten_with_path
+    else:
+        assert compat.tree_flatten_with_path is \
+            jax.tree_util.tree_flatten_with_path
+
+
+# ------------------------------------------------------------------ use_mesh
+
+def _mesh_1d():
+    return compat.make_mesh((1,), ("data",))
+
+
+def test_use_mesh_new_api_branch(monkeypatch):
+    calls = []
+
+    @contextlib.contextmanager
+    def fake_set_mesh(mesh):
+        calls.append(mesh)
+        yield
+
+    monkeypatch.setattr(jax, "set_mesh", fake_set_mesh, raising=False)
+    mesh = _mesh_1d()
+    with compat.use_mesh(mesh):
+        pass
+    assert calls == [mesh]
+
+
+def test_use_mesh_old_api_branch(monkeypatch):
+    """Without set_mesh/use_mesh the shim returns the Mesh itself, whose
+    own context manager installs it as the ambient mesh."""
+    monkeypatch.delattr(jax, "set_mesh", raising=False)
+    monkeypatch.delattr(jax.sharding, "use_mesh", raising=False)
+    mesh = _mesh_1d()
+    cm = compat.use_mesh(mesh)
+    assert cm is mesh
+    with cm:
+        from jax.sharding import PartitionSpec as P
+        x = jax.jit(lambda v: v * 2,
+                    in_shardings=jax.sharding.NamedSharding(mesh, P()))(
+            jnp.ones((4,)))
+    np.testing.assert_array_equal(np.asarray(x), 2 * np.ones((4,)))
+
+
+# ----------------------------------------------------------------- make_mesh
+
+def test_make_mesh_new_api_branch():
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    assert mesh.axis_names == ("data", "model")
+    assert dict(mesh.shape) == {"data": 1, "model": 1}
+
+
+def test_make_mesh_fallback_branch(monkeypatch):
+    monkeypatch.delattr(jax, "make_mesh", raising=False)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    assert mesh.axis_names == ("data", "model")
+    assert dict(mesh.shape) == {"data": 1, "model": 1}
+
+
+# ----------------------------------------------------------------- shard_map
+
+def test_shard_map_old_keywords():
+    mesh = _mesh_1d()
+    from jax.sharding import PartitionSpec as P
+    f = compat.shard_map(lambda x: x * 2, mesh, in_specs=(P(),),
+                         out_specs=P(), check_rep=False)
+    np.testing.assert_array_equal(np.asarray(f(jnp.ones((4,)))),
+                                  2 * np.ones((4,)))
+
+
+def test_shard_map_check_vma_spelling():
+    """New-API call sites pass check_vma; the shim maps it onto whichever
+    keyword the installed jax takes."""
+    mesh = _mesh_1d()
+    from jax.sharding import PartitionSpec as P
+    f = compat.shard_map(lambda x: x + 1, mesh, in_specs=(P(),),
+                         out_specs=P(), check_vma=False)
+    np.testing.assert_array_equal(np.asarray(f(jnp.zeros((4,)))),
+                                  np.ones((4,)))
+
+
+# --------------------------------------------- checkpoint bf16 regression
+
+def test_save_load_bf16_roundtrip_via_shim(tmp_path):
+    """save_pytree/load_pytree flatten through the compat shim; bf16
+    leaves must round-trip bit-exactly (they ride as uint16 views)."""
+    tree = {"w": (jnp.arange(6, dtype=jnp.float32) / 3.0)
+                 .astype(jnp.bfloat16).reshape(2, 3),
+            "nested": [{"b": jnp.asarray([1.5, -2.25], jnp.bfloat16)}],
+            "f32": jnp.linspace(0, 1, 5)}
+    path = str(tmp_path / "bf16.npz")
+    save_pytree(path, tree)
+    out = load_pytree(path, jax.tree.map(jnp.zeros_like, tree))
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))

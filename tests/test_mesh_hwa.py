@@ -1,0 +1,102 @@
+"""Mesh-native HWA: numeric equivalence + HLO structure (subprocess with
+8 forced host devices), plus single-device unit tests of the named-axis
+core math under vmap(axis_name=...)."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.hwa import HWAConfig, HWAState, hwa_init, hwa_sync, \
+    hwa_sync_named
+from repro.core.offline import window_init
+from repro.core.online import online_average, online_average_named
+from repro.optim import sgd
+
+
+@pytest.mark.timeout(900)
+def test_mesh_hwa_subprocess():
+    script = os.path.join(os.path.dirname(__file__), "mesh_hwa_check.py")
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep + \
+        os.path.dirname(__file__) + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, script], capture_output=True,
+                          text=True, env=env, timeout=850)
+    print(proc.stdout)
+    print(proc.stderr[-2000:] if proc.stderr else "")
+    assert proc.returncode == 0, proc.stdout + proc.stderr[-2000:]
+    assert "ALL_OK" in proc.stdout
+
+
+def _params(seed=0):
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    return {"w": jax.random.normal(k1, (4, 3)),
+            "b": jax.random.normal(k2, (3,))}
+
+
+def _stacked(seed=0, k=2):
+    return {"w": jax.random.normal(jax.random.key(seed), (k, 4, 3)),
+            "b": jax.random.normal(jax.random.key(seed + 1), (k, 3))}
+
+
+def test_online_average_named_matches_stacked():
+    stacked = _stacked()
+    named = jax.vmap(lambda p: online_average_named(p, "k"),
+                     axis_name="k")(stacked)
+    want = online_average(stacked)
+    for k in ("w", "b"):
+        assert jnp.allclose(named[k][0], want[k], atol=1e-6)
+        assert jnp.allclose(named[k][0], named[k][1])  # replica-invariant
+
+
+def test_hwa_sync_named_matches_hwa_sync():
+    """The mesh-native local sync (pmean over a named axis) computes the
+    same outer weights, window state and W̿ as the stacked hwa_sync."""
+    cfg = HWAConfig(n_replicas=2, window=3)
+    opt = sgd(momentum=0.9)
+    params = _params()
+    state = hwa_init(cfg, params, opt)
+    # replicas diverge: perturb the stacked inner weights
+    inner = jax.tree.map(
+        lambda x: x + 0.1 * jax.random.normal(jax.random.key(7), x.shape),
+        _stacked())
+    state = HWAState(inner=inner, inner_opt=state.inner_opt,
+                     window_state=state.window_state, wa=state.wa,
+                     cycle=state.cycle, step=state.step)
+
+    stacked_state, _ = hwa_sync(cfg, state)
+
+    ws = window_init(params, cfg.window)
+    outer, ws2, wa, cycle = jax.vmap(
+        lambda p: hwa_sync_named(cfg, p, ws, jnp.zeros((), jnp.int32), "k"),
+        axis_name="k", out_axes=(0, None, None, None))(inner)
+
+    for k in ("w", "b"):
+        assert jnp.allclose(outer[k][0], stacked_state.inner[k][0],
+                            atol=1e-6)
+        assert jnp.allclose(wa[k], stacked_state.wa[k], atol=1e-6)
+    assert int(cycle) == int(stacked_state.cycle) == 1
+    assert int(ws2.count) == int(stacked_state.window_state.count) == 1
+
+
+def test_hwa_sync_named_window_stride():
+    """Cycles not matching window_stride skip the window push (sparse
+    window, paper §III-B) in the named path too."""
+    cfg = HWAConfig(n_replicas=2, window=4, window_stride=2)
+    params = _params()
+    ws = window_init(params, cfg.window)
+    inner = _stacked()
+
+    def sync_at(cycle, ws):
+        return jax.vmap(
+            lambda p: hwa_sync_named(cfg, p, ws,
+                                     jnp.asarray(cycle, jnp.int32), "k"),
+            axis_name="k", out_axes=(0, None, None, None))(inner)
+
+    _, ws_a, _, _ = sync_at(0, ws)      # cycle 0 -> take
+    assert int(ws_a.count) == 1
+    _, ws_b, _, _ = sync_at(1, ws_a)    # cycle 1 -> skip
+    assert int(ws_b.count) == 1
