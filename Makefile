@@ -3,7 +3,7 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test spmd mesh-hwa bench train-smoke
+.PHONY: test spmd mesh-hwa bench bench-kernels train-smoke
 
 # tier-1: the full CPU suite (SPMD checks run in their own subprocesses)
 test:
@@ -22,3 +22,8 @@ mesh-hwa:
 # communication-amortization numbers from real lowered HLO
 bench:
 	$(PY) -m benchmarks.run --only mesh_comm
+
+# packed-vs-per-leaf WA kernel numbers; writes BENCH_kernels.json at the
+# repo root (cross-PR perf trajectory)
+bench-kernels:
+	$(PY) -m benchmarks.run --only kernels

@@ -5,28 +5,162 @@ Pallas kernels run in interpret mode here — TPU is the target, so their
 value is the HBM-traffic model, reported as derived columns):
 
   fused wa_window_update : 3 reads + 3 writes vs naive 6 reads + 3 writes
+  fused sync             : (K+2) reads + 3 writes vs (K+3) reads + 4 writes
   online_mean            : K reads + 1 write (fused cast)
+
+The packed-vs-per-leaf comparison drives a transformer-like tree
+(≥100 leaves, mixed 128-element biases and 1M-element matrices) through
+both WA-update formulations and reports, per path: kernel-launch count
+(structural, from the jaxpr), padding waste (bytes padded / bytes
+useful), and ref-impl wall time. ``benchmarks.run`` tees the returned
+dict into BENCH_kernels.json at the repo root for cross-PR tracking.
 """
 import time
 
 import jax
 import jax.numpy as jnp
 
+from repro.common.packing import ALIGN, pack, pack_spec, pack_stacked
+from repro.kernels import ops as kops
 from repro.kernels import ref as kref
+from repro.launch.hlo import count_pallas_calls
 from benchmarks.common import csv_row
 
 
 def _time(fn, *args, iters=20):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        fn(*args).block_until_ready()
+    jax.block_until_ready(fn(*args))     # warm up with ONE call
     t0 = time.time()
     for _ in range(iters):
-        out = fn(*args)
-        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+        jax.block_until_ready(fn(*args))
     return (time.time() - t0) / iters * 1e6
 
 
+def transformer_like_tree(key=0):
+    """≥100 leaves with a transformer's size mix: a few 1M-element
+    matrices, mid-size projections, and many 128-element biases."""
+    ks = iter(jax.random.split(jax.random.key(key), 128))
+    tree = {}
+    for i in range(2):
+        tree[f"embed_{i}"] = jax.random.normal(next(ks), (1024, 1024))
+    for i in range(30):
+        tree[f"proj_{i}"] = jax.random.normal(next(ks), (128, 512))
+    for i in range(70):
+        tree[f"bias_{i}"] = jax.random.normal(next(ks), (128,))
+    return tree
+
+
+def _per_leaf_pad_waste(tree):
+    useful = padded = 0
+    for leaf in jax.tree.leaves(tree):
+        n = leaf.size
+        useful += n
+        padded += -(-n // ALIGN) * ALIGN
+    return (padded - useful) / useful
+
+
+def packed_vs_per_leaf(print_fn=print):
+    I, K = 4, 2
+    tree = transformer_like_tree()
+    n_leaves = len(jax.tree.leaves(tree))
+    spec = pack_spec(tree)
+
+    # --- launch counts (structural: pallas_call eqns in the jaxpr) ------
+    def per_leaf_update(ring, total, new):
+        triples = jax.tree.map(
+            lambda r, t, n: kops.wa_window_update(r, t, n, 0, 1.0, 1.0 / I),
+            ring, total, new)
+        is3 = lambda x: isinstance(x, tuple) and len(x) == 3
+        return jax.tree.map(lambda t: t[1], triples, is_leaf=is3)
+
+    ring_tree = jax.tree.map(lambda x: jnp.zeros((I,) + x.shape), tree)
+    total_tree = jax.tree.map(jnp.zeros_like, tree)
+    launches_per_leaf = count_pallas_calls(jax.make_jaxpr(per_leaf_update)(
+        ring_tree, total_tree, tree))
+
+    ring = jnp.zeros((I, spec.padded))
+    total = jnp.zeros((spec.padded,))
+    new = pack(tree, spec)
+    launches_packed = count_pallas_calls(jax.make_jaxpr(
+        lambda r, t, n: kops.wa_window_update_packed(r, t, n, 0, 1.0, 1.0 / I)
+    )(ring, total, new))
+    stacked = jnp.stack([new, new])
+    launches_fused = count_pallas_calls(jax.make_jaxpr(
+        lambda s, r, t: kops.hwa_sync_packed(s, r, t, 0, 1.0, 1.0 / I)
+    )(stacked, ring, total))
+
+    # --- padding waste --------------------------------------------------
+    waste_per_leaf = _per_leaf_pad_waste(tree)
+    waste_packed = spec.pad_waste
+
+    # --- wall time: donated steady-state loop (state threaded through,
+    # ring/total updated in place — the deployment shape), jit'd refs.
+    # On CPU the elementwise work dominates and XLA fuses either way; the
+    # launch-count/padding columns above are the TPU-side story.
+    idx = jnp.zeros((), jnp.int32)
+
+    def _time_threaded(fn, ring, total, new, iters=10):
+        ring, total, avg = fn(ring, total, new)
+        jax.block_until_ready((ring, total, avg))
+        t0 = time.time()
+        for _ in range(iters):
+            ring, total, avg = fn(ring, total, new)
+            jax.block_until_ready(avg)
+        jax.block_until_ready((ring, total))
+        return (time.time() - t0) / iters * 1e6
+
+    def leaf_ref(ring, total, new):
+        # keep all of (ring', total', avg): dropping any lets XLA DCE
+        # that part of the update and skews the timing
+        triples = jax.tree.map(
+            lambda r, t, n: kref.wa_window_update_ref(r, t, n, idx, 1.0,
+                                                      1.0 / I),
+            ring, total, new)
+        is3 = lambda x: isinstance(x, tuple) and len(x) == 3
+        pick = lambda i: jax.tree.map(lambda t: t[i], triples, is_leaf=is3)
+        return pick(0), pick(1), pick(2)
+
+    us_leaf = _time_threaded(jax.jit(leaf_ref, donate_argnums=(0, 1)),
+                             ring_tree, total_tree, tree)
+    packed_ref = jax.jit(lambda r, t, n: kref.wa_window_update_ref(
+        r, t, n, idx, 1.0, 1.0 / I), donate_argnums=(0, 1))
+    us_packed = _time_threaded(packed_ref, ring, total, new)
+    fused_ref = jax.jit(lambda s, r, t: kref.wa_sync_fused_ref(
+        s, r, t, idx, 1.0, 1.0 / I), donate_argnums=(1, 2))
+    ring2 = jnp.zeros((I, spec.padded))     # previous buffers were donated
+    total2 = jnp.zeros((spec.padded,))
+    us_fused = _time_threaded(
+        lambda r, t, n: fused_ref(stacked, r, t), ring2, total2, new)
+
+    useful_bytes = 4 * spec.size
+    rec = {
+        "n_leaves": n_leaves, "window": I, "n_replicas": K,
+        "useful_bytes": useful_bytes,
+        "launches_per_leaf": launches_per_leaf,
+        "launches_packed": launches_packed,
+        "launches_fused_sync": launches_fused,
+        "pad_waste_per_leaf": waste_per_leaf,
+        "pad_waste_packed": waste_packed,
+        "us_per_leaf_ref": us_leaf, "us_packed_ref": us_packed,
+        "us_fused_sync_ref": us_fused,
+    }
+    print_fn(csv_row(
+        "kernel/packed_vs_per_leaf/launches", 0.0,
+        f"leaves={n_leaves};per_leaf={launches_per_leaf};"
+        f"packed={launches_packed};fused_sync={launches_fused}"))
+    print_fn(csv_row(
+        "kernel/packed_vs_per_leaf/pad_waste", 0.0,
+        f"per_leaf={waste_per_leaf:.4f};packed={waste_packed:.6f}"))
+    print_fn(csv_row("kernel/wa_window_update_per_leaf_ref", us_leaf,
+                     f"leaves={n_leaves};bytes={useful_bytes}"))
+    print_fn(csv_row("kernel/wa_window_update_packed_ref", us_packed,
+                     f"leaves={n_leaves};bytes={useful_bytes}"))
+    print_fn(csv_row("kernel/hwa_sync_fused_ref", us_fused,
+                     f"K={K};bytes={useful_bytes}"))
+    return rec
+
+
 def main(print_fn=print):
+    out = {}
     N = 1 << 20
     I, K = 8, 4
     ring = jnp.zeros((I, N), jnp.float32)
@@ -38,6 +172,8 @@ def main(print_fn=print):
     us = _time(ref, ring, total, new)
     naive_bytes = (6 * N + 3 * N) * 4
     fused_bytes = (3 * N + 3 * N) * 4
+    out["wa_window_update"] = {"us": us, "bytes_naive": naive_bytes,
+                               "bytes_fused": fused_bytes}
     print_fn(csv_row("kernel/wa_window_update", us,
                      f"bytes_naive={naive_bytes};bytes_fused={fused_bytes};"
                      f"traffic_cut={1 - fused_bytes / naive_bytes:.2f}"))
@@ -45,8 +181,24 @@ def main(print_fn=print):
     stacked = jnp.ones((K, N), jnp.float32)
     ref2 = jax.jit(kref.online_mean_ref)
     us = _time(ref2, stacked)
+    out["online_mean"] = {"us": us, "bytes": (K * N + N) * 4}
     print_fn(csv_row("kernel/online_mean", us,
                      f"bytes={(K * N + N) * 4}"))
+
+    # fused sync: (K+2) reads + 3 writes vs two kernels' (K+3) + 4
+    ref3 = jax.jit(lambda s, r, t: kref.wa_sync_fused_ref(
+        s, r, t, 3, 1.0, 1.0 / I))
+    us = _time(ref3, stacked, ring, total)
+    sync_fused_bytes = ((K + 2) * N + 3 * N) * 4
+    sync_split_bytes = ((K + 3) * N + 4 * N) * 4
+    out["wa_sync_fused"] = {"us": us, "bytes_fused": sync_fused_bytes,
+                            "bytes_two_kernel": sync_split_bytes}
+    print_fn(csv_row("kernel/wa_sync_fused", us,
+                     f"bytes_fused={sync_fused_bytes};"
+                     f"bytes_two_kernel={sync_split_bytes};"
+                     f"traffic_cut={1 - sync_fused_bytes / sync_split_bytes:.2f}"))
+
+    out["packed_vs_per_leaf"] = packed_vs_per_leaf(print_fn)
 
     B, S, H, D = 2, 1024, 4, 64
     ks = jax.random.split(jax.random.key(0), 3)
@@ -58,11 +210,13 @@ def main(print_fn=print):
     from repro.models.attention import flash_attention_jnp
     flash = jax.jit(lambda q, k, v: flash_attention_jnp(q, k, v))
     us_flash = _time(flash, q, k, v, iters=5)
+    out["attention_naive_ref"] = {"us": us_naive}
+    out["attention_flash_jnp"] = {"us": us_flash}
     print_fn(csv_row("kernel/attention_naive_ref", us_naive,
                      f"S={S};mem=O(S^2)"))
     print_fn(csv_row("kernel/attention_flash_jnp", us_flash,
                      f"S={S};mem=O(S*block)"))
-    return {}
+    return out
 
 
 if __name__ == "__main__":

@@ -1,7 +1,10 @@
 """Benchmark orchestrator — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (and tees per-table JSON into
-experiments/bench/).
+experiments/bench/). The kernel suite's structured result (per-benchmark
+µs + derived bytes/launches/padding) is additionally written to
+``BENCH_kernels.json`` at the repo root so the perf trajectory is tracked
+across PRs, not just printed.
 
   PYTHONPATH=src python -m benchmarks.run [--only table2,roofline]
 """
@@ -45,10 +48,15 @@ def main() -> None:
         t0 = time.time()
         mod = __import__(module, fromlist=["main"])
         try:
-            mod.main(print_fn=sink)
+            result = mod.main(print_fn=sink)
         except Exception as e:  # noqa: BLE001 — report and continue
+            result = None
             sink(f"{name}/ERROR,0,{type(e).__name__}: {e}")
         sink(f"{name}/wall_s,{(time.time()-t0)*1e6:.0f},done")
+        if name == "kernels" and isinstance(result, dict) and result:
+            root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+            with open(os.path.join(root, "BENCH_kernels.json"), "w") as f:
+                json.dump(result, f, indent=2, sort_keys=True)
     with open("experiments/bench/rows.csv", "w") as f:
         f.write("name,us_per_call,derived\n")
         f.write("\n".join(rows) + "\n")

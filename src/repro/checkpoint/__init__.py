@@ -1,2 +1,3 @@
-from repro.checkpoint.io import save_pytree, load_pytree
+from repro.checkpoint.io import (save_pytree, load_pytree,
+                                 save_window_state, load_window_state)
 from repro.checkpoint.store import OuterWeightStore

@@ -10,6 +10,7 @@ import os
 from typing import Any
 
 import jax
+import jax.numpy as jnp
 import ml_dtypes
 import numpy as np
 
@@ -57,8 +58,8 @@ def save_pytree(path: str, tree: Any) -> None:
     os.replace(tmp, path)
 
 
-def load_pytree(path: str, like: Any) -> Any:
-    """Load into the structure of ``like`` (checked against stored keys)."""
+def _read_raw(path: str) -> tuple[list, list]:
+    """(keys, leaves) exactly as stored, dtype views undone."""
     with np.load(path, allow_pickle=False) as data:
         keys = json.loads(str(data["__keys__"]))
         dtypes = json.loads(str(data["__dtypes__"]))
@@ -68,6 +69,12 @@ def load_pytree(path: str, like: Any) -> Any:
             if dt in _VIEW:
                 arr = arr.view(dt)
             leaves.append(arr)
+    return keys, leaves
+
+
+def load_pytree(path: str, like: Any) -> Any:
+    """Load into the structure of ``like`` (checked against stored keys)."""
+    keys, leaves = _read_raw(path)
     flat, treedef = tree_flatten_with_path(like)
     if len(flat) != len(leaves):
         raise ValueError(f"checkpoint has {len(leaves)} leaves, "
@@ -80,3 +87,83 @@ def load_pytree(path: str, like: Any) -> Any:
                              f"{leaf.shape} vs {tmpl.shape}")
     return jax.tree.unflatten(treedef,
                               [l.astype(t[1].dtype) for t, l in zip(flat, leaves)])
+
+
+# ------------------------------------------------- packed WA window state
+#
+# The slide-window state (repro.core.offline.WindowState) is held packed:
+# one (I, P) ring + one (P,) total over the whole parameter set. Saving it
+# is a plain 4-leaf pytree save; loading migrates pre-packing checkpoints
+# (one ring/total leaf PER PARAMETER) by re-packing them into the layout
+# described by the template's PackSpec — bit-identically, since packing is
+# layout-only.
+
+
+def save_window_state(path: str, state: Any) -> None:
+    """Save a (packed) WindowState: ring/total buffers + counters."""
+    save_pytree(path, {"ring": state.ring, "total": state.total,
+                       "count": state.count, "next_idx": state.next_idx})
+
+
+def load_window_state(path: str, like: Any) -> Any:
+    """Load a WindowState saved by :func:`save_window_state` — or migrate
+    an old per-leaf checkpoint — into the packed layout of ``like``
+    (a WindowState template whose ``spec`` fixes offsets and treedef)."""
+    from repro.core.offline import WindowState
+
+    keys, leaves = _read_raw(path)
+    spec = like.spec
+    by_group: dict[str, list] = {}
+    for key, leaf in zip(keys, leaves):
+        group, _, subkey = key.partition(_SEP)
+        by_group.setdefault(group, []).append((subkey, leaf))
+
+    # key paths of the packed layout's leaves, in flatten order — the
+    # migration must match stored per-leaf keys against these, not rely
+    # on position alone (two same-shape leaves could silently swap)
+    # key paths depend only on the treedef, so zero-size leaves suffice
+    dummy = jax.tree.unflatten(
+        spec.treedef, [np.zeros(0, np.float32)] * spec.n_leaves)
+    flat_dummy, _ = tree_flatten_with_path(dummy)
+    expected_keys = [_keystr(p) for p, _ in flat_dummy]
+
+    def grab(group):
+        if group not in by_group:
+            raise ValueError(f"window-state checkpoint missing '{group}' "
+                             f"(stored keys: {keys})")
+        return by_group[group]
+
+    def repack(group_items, lead: tuple, dtype):
+        if len(group_items) == 1 and group_items[0][1].shape == \
+                lead + (spec.padded,):
+            return jnp.asarray(group_items[0][1], dtype)   # already packed
+        # migration: one stored leaf per parameter, in flatten order
+        if len(group_items) != spec.n_leaves:
+            raise ValueError(
+                f"cannot migrate: checkpoint has {len(group_items)} leaves,"
+                f" packed template expects {spec.n_leaves} (or 1 packed)")
+        parts = []
+        for (subkey, arr), ls, want in zip(group_items, spec.leaves,
+                                           expected_keys):
+            if subkey != want:
+                raise ValueError(f"migration key mismatch: stored leaf "
+                                 f"'{subkey}' where template expects "
+                                 f"'{want}'")
+            if tuple(arr.shape) != lead + ls.shape:
+                raise ValueError(f"migration shape mismatch: {arr.shape} "
+                                 f"vs {lead + ls.shape}")
+            parts.append(np.asarray(arr, np.float32).reshape(lead + (ls.size,)))
+        pad = spec.padded - spec.size
+        if pad:
+            parts.append(np.zeros(lead + (pad,), np.float32))
+        return jnp.asarray(np.concatenate(parts, axis=-1), dtype)
+
+    ring = None
+    if like.ring is not None:
+        ring = repack(grab("ring"), (like.window,), like.ring.dtype)
+    total = repack(grab("total"), (), jnp.float32)
+    count = jnp.asarray(grab("count")[0][1], jnp.int32)
+    next_idx = jnp.asarray(grab("next_idx")[0][1], jnp.int32)
+    return WindowState(ring=ring, total=total, count=count,
+                       next_idx=next_idx, window=like.window,
+                       kind=like.kind, spec=spec)

@@ -1,0 +1,159 @@
+"""Parameter packing: an arbitrary pytree as ONE tile-aligned flat buffer.
+
+The WA hot path (online mean W̄, slide-window update W̿ — Algorithms 1 & 2)
+is elementwise over the full parameter set, yet a transformer holds it as
+hundreds of ragged leaves. Updating per leaf costs one kernel launch per
+leaf and pads each leaf up to a tile multiple (a 128-element bias padded
+64×), and re-padding on every call defeats buffer donation. Packing fixes
+all three: flatten every leaf into one contiguous buffer, pad ONCE at the
+end to an ``ALIGN`` multiple, and keep the WA state in that layout
+persistently — O(1) launches, <1% padding, donation-friendly.
+
+The layout is described by a static :class:`PackSpec` (offsets/shapes
+table + treedef) computed from abstract shapes, so it is identical under
+``jit``/``eval_shape`` and hashable (usable as pytree metadata).
+
+Packing is elementwise-layout-only: no arithmetic touches the values, so
+any elementwise update on the packed buffer is bit-identical (0 ULP) to
+the same update applied per leaf.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+# One (8, 1024) f32 VMEM tile worth of elements. Must equal
+# ``kernels.wa_update.TILE_ROWS * TILE_COLS`` (asserted in kernels.ops) so
+# a packed buffer reshapes to (rows, 1024) with rows % 8 == 0 and feeds the
+# Pallas kernels with zero per-call padding.
+ALIGN = 8 * 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSpec:
+    """Placement of one pytree leaf inside the packed buffer."""
+    offset: int
+    size: int
+    shape: tuple[int, ...]
+    dtype: str
+
+
+@dataclasses.dataclass(frozen=True)
+class PackSpec:
+    """Static description of a packed pytree: where every leaf lives.
+
+    Hashable (treedef + tuples), so it can ride along as pytree metadata
+    (``register_dataclass`` meta field) and as a ``jit`` static argument.
+    """
+    treedef: Any                     # jax PyTreeDef
+    leaves: tuple[LeafSpec, ...]
+    size: int                        # total useful elements
+    padded: int                      # buffer length, multiple of ``align``
+    align: int = ALIGN
+
+    @property
+    def n_leaves(self) -> int:
+        return len(self.leaves)
+
+    @property
+    def pad_waste(self) -> float:
+        """Padded-but-useless fraction: bytes padded / bytes useful."""
+        return (self.padded - self.size) / max(self.size, 1)
+
+
+def pack_spec(tree: PyTree, align: int = ALIGN) -> PackSpec:
+    """Compute the packed layout of ``tree`` (arrays or ShapeDtypeStructs)."""
+    flat, treedef = jax.tree.flatten(tree)
+    leaves = []
+    offset = 0
+    for leaf in flat:
+        shape = tuple(int(d) for d in leaf.shape)
+        size = int(np.prod(shape, dtype=np.int64)) if shape else 1
+        leaves.append(LeafSpec(offset=offset, size=size, shape=shape,
+                               dtype=np.dtype(leaf.dtype).name))
+        offset += size
+    padded = max(align, -(-offset // align) * align)
+    return PackSpec(treedef=treedef, leaves=tuple(leaves), size=offset,
+                    padded=padded, align=align)
+
+
+def _check(tree: PyTree, spec: PackSpec) -> list:
+    flat, treedef = jax.tree.flatten(tree)
+    if treedef != spec.treedef:
+        raise ValueError(f"tree structure {treedef} does not match "
+                         f"PackSpec structure {spec.treedef}")
+    for leaf, ls in zip(flat, spec.leaves):
+        if tuple(leaf.shape) != ls.shape:
+            raise ValueError(f"leaf shape {leaf.shape} != spec {ls.shape}")
+    return flat
+
+
+def pack(tree: PyTree, spec: PackSpec | None = None,
+         dtype=jnp.float32) -> jax.Array:
+    """Flatten ``tree`` into one ``(spec.padded,)`` buffer of ``dtype``.
+
+    The pad region is zero-filled; elementwise updates on the buffer keep
+    it zero, so nothing ever needs re-padding.
+    """
+    spec = spec or pack_spec(tree)
+    flat = _check(tree, spec)
+    parts = [jnp.ravel(l).astype(dtype) for l in flat]
+    if spec.padded > spec.size:
+        parts.append(jnp.zeros((spec.padded - spec.size,), dtype))
+    return jnp.concatenate(parts)
+
+
+def pack_stacked(tree: PyTree, spec: PackSpec, dtype=jnp.float32) -> jax.Array:
+    """Pack a tree whose leaves carry a leading stacked axis K → (K, padded).
+
+    ``spec`` describes the *unstacked* leaves; every leaf must share the
+    same leading dim (the K replicas of Algorithm 1).
+    """
+    flat, treedef = jax.tree.flatten(tree)
+    if treedef != spec.treedef:
+        raise ValueError("stacked tree structure does not match PackSpec")
+    if not flat:
+        raise ValueError("pack_stacked needs at least one leaf to infer K")
+    K = flat[0].shape[0]
+    parts = []
+    for leaf, ls in zip(flat, spec.leaves):
+        if tuple(leaf.shape) != (K,) + ls.shape:
+            raise ValueError(f"stacked leaf {leaf.shape} != (K,)+{ls.shape}")
+        parts.append(jnp.reshape(leaf, (K, ls.size)).astype(dtype))
+    if spec.padded > spec.size:
+        parts.append(jnp.zeros((K, spec.padded - spec.size), dtype))
+    return jnp.concatenate(parts, axis=1)
+
+
+def unpack(buf: jax.Array, spec: PackSpec, like: PyTree | None = None
+           ) -> PyTree:
+    """Slice the packed buffer back into leaf views.
+
+    Leading batch dims of ``buf`` (e.g. a ring row set ``(I, padded)``) are
+    preserved on every leaf. Dtypes come from ``like`` when given, else
+    from the spec (the dtypes of the tree the spec was computed from).
+    """
+    lead = buf.shape[:-1]
+    like_flat = _check(like, spec) if like is not None else None
+    leaves = []
+    for i, ls in enumerate(spec.leaves):
+        dt = like_flat[i].dtype if like_flat is not None else ls.dtype
+        x = jax.lax.slice_in_dim(buf, ls.offset, ls.offset + ls.size,
+                                 axis=buf.ndim - 1)
+        leaves.append(jnp.reshape(x, lead + ls.shape).astype(dt))
+    return jax.tree.unflatten(spec.treedef, leaves)
+
+
+def unpack_leaf(buf: jax.Array, spec: PackSpec, index: int,
+                dtype=None) -> jax.Array:
+    """View of a single leaf (by flatten order) of the packed buffer."""
+    ls = spec.leaves[index]
+    x = jax.lax.slice_in_dim(buf, ls.offset, ls.offset + ls.size,
+                             axis=buf.ndim - 1)
+    return jnp.reshape(x, buf.shape[:-1] + ls.shape).astype(dtype or ls.dtype)

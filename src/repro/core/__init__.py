@@ -1,11 +1,12 @@
 from repro.core.hwa import (HWAConfig, HWAState, hwa_init, hwa_inner_step,
-                            hwa_local_inner_step, hwa_sync, hwa_sync_named)
+                            hwa_local_inner_step, hwa_sync, hwa_sync_named,
+                            window_push_packed)
 from repro.core.online import (online_average, online_average_named,
                                broadcast_to_replicas, replica_divergence,
                                replica_divergence_named)
 from repro.core.offline import (
     WindowState, window_init, window_update, window_average,
-    streaming_window_update,
+    window_update_packed, window_average_packed, streaming_window_update,
 )
 from repro.core.baselines import (
     SWAState, swa_init, swa_update,

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.common.pytree import tree_mean_axis0
-from repro.core.offline import WindowState, window_init, window_update
+from repro.core.offline import WindowState, window_init
 from repro.core.online import broadcast_to_replicas, online_average, \
     online_average_named, replica_divergence
 from repro.optim.base import Optimizer, apply_updates
@@ -91,50 +91,117 @@ def hwa_inner_step(cfg: HWAConfig, state: HWAState, batches: PyTree,
                        "per_replica_loss": losses, **scalar}
 
 
-def _window_push(cfg: HWAConfig, outer: PyTree, window_state: WindowState,
-                 cycle: jax.Array) -> tuple[WindowState, PyTree, jax.Array]:
-    """Shared Algorithm-2 tail of both sync paths: push W̄ into the slide
-    window unless the cycle misses ``window_stride`` (sparse window,
-    §III-B), with W̿ = W̄ until the first entry exists.
+def window_push_packed(cfg: HWAConfig, new_buf: jax.Array,
+                       window_state: WindowState, cycle: jax.Array,
+                       use_kernel: bool | None = None
+                       ) -> tuple[WindowState, jax.Array, jax.Array]:
+    """Packed-in/packed-out Algorithm-2 tail: push the packed W̄ buffer
+    into the slide window unless the cycle misses ``window_stride``
+    (sparse window, §III-B), with W̿ = W̄ until the first entry exists.
 
-    Returns (window state, W̿_e, incremented cycle counter).
+    Returns (window state, packed W̿_e, incremented cycle counter). Keeps
+    everything in the packed (P,) layout so callers control when (and
+    under what sharding) the final unpack happens. ``use_kernel``
+    overrides ``cfg.use_kernels`` (multi-device bundles must force it
+    off: Pallas calls are opaque to the GSPMD partitioner).
     """
+    from repro.core.offline import window_average_packed, \
+        window_update_packed
+
+    use_kernel = cfg.use_kernels if use_kernel is None else use_kernel
     new_cycle = cycle + 1
     take = jnp.mod(new_cycle - 1, cfg.window_stride) == 0
 
     def do_update(ws):
-        return window_update(ws, outer, use_kernel=cfg.use_kernels)
+        return window_update_packed(ws, new_buf, use_kernel=use_kernel)
 
     def skip_update(ws):
-        from repro.core.offline import window_average
-        return ws, window_average(ws, like=outer)
+        return ws, window_average_packed(ws)
 
     if cfg.window_stride == 1:
-        new_ws, wa = do_update(window_state)
+        new_ws, avg = do_update(window_state)
     else:
-        new_ws, wa = jax.lax.cond(take, do_update, skip_update, window_state)
-    first = new_ws.count == 0
-    wa = jax.tree.map(lambda w, o: jnp.where(first, o, w), wa, outer)
-    return new_ws, wa, new_cycle
+        new_ws, avg = jax.lax.cond(take, do_update, skip_update,
+                                   window_state)
+    avg = jnp.where(new_ws.count == 0, new_buf, avg)
+    return new_ws, avg, new_cycle
+
+
+def _window_push(cfg: HWAConfig, outer: PyTree, window_state: WindowState,
+                 cycle: jax.Array) -> tuple[WindowState, PyTree, jax.Array]:
+    """Tree-level wrapper of :func:`window_push_packed`: packs W̄ once,
+    unpacks only the final W̿."""
+    from repro.common.packing import pack, unpack
+
+    new_ws, avg, new_cycle = window_push_packed(
+        cfg, pack(outer, window_state.spec), window_state, cycle)
+    return new_ws, unpack(avg, window_state.spec, like=outer), new_cycle
+
+
+def _sync_fused(cfg: HWAConfig, state: HWAState
+                ) -> tuple[PyTree, WindowState, PyTree, jax.Array]:
+    """Whole sync in ONE fused kernel launch over packed state.
+
+    Packs the K replicas into (K, P), then a single ``pallas_call``
+    computes the replica mean AND the window update — (K+2) reads +
+    3 writes, no W̄ round-trip through HBM. W̄ for the restart is read
+    back from the just-written ring slot; only W̄/W̿ are unpacked.
+    """
+    from repro.common.packing import pack_stacked, unpack
+    from repro.kernels import ops as kops
+
+    ws = state.window_state
+    I = ws.window
+    stacked = pack_stacked(state.inner, ws.spec)
+    idx = ws.next_idx
+    full_flag = (ws.count >= I).astype(jnp.float32)
+    new_count = jnp.minimum(ws.count + 1, I)
+    inv_count = 1.0 / new_count.astype(jnp.float32)
+    ring, total, avg = kops.hwa_sync_packed(
+        stacked, ws.ring, ws.total, idx, full_flag, inv_count)
+    new_ws = WindowState(ring=ring, total=total, count=new_count,
+                         next_idx=jnp.mod(idx + 1, I), window=I,
+                         kind=ws.kind, spec=ws.spec)
+    outer = unpack(ring[idx], ws.spec)        # the slot just written IS W̄_e
+    wa = unpack(avg, ws.spec)
+    return outer, new_ws, wa, state.cycle + 1
 
 
 def hwa_sync(cfg: HWAConfig, state: HWAState) -> tuple[HWAState, PyTree]:
     """End-of-cycle sync (Algorithm 1 lines 8-12 + Algorithm 2).
 
     Returns (new state, metrics). The window update is skipped on cycles
-    not matching ``window_stride`` (sparse window, §III-B).
+    not matching ``window_stride`` (sparse window, §III-B). On the kernel
+    path with a dense f32 ring window the sync is one fused launch
+    (:func:`_sync_fused`); otherwise mean and window update run as two
+    packed single-launch steps.
     """
     div = replica_divergence(state.inner)
-    outer = online_average(state.inner, use_kernel=cfg.use_kernels)
+    ws = state.window_state
+    if (cfg.use_kernels and ws.kind == "ring" and cfg.window_stride == 1
+            and ws.ring is not None and ws.ring.dtype == jnp.float32):
+        outer, window_state, wa, cycle = _sync_fused(cfg, state)
+    elif cfg.use_kernels and jax.tree.leaves(state.inner):
+        # two packed launches (mean, window push) with no intermediate
+        # unpack/re-pack round-trip of the full parameter set
+        from repro.common.packing import pack_stacked, unpack
+        from repro.kernels import ops as kops
+        buf = kops.online_mean_packed(pack_stacked(state.inner, ws.spec))
+        outer = unpack(buf, ws.spec)
+        window_state, avg, cycle = window_push_packed(cfg, buf, ws,
+                                                      state.cycle)
+        wa = unpack(avg, ws.spec)
+    else:
+        outer = online_average(state.inner)
+        window_state, wa, cycle = _window_push(cfg, outer,
+                                               state.window_state,
+                                               state.cycle)
     inner = broadcast_to_replicas(outer, cfg.n_replicas)
     if cfg.avg_opt_state:
         opt_mean = tree_mean_axis0(state.inner_opt)
         inner_opt = broadcast_to_replicas(opt_mean, cfg.n_replicas)
     else:
         inner_opt = state.inner_opt
-
-    window_state, wa, cycle = _window_push(cfg, outer, state.window_state,
-                                           state.cycle)
     new_state = HWAState(inner=inner, inner_opt=inner_opt,
                          window_state=window_state, wa=wa,
                          cycle=cycle, step=state.step)
@@ -168,12 +235,20 @@ def hwa_sync_named(cfg: HWAConfig, params: PyTree,
                    window_state: WindowState, cycle: jax.Array,
                    axis_name: str = "replica"
                    ) -> tuple[PyTree, WindowState, PyTree, jax.Array]:
-    """Mesh-native end-of-cycle sync: W̄_e = pmean(W^k) over ``axis_name``
+    """Named-axis end-of-cycle sync: W̄_e = pmean(W^k) over ``axis_name``
     — the single inter-replica collective of the whole cycle — then the
     slide-window update, computed identically (replica-invariantly) on
     every replica since pmean leaves all replicas with the same W̄_e.
 
     Returns (restarted params, window state, W̿_e, new cycle counter).
+
+    .. warning:: Safe under ``vmap(axis_name=...)``; do NOT call inside a
+       partial-auto ``shard_map`` on jax 0.4.x — the window push packs W̄
+       from auto-sharded leaves, and XLA miscompiles that assembly in
+       manual subgroups (values come back 2×). The mesh-native sync
+       bundle (``launch.steps.make_mesh_hwa_sync_step``) therefore
+       pmeans inside the shard_map and window-pushes outside it; use
+       that structure on meshes.
     """
     outer = online_average_named(params, axis_name)
     new_ws, wa, new_cycle = _window_push(cfg, outer, window_state, cycle)

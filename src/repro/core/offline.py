@@ -6,15 +6,24 @@ Three implementations with one state container:
 
 - **ring** (exact): a ring buffer of the last I outer weights + a running
   f32 sum. Update cost is O(params) HBM traffic independent of I; memory is
-  I× params *per shard* (the buffer inherits the params' sharding —
-  DESIGN.md §2). The fused Pallas kernel (`repro.kernels.wa_update`) cuts
-  the update from 6 reads + 3 writes to 3 reads + 2 writes.
+  I× params *per shard*. The fused Pallas kernel (`repro.kernels.wa_update`)
+  cuts the update from 6 reads + 3 writes to 3 reads + 3 writes
+  (ring slot + total + new in; ring slot + total + avg out), one pass.
 - **streaming** (beyond paper, O(1) memory): a windowed running mean
   ``wa += (outer - wa)/min(count, I)`` — SWA's running average whose gain
   is clamped at 1/I, an EMA-like approximation of the slide window for
   models too large to buffer I copies of.
 - **sparse** stride (paper §III-B remark): only every ``stride``-th cycle
   enters the window (handled by the caller skipping updates).
+
+**Packed state.** The window state is held PERSISTENTLY PACKED
+(``repro.common.packing``): ``ring`` is one ``(I, P)`` buffer and
+``total`` one ``(P,)`` buffer over the whole parameter set, packed once at
+:func:`window_init` and never per update. The update is therefore O(1)
+kernel launches regardless of leaf count, with zero per-call padding and
+real buffer donation; only the final W̿ is unpacked back to leaf views.
+Packing is layout-only, so results are bit-identical (0 ULP) to the
+per-leaf formulation.
 """
 from __future__ import annotations
 
@@ -24,93 +33,103 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.common.pytree import tree_scale, tree_zeros_like
+from repro.common.packing import PackSpec, pack, pack_spec, unpack
 
 PyTree = Any
 
 
 @dataclasses.dataclass
 class WindowState:
-    ring: PyTree | None      # (I, ...) stacked outer weights (ring mode)
-    total: PyTree            # f32 running sum (ring) or running mean (streaming)
+    ring: jax.Array | None   # (I, P) packed outer weights (ring mode)
+    total: jax.Array         # (P,) f32 running sum (ring) / mean (streaming)
     count: jax.Array         # filled slots (≤ I)
     next_idx: jax.Array      # ring write cursor
     window: int
     kind: str = "ring"       # ring | streaming
+    spec: PackSpec | None = None   # static packed layout of the param tree
 
 
 jax.tree_util.register_dataclass(
     WindowState, data_fields=["ring", "total", "count", "next_idx"],
-    meta_fields=["window", "kind"])
+    meta_fields=["window", "kind", "spec"])
 
 
-def window_init(params_like: PyTree, window: int, kind: str = "ring"
-                ) -> WindowState:
-    f32 = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params_like)
+def window_init(params_like: PyTree, window: int, kind: str = "ring",
+                ring_dtype=jnp.float32) -> WindowState:
+    """Pack once; every later update runs on the packed buffers in place."""
+    spec = pack_spec(params_like)
     ring = None
     if kind == "ring":
-        ring = jax.tree.map(
-            lambda x: jnp.zeros((window,) + x.shape, jnp.float32), params_like)
-    return WindowState(ring=ring, total=f32,
+        ring = jnp.zeros((window, spec.padded), ring_dtype)
+    return WindowState(ring=ring, total=jnp.zeros((spec.padded,), jnp.float32),
                        count=jnp.zeros((), jnp.int32),
                        next_idx=jnp.zeros((), jnp.int32),
-                       window=window, kind=kind)
+                       window=window, kind=kind, spec=spec)
 
 
 def window_update(state: WindowState, outer: PyTree, *,
                   use_kernel: bool = False) -> tuple[WindowState, PyTree]:
-    """Push W̄_e; return (new state, current W̿_e). jit-safe."""
+    """Push W̄_e; return (new state, current W̿_e). jit-safe.
+
+    One fused op over the whole packed parameter set (one ``pallas_call``
+    when ``use_kernel``); only W̿ is unpacked, the ring never is.
+    """
     if state.kind == "streaming":
         return streaming_window_update(state, outer)
+    new_state, avg = window_update_packed(
+        state, pack(outer, state.spec), use_kernel=use_kernel)
+    return new_state, unpack(avg, state.spec, like=outer)
+
+
+def window_update_packed(state: WindowState, new: jax.Array, *,
+                         use_kernel: bool = False
+                         ) -> tuple[WindowState, jax.Array]:
+    """Packed-in/packed-out window update: ``new`` is a (P,) f32 buffer;
+    returns (new state, packed W̿). The no-unpack hot path for callers
+    that already hold packed outer weights (e.g. the fused sync)."""
+    if state.kind == "streaming":
+        n = jnp.minimum(state.count + 1, state.window).astype(jnp.float32)
+        total = state.total + (new - state.total) / n
+        return WindowState(
+            ring=None, total=total,
+            count=jnp.minimum(state.count + 1, state.window),
+            next_idx=state.next_idx, window=state.window,
+            kind="streaming", spec=state.spec), total
     I = state.window
     idx = state.next_idx
     full_flag = (state.count >= I).astype(jnp.float32)
     new_count = jnp.minimum(state.count + 1, I)
     inv_count = 1.0 / new_count.astype(jnp.float32)
 
-    if use_kernel:
+    if use_kernel and state.ring.dtype == jnp.float32:
         from repro.kernels import ops as kops
-
-        def upd(ring, total, new):
-            return kops.wa_window_update(ring, total, new, idx, full_flag,
-                                         inv_count)
+        ring, total, avg = kops.wa_window_update_packed(
+            state.ring, state.total, new, idx, full_flag, inv_count)
     else:
-        from repro.kernels.ref import wa_window_update_ref as upd_ref
+        from repro.kernels.ref import wa_window_update_ref
+        ring, total, avg = wa_window_update_ref(
+            state.ring, state.total, new, idx, full_flag, inv_count)
 
-        def upd(ring, total, new):
-            return upd_ref(ring, total, new.astype(jnp.float32), idx,
-                           full_flag, inv_count)
-
-    triples = jax.tree.map(upd, state.ring, state.total, outer)
-    is_triple = lambda x: isinstance(x, tuple) and len(x) == 3
-    new_ring = jax.tree.map(lambda t: t[0], triples, is_leaf=is_triple)
-    new_total = jax.tree.map(lambda t: t[1], triples, is_leaf=is_triple)
-    wa = jax.tree.map(lambda t, o: t[2].astype(o.dtype), triples, outer,
-                      is_leaf=is_triple)
-
-    new_state = WindowState(ring=new_ring, total=new_total, count=new_count,
+    new_state = WindowState(ring=ring, total=total, count=new_count,
                             next_idx=jnp.mod(idx + 1, I), window=I,
-                            kind=state.kind)
-    return new_state, wa
+                            kind=state.kind, spec=state.spec)
+    return new_state, avg
 
 
 def streaming_window_update(state: WindowState, outer: PyTree
                             ) -> tuple[WindowState, PyTree]:
-    n = jnp.minimum(state.count + 1, state.window).astype(jnp.float32)
-    new_total = jax.tree.map(
-        lambda m, x: m + (x.astype(jnp.float32) - m) / n, state.total, outer)
-    new_state = WindowState(ring=None, total=new_total,
-                            count=jnp.minimum(state.count + 1, state.window),
-                            next_idx=state.next_idx, window=state.window,
-                            kind="streaming")
-    wa = jax.tree.map(lambda m, x: m.astype(x.dtype), new_total, outer)
-    return new_state, wa
+    new_state, total = window_update_packed(state, pack(outer, state.spec))
+    return new_state, unpack(total, state.spec, like=outer)
+
+
+def window_average_packed(state: WindowState) -> jax.Array:
+    """Current W̿ as the packed (P,) f32 buffer (no unpacking)."""
+    if state.kind == "streaming":
+        return state.total
+    denom = jnp.maximum(state.count, 1).astype(jnp.float32)
+    return state.total / denom
 
 
 def window_average(state: WindowState, like: PyTree) -> PyTree:
     """Current W̿ in the dtype of ``like``."""
-    denom = jnp.maximum(state.count, 1).astype(jnp.float32)
-    if state.kind == "streaming":
-        return jax.tree.map(lambda m, x: m.astype(x.dtype), state.total, like)
-    return jax.tree.map(lambda s, x: (s / denom).astype(x.dtype),
-                        state.total, like)
+    return unpack(window_average_packed(state), state.spec, like=like)

@@ -23,10 +23,21 @@ from repro.common.pytree import tree_mean_axis0
 
 
 def online_average(stacked_params: Any, *, use_kernel: bool = False) -> Any:
-    """Outer weights W̄_e from stacked inner weights (K, ...)."""
-    if use_kernel:
+    """Outer weights W̄_e from stacked inner weights (K, ...).
+
+    The kernel path packs the K replicas into one (K, P) tile-aligned
+    buffer (``repro.common.packing``) and reduces it in exactly ONE
+    ``pallas_call`` regardless of leaf count; the result is unpacked back
+    to leaf views in the original dtypes.
+    """
+    if use_kernel and jax.tree.leaves(stacked_params):
+        from repro.common.packing import pack_spec, pack_stacked, unpack
         from repro.kernels import ops as kops
-        return jax.tree.map(kops.online_mean, stacked_params)
+        spec = pack_spec(jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+            stacked_params))
+        buf = pack_stacked(stacked_params, spec)
+        return unpack(kops.online_mean_packed(buf), spec)
     return tree_mean_axis0(stacked_params)
 
 

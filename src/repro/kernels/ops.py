@@ -1,7 +1,17 @@
 """Jit'd public wrappers around the Pallas kernels.
 
-Handle arbitrary parameter-leaf shapes (flatten + pad to tile multiples),
-head-dim padding for attention, and interpret-mode fallback off-TPU.
+Two families:
+
+- **packed** (`*_packed`, `hwa_sync_packed`): operate on the contiguous
+  tile-aligned buffers of ``repro.common.packing`` — one launch for the
+  whole parameter set, zero per-call padding, ring/total donated in place.
+  This is the hot path the WA state machine runs on.
+- **per-leaf** (`wa_window_update`, `online_mean`): flatten + pad ONE
+  parameter leaf per call. Kept as the benchmark baseline and for ad-hoc
+  single-array use; a tree-mapped sync over L leaves costs L launches and
+  re-pads (defeating donation) every call.
+
+Plus head-dim padding for attention, and interpret-mode fallback off-TPU.
 """
 from __future__ import annotations
 
@@ -11,13 +21,66 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.common.packing import ALIGN
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.wa_update import (TILE_COLS, TILE_ROWS, online_mean_2d,
-                                     wa_window_update_2d)
+                                     wa_sync_fused_2d, wa_window_update_2d)
+
+# A packed buffer reshapes to (P // TILE_COLS, TILE_COLS) with the row
+# count a TILE_ROWS multiple — the kernels' exact tiling, no padding.
+assert ALIGN == TILE_ROWS * TILE_COLS, (ALIGN, TILE_ROWS, TILE_COLS)
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def _tiles(buf):
+    """(… , P) -> (…, P // TILE_COLS, TILE_COLS) view, P % ALIGN == 0."""
+    assert buf.shape[-1] % ALIGN == 0, buf.shape
+    return buf.reshape(buf.shape[:-1] + (-1, TILE_COLS))
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def wa_window_update_packed(ring, total, new, idx, full_flag, inv_count):
+    """Fused slide-window update over the WHOLE packed parameter set.
+
+    ring: (I, P) f32; total/new: (P,) f32 with P % ALIGN == 0 (a
+    ``packing.PackSpec.padded`` buffer). Exactly one kernel launch; ring
+    and total are donated and updated in place (no per-call pad/reshape
+    copies — the reshapes here are metadata-only bitcasts).
+    Returns (ring', total', avg).
+    """
+    I, Pn = ring.shape
+    ring_o, total_o, avg = wa_window_update_2d(
+        _tiles(ring), _tiles(total), _tiles(new),
+        jnp.asarray(idx, jnp.int32), jnp.asarray(full_flag, jnp.float32),
+        jnp.asarray(inv_count, jnp.float32), interpret=_interpret())
+    return (ring_o.reshape(I, Pn), total_o.reshape(Pn), avg.reshape(Pn))
+
+
+@jax.jit
+def online_mean_packed(stacked):
+    """(K, P) packed replicas -> (P,) f32 mean. One kernel launch."""
+    K, Pn = stacked.shape
+    return online_mean_2d(_tiles(stacked), interpret=_interpret()).reshape(Pn)
+
+
+@functools.partial(jax.jit, donate_argnums=(1, 2))
+def hwa_sync_packed(stacked, ring, total, idx, full_flag, inv_count):
+    """The whole HWA sync in ONE launch over packed state.
+
+    stacked: (K, P) packed replicas; ring: (I, P); total: (P,) — f32,
+    P % ALIGN == 0. Fuses the K-replica mean with the slide-window update:
+    (K+2)·N reads + 3·N writes, no intermediate W̄ round-trip through HBM.
+    Returns (ring', total', avg); W̄ for the replica restart is ring'[idx].
+    """
+    I, Pn = ring.shape
+    ring_o, total_o, avg = wa_sync_fused_2d(
+        _tiles(stacked), _tiles(ring), _tiles(total),
+        jnp.asarray(idx, jnp.int32), jnp.asarray(full_flag, jnp.float32),
+        jnp.asarray(inv_count, jnp.float32), interpret=_interpret())
+    return (ring_o.reshape(I, Pn), total_o.reshape(Pn), avg.reshape(Pn))
 
 
 def _pad_flat(x, tile=TILE_ROWS * TILE_COLS):

@@ -25,6 +25,18 @@ def online_mean_ref(stacked):
     return jnp.mean(stacked.astype(jnp.float32), axis=0)
 
 
+def wa_sync_fused_ref(stacked, ring, total, idx, full_flag, inv_count):
+    """Fused sync oracle: K-replica mean then window update.
+
+    Matches the fused kernel bitwise: mean = sum * (1/K), not jnp.mean's
+    sum / K (the two differ by up to 1 ULP for non-power-of-two K).
+    Returns (ring', total', avg); W̄ is ring'[idx].
+    """
+    K = stacked.shape[0]
+    mean = jnp.sum(stacked.astype(jnp.float32), axis=0) * (1.0 / K)
+    return wa_window_update_ref(ring, total, mean, idx, full_flag, inv_count)
+
+
 def attention_ref(q, k, v, *, causal=True, window=None, logit_softcap=0.0,
                   sm_scale=None):
     """Naive GQA attention. q: (B,S,Hq,D); k/v: (B,T,Hkv,D)."""

@@ -21,8 +21,26 @@ parameter set (DESIGN.md §2). Two kernels:
 2. ``online_mean_kernel`` — K-replica mean (W̄ = (1/K)Σ W^k) fused with
    the f32 cast, tiled so each program reads K sub-tiles and writes one.
 
-Both operate on 2-D (rows, 128·k) views; ``ops.py`` handles flattening /
-padding of arbitrary parameter leaves and ``ref.py`` holds the jnp oracles.
+3. ``wa_sync_fused_kernel`` — the ENTIRE sync in one pass over packed
+   state: K-replica mean and slide-window update fused, so W̄ never
+   round-trips through HBM. Each tile does::
+
+       mean      = (1/K) Σ_k stacked[k, tile]   (K reads)
+       old       = ring[idx, tile]              (read)
+       total'    = total + mean - full*old      (read total)
+       ring[idx] = mean                         (write — ring slot IS W̄)
+       total'                                    (write)
+       avg       = total' * inv_count           (write)
+
+   ⇒ (K+2)·N reads + 3·N writes, vs (K+3)·N reads + 4·N writes for the
+   two-kernel pipeline (mean: K reads + 1 write; update: 3 reads + 3
+   writes) with an intermediate W̄ buffer in HBM. The caller recovers W̄
+   for the replica restart as ``ring'[idx]``.
+
+All kernels operate on 2-D (rows, 128·k) views. The packed path
+(``repro.common.packing``) feeds them one tile-aligned buffer for the
+whole parameter set — zero per-call padding; the legacy per-leaf wrappers
+in ``ops.py`` flatten/pad each leaf. ``ref.py`` holds the jnp oracles.
 """
 from __future__ import annotations
 
@@ -39,15 +57,39 @@ TILE_ROWS = 8
 TILE_COLS = 1024
 
 
+# One scalar-prefetch operand carries [idx, full_flag_bits,
+# inv_count_bits] (i32; the f32 scalars are bitcast). Encoder and decoder
+# below are the single source of truth for that positional layout — both
+# window-update kernels decode through them.
+
+
+def _pack_scalars(idx, full_flag, inv_count):
+    return jnp.stack([
+        idx.astype(jnp.int32),
+        jax.lax.bitcast_convert_type(full_flag.astype(jnp.float32), jnp.int32),
+        jax.lax.bitcast_convert_type(inv_count.astype(jnp.float32), jnp.int32),
+    ])
+
+
+def _unpack_scalars(scalars_ref):
+    """(full_flag, inv_count) as f32; the idx slot is only read by the
+    ring BlockSpec index_map (scalar prefetch)."""
+    return (jax.lax.bitcast_convert_type(scalars_ref[1], jnp.float32),
+            jax.lax.bitcast_convert_type(scalars_ref[2], jnp.float32))
+
+
+# Shared BlockSpecs: the ring is addressed at HBM row ``idx`` straight
+# from the prefetched scalars (the untouched I−1 rows are never moved);
+# flat operands tile the (R, C) plane.
+_RING_SPEC = pl.BlockSpec((1, TILE_ROWS, TILE_COLS),
+                          lambda i, j, s: (s[0], i, j))
+_FLAT_SPEC = pl.BlockSpec((TILE_ROWS, TILE_COLS), lambda i, j, s: (i, j))
+
+
 def _wa_window_update_kernel(scalars_ref, ring_ref, total_ref, new_ref,
                              ring_out_ref, total_out_ref, avg_ref):
-    """One (TILE_ROWS, TILE_COLS) tile of the fused window update.
-
-    scalars_ref holds [idx, full_flag_bits, inv_count_bits] (i32); the
-    f32 scalars are bitcast so a single scalar-prefetch operand suffices.
-    """
-    full = jax.lax.bitcast_convert_type(scalars_ref[1], jnp.float32)
-    inv_count = jax.lax.bitcast_convert_type(scalars_ref[2], jnp.float32)
+    """One (TILE_ROWS, TILE_COLS) tile of the fused window update."""
+    full, inv_count = _unpack_scalars(scalars_ref)
     old = ring_ref[0]                       # ring block is (1, rows, cols)
     new = new_ref[...]
     total = total_ref[...] + new - full * old
@@ -65,22 +107,11 @@ def wa_window_update_2d(ring, total, new, idx, full_flag, inv_count,
     I, R, C = ring.shape
     assert total.shape == (R, C) and new.shape == (R, C)
     assert R % TILE_ROWS == 0 and C % TILE_COLS == 0, (R, C)
-    grid = (R // TILE_ROWS, C // TILE_COLS)
-    scalars = jnp.stack([
-        idx.astype(jnp.int32),
-        jax.lax.bitcast_convert_type(full_flag.astype(jnp.float32), jnp.int32),
-        jax.lax.bitcast_convert_type(inv_count.astype(jnp.float32), jnp.int32),
-    ])
-
-    ring_spec = pl.BlockSpec((1, TILE_ROWS, TILE_COLS),
-                             lambda i, j, s: (s[0], i, j))
-    flat_spec = pl.BlockSpec((TILE_ROWS, TILE_COLS), lambda i, j, s: (i, j))
-
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=grid,
-        in_specs=[ring_spec, flat_spec, flat_spec],
-        out_specs=[ring_spec, flat_spec, flat_spec],
+        grid=(R // TILE_ROWS, C // TILE_COLS),
+        in_specs=[_RING_SPEC, _FLAT_SPEC, _FLAT_SPEC],
+        out_specs=[_RING_SPEC, _FLAT_SPEC, _FLAT_SPEC],
     )
     ring_out, total_out, avg = pl.pallas_call(
         _wa_window_update_kernel,
@@ -90,7 +121,52 @@ def wa_window_update_2d(ring, total, new, idx, full_flag, inv_count,
                    jax.ShapeDtypeStruct(total.shape, jnp.float32)],
         input_output_aliases={1: 0, 2: 1},   # ring->ring_out, total->total_out
         interpret=interpret,
-    )(scalars, ring, total, new)
+    )(_pack_scalars(idx, full_flag, inv_count), ring, total, new)
+    return ring_out, total_out, avg
+
+
+def _wa_sync_fused_kernel(scalars_ref, stacked_ref, ring_ref, total_ref,
+                          ring_out_ref, total_out_ref, avg_ref, *,
+                          inv_k: float):
+    """One tile of the fused K-replica-mean + window update (whole sync)."""
+    full, inv_count = _unpack_scalars(scalars_ref)
+    mean = jnp.sum(stacked_ref[...].astype(jnp.float32), axis=0) * inv_k
+    old = ring_ref[0]                       # ring block is (1, rows, cols)
+    total = total_ref[...] + mean - full * old
+    ring_out_ref[0] = mean                  # the slot IS W̄_e
+    total_out_ref[...] = total
+    avg_ref[...] = total * inv_count
+
+
+def wa_sync_fused_2d(stacked, ring, total, idx, full_flag, inv_count,
+                     *, interpret: bool = True):
+    """Whole HWA sync, one launch. stacked: (K, R, C); ring: (I, R, C);
+    total: (R, C) — all f32, R % TILE_ROWS == 0, C % TILE_COLS == 0.
+
+    Returns (ring', total', avg) with ring'[idx] = W̄ = mean_k stacked[k]
+    and avg = W̿. ring/total are donated (aliased in place).
+    """
+    K, R, C = stacked.shape
+    assert ring.shape[1:] == (R, C) and total.shape == (R, C), \
+        (stacked.shape, ring.shape, total.shape)
+    assert R % TILE_ROWS == 0 and C % TILE_COLS == 0, (R, C)
+    stacked_spec = pl.BlockSpec((K, TILE_ROWS, TILE_COLS),
+                                lambda i, j, s: (0, i, j))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(R // TILE_ROWS, C // TILE_COLS),
+        in_specs=[stacked_spec, _RING_SPEC, _FLAT_SPEC],
+        out_specs=[_RING_SPEC, _FLAT_SPEC, _FLAT_SPEC],
+    )
+    ring_out, total_out, avg = pl.pallas_call(
+        functools.partial(_wa_sync_fused_kernel, inv_k=1.0 / K),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct(ring.shape, jnp.float32),
+                   jax.ShapeDtypeStruct(total.shape, jnp.float32),
+                   jax.ShapeDtypeStruct(total.shape, jnp.float32)],
+        input_output_aliases={2: 0, 3: 1},   # ring->ring_out, total->total_out
+        interpret=interpret,
+    )(_pack_scalars(idx, full_flag, inv_count), stacked, ring, total)
     return ring_out, total_out, avg
 
 

@@ -189,6 +189,8 @@ def run_combo(arch, shape_name, mesh_kind, step_kind="auto", hwa_k=2,
     t2 = time.time()
 
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):    # jax 0.4.x returns [dict]
+        ca = ca[0] if ca else {}
     ma = compiled.memory_analysis()
     # loop-aware structural analysis (XLA cost_analysis counts while
     # bodies once — verified; analyze_hlo multiplies trip counts)

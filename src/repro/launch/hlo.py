@@ -177,6 +177,40 @@ def collectives_crossing_axis(hlo_text: str, mesh, axis: str
     return hits
 
 
+# --------------------------------------------------- kernel-launch counting
+#
+# The packed WA path's contract is O(1) launches per sync regardless of
+# parameter-leaf count. Counted structurally: ``pallas_call`` equations in
+# the jaxpr (robust in interpret mode, where the lowered HLO has no
+# custom-call marker), or ``custom-call`` ops targeting the TPU/Mosaic
+# kernel entry points in compiled HLO text.
+
+_PALLAS_CC_RE = re.compile(
+    r'custom-call.*custom_call_target="(?:tpu_custom_call|mosaic|'
+    r'__gpu\$xla\.gpu\.triton)"')
+
+
+def count_pallas_calls(obj) -> int:
+    """Number of Pallas kernel launches in a jaxpr (or ClosedJaxpr, or
+    anything with a ``.jaxpr``) or in lowered/compiled HLO text."""
+    if isinstance(obj, str):
+        return sum(1 for line in obj.splitlines()
+                   if _PALLAS_CC_RE.search(line))
+    jaxpr = obj
+    while hasattr(jaxpr, "jaxpr"):
+        jaxpr = jaxpr.jaxpr
+    count = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            count += 1
+        for param in eqn.params.values():
+            for sub in (param if isinstance(param, (list, tuple)) else
+                        (param,)):
+                if hasattr(sub, "eqns") or hasattr(sub, "jaxpr"):
+                    count += count_pallas_calls(sub)
+    return count
+
+
 def roofline_terms(flops_per_device: float, bytes_per_device: float,
                    traffic_bytes: float) -> dict:
     compute_s = flops_per_device / PEAK_FLOPS

@@ -14,7 +14,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.common.compat import shard_map
 from repro.core.hwa import (HWAConfig, hwa_inner_step, hwa_local_inner_step,
-                            hwa_sync, hwa_sync_named)
+                            hwa_sync)
 from repro.models.registry import LM
 from repro.optim import adamw, apply_updates, sgd
 from repro.sharding.rules import (ShardingRules, make_tp_rules,
@@ -47,12 +47,19 @@ def opt_state_dims(opt_state_abs, param_dims):
 
 @dataclasses.dataclass
 class StepBundle:
-    """A step function plus its abstract args and in/out shardings."""
+    """A step function plus its abstract args and in/out shardings.
+
+    ``pack_spec`` is set by the WA sync bundles: their window state (and
+    returned W̿) lives in the packed layout of ``repro.common.packing``;
+    consumers materialize leaf views with ``packing.unpack(buf,
+    bundle.pack_spec)``.
+    """
     fn: Any
     abstract_args: tuple
     in_shardings: tuple
     out_shardings: Any
     donate_argnums: tuple = ()
+    pack_spec: Any = None
 
     def lower(self, mesh: Mesh):
         jitted = jax.jit(self.fn, in_shardings=self.in_shardings,
@@ -245,55 +252,94 @@ def make_hwa_train_step(lm: LM, rules: ShardingRules, batch_specs, batch_dims,
         donate_argnums=(0, 1))
 
 
+def _packed_sharding(mesh: Mesh, padded: int, lead_dims: int = 0
+                     ) -> NamedSharding:
+    """Sharding for a packed WA buffer: split the packed dim over the
+    ``model`` axis when it divides (it always does — ``padded`` is a
+    multiple of 8192), else replicate. Follow-up (ROADMAP): richer packed
+    sharding over multiple mesh axes."""
+    ax = "model" if ("model" in mesh.shape
+                     and padded % mesh.shape["model"] == 0) else None
+    return NamedSharding(mesh, P(*([None] * lead_dims + [ax])))
+
+
 def make_hwa_sync_step(lm: LM, rules: ShardingRules, hwa_cfg: HWAConfig,
                        ring_dtype=jnp.float32) -> StepBundle:
     """Synchronization + window update: the once-per-H-steps collective.
 
     outer = mean over the replica axis (one all-reduce across pods);
-    inner ← broadcast(outer); slide-window update (sharded state).
+    inner ← broadcast(outer); slide-window update on PACKED state: the
+    ring is one (I, P) buffer and the total one (P,) buffer over the whole
+    parameter set (``repro.common.packing``), held packed across the jit
+    boundary so the donation of ring/total is a true in-place update
+    step-to-step — no per-leaf launches, no per-call padding. Callers
+    allocate the buffers from ``bundle.pack_spec``; W̿ is returned as
+    leaf views sliced from the packed result.
 
     Variants (EXPERIMENTS.md §Perf pair 3): exact f32 ring (paper),
     bf16 ring (2× window memory saving), or hwa_cfg.window_kind ==
     "streaming" (O(1) extra copies, windowed-running-mean approximation).
     """
-    from repro.core.offline import WindowState, window_update
+    from repro.common.packing import pack, pack_spec, pack_stacked, unpack
+    from repro.core.offline import WindowState, window_update_packed
     from repro.core.online import broadcast_to_replicas, online_average
 
     K = hwa_cfg.n_replicas
     I = hwa_cfg.window
     streaming = hwa_cfg.window_kind == "streaming"
+    # Pallas calls are opaque to the GSPMD partitioner: on a multi-device
+    # mesh XLA runs them per-shard with global-shape semantics, silently
+    # corrupting values. Kernels only on a single device; multi-device
+    # meshes take the identical-math jnp path (ROADMAP follow-up: wrap
+    # the kernel shard_map-manual over the packed dim).
+    use_kernel = hwa_cfg.use_kernels and rules.mesh.size == 1
     params_abs, param_dims = lm.abstract()
     stacked_abs = jax.tree.map(
         lambda s: jax.ShapeDtypeStruct((K,) + s.shape, s.dtype), params_abs)
     stacked_dims = _prefix_dims(param_dims, "replica")
-    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
-    ring_abs = jax.tree.map(
-        lambda s: jax.ShapeDtypeStruct((I,) + s.shape, ring_dtype),
-        params_abs)
-    ring_dims = _prefix_dims(param_dims, None)
-    total_abs = jax.tree.map(f32, params_abs)
+    spec = pack_spec(params_abs)
+    ring_abs = jax.ShapeDtypeStruct((I, spec.padded), ring_dtype)
+    total_abs = jax.ShapeDtypeStruct((spec.padded,), jnp.float32)
     scalar_i = jax.ShapeDtypeStruct((), jnp.int32)
+    r_sh = _packed_sharding(rules.mesh, spec.padded, lead_dims=1)
+    t_sh = _packed_sharding(rules.mesh, spec.padded)
+
+    def mean_and_buf(inner):
+        """(W̄ leaf views, packed W̄) without a pack/unpack round-trip.
+
+        The sharding constraint pins the packed buffer to the window
+        state's own sharding so the elementwise push stays shard-local
+        (GSPMD otherwise computes it as distributed partial sums + a
+        full-buffer all-reduce crossing every mesh axis).
+        """
+        if use_kernel:
+            from repro.kernels import ops as kops
+            buf = kops.online_mean_packed(pack_stacked(inner, spec))
+            outer = unpack(buf, spec)
+        else:
+            outer = online_average(inner)
+            buf = pack(outer, spec)
+        return outer, jax.lax.with_sharding_constraint(buf, t_sh)
 
     def step_ring(inner, ring, total, count, next_idx):
-        outer = online_average(inner)
+        outer, buf = mean_and_buf(inner)
         new_inner = broadcast_to_replicas(outer, K)
         ws = WindowState(ring=ring, total=total, count=count,
-                         next_idx=next_idx, window=I, kind="ring")
-        ws2, wa = window_update(ws, outer)
+                         next_idx=next_idx, window=I, kind="ring", spec=spec)
+        ws2, avg = window_update_packed(ws, buf, use_kernel=use_kernel)
+        wa = unpack(avg, spec)      # leaf views of W̿ (slices, no copy)
         return new_inner, ws2.ring, ws2.total, ws2.count, ws2.next_idx, wa
 
     def step_streaming(inner, total, count):
-        outer = online_average(inner)
+        outer, buf = mean_and_buf(inner)
         new_inner = broadcast_to_replicas(outer, K)
         ws = WindowState(ring=None, total=total, count=count,
                          next_idx=jnp.zeros((), jnp.int32), window=I,
-                         kind="streaming")
-        ws2, wa = window_update(ws, outer)
-        return new_inner, ws2.total, ws2.count, wa
+                         kind="streaming", spec=spec)
+        ws2, avg = window_update_packed(ws, buf)
+        return new_inner, ws2.total, ws2.count, unpack(avg, spec)
 
     p_sh = rules.tree_shardings(stacked_abs, stacked_dims)
-    r_sh = rules.tree_shardings(ring_abs, ring_dims)
-    t_sh = rules.tree_shardings(total_abs, param_dims)
     w_sh = rules.tree_shardings(params_abs, param_dims)
     s_sh = NamedSharding(rules.mesh, P())
     if streaming:
@@ -302,13 +348,13 @@ def make_hwa_sync_step(lm: LM, rules: ShardingRules, hwa_cfg: HWAConfig,
             abstract_args=(stacked_abs, total_abs, scalar_i),
             in_shardings=(p_sh, t_sh, s_sh),
             out_shardings=(p_sh, t_sh, s_sh, w_sh),
-            donate_argnums=(0, 1))
+            donate_argnums=(0, 1), pack_spec=spec)
     return StepBundle(
         fn=step_ring,
         abstract_args=(stacked_abs, ring_abs, total_abs, scalar_i, scalar_i),
         in_shardings=(p_sh, r_sh, t_sh, s_sh, s_sh),
         out_shardings=(p_sh, r_sh, t_sh, s_sh, s_sh, w_sh),
-        donate_argnums=(0, 1, 2))
+        donate_argnums=(0, 1, 2), pack_spec=spec)
 
 
 # ----------------------------------------------- mesh-native HWA (shard_map)
@@ -413,12 +459,21 @@ def make_mesh_hwa_sync_step(lm: LM, rules: ShardingRules, hwa_cfg: HWAConfig,
 
     Inside the shard_map body each replica pmeans its weights over the
     replica axis — the *only* inter-replica collective of the whole HWA
-    cycle — then performs the slide-window update redundantly on the
-    (now replica-invariant) outer weights. Window state rides along
-    replicated over replica and sharded over data/model per the rules,
-    exactly like the vmap-path sync bundle.
+    cycle. The slide-window update then runs OUTSIDE the manual region, in
+    plain GSPMD-land of the same jit, on PACKED state ((I, P) ring + (P,)
+    total over the whole parameter set) that stays packed across the jit
+    boundary. Two reasons for the split: the window input W̄ is
+    replica-invariant after the pmean, so the update carries zero
+    replica-axis traffic by construction; and XLA 0.4.x's partial-auto
+    manual subgroups miscompile the packed-buffer assembly (a gather
+    across auto-sharded leaves) when it happens inside the shard_map —
+    a spurious replica-axis reduction doubles the values (same
+    IsManualSubgroup fragility as the scan_unroll workaround).
     """
+    from repro.common.packing import pack, pack_spec, unpack
+    from repro.core.hwa import window_push_packed
     from repro.core.offline import WindowState
+    from repro.core.online import broadcast_to_replicas, online_average_named
 
     K = hwa_cfg.n_replicas
     I = hwa_cfg.window
@@ -430,36 +485,50 @@ def make_mesh_hwa_sync_step(lm: LM, rules: ShardingRules, hwa_cfg: HWAConfig,
     stacked_abs = jax.tree.map(
         lambda s: jax.ShapeDtypeStruct((K,) + s.shape, s.dtype), params_abs)
     stacked_dims = _prefix_dims(param_dims, "replica")
-    ring_abs = jax.tree.map(
-        lambda s: jax.ShapeDtypeStruct((I,) + s.shape, ring_dtype),
-        params_abs)
-    ring_dims = _prefix_dims(param_dims, None)
-    total_abs = jax.tree.map(
-        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), params_abs)
+    spec = pack_spec(params_abs)
+    ring_abs = jax.ShapeDtypeStruct((I, spec.padded), ring_dtype)
+    total_abs = jax.ShapeDtypeStruct((spec.padded,), jnp.float32)
     scalar_i = jax.ShapeDtypeStruct((), jnp.int32)
 
-    def local_sync(inner, ring, total, count, next_idx, cycle):
-        params = _squeeze0(inner)
-        ws = WindowState(ring=ring, total=total, count=count,
-                         next_idx=next_idx, window=I, kind="ring")
-        outer, ws2, wa, new_cycle = hwa_sync_named(
-            hwa_cfg, params, ws, cycle, replica_axis)
-        return (_expand0(outer), ws2.ring, ws2.total, ws2.count,
-                ws2.next_idx, wa, new_cycle)
+    def local_mean(inner):
+        """The one inter-replica collective: W̄ = pmean(W^k)."""
+        return online_average_named(_squeeze0(inner), replica_axis)
 
-    step = shard_map(
-        local_sync, mesh,
-        in_specs=(stacked_replica_specs(stacked_abs, replica_axis),
-                  replicated_specs(ring_abs), replicated_specs(total_abs),
-                  P(), P(), P()),
-        out_specs=(stacked_replica_specs(stacked_abs, replica_axis),
-                   replicated_specs(ring_abs), replicated_specs(total_abs),
-                   P(), P(), replicated_specs(params_abs), P()),
+    mean_fn = shard_map(
+        local_mean, mesh,
+        in_specs=(stacked_replica_specs(stacked_abs, replica_axis),),
+        out_specs=replicated_specs(params_abs),
         check_rep=False, auto=auto)
 
+    r_sh = _packed_sharding(mesh, spec.padded, lead_dims=1)
+    t_sh = _packed_sharding(mesh, spec.padded)
+
+    def step(inner, ring, total, count, next_idx, cycle):
+        outer = mean_fn(inner)
+        new_inner = broadcast_to_replicas(outer, K)
+        # Packing W̄ from per-leaf (data/model)-tiled shards into the
+        # contiguous buffer is a real layout redistribution: GSPMD
+        # materializes the concat as masked contributions + ONE
+        # param-size all-reduce spanning the whole mesh, once per sync
+        # (amortized by H; absent entirely on a single device). The
+        # constraint pins the buffer to the window state's sharding so
+        # the push itself stays shard-local; W̿ leaf views then slice
+        # from the already-assembled buffer for free. Follow-up in
+        # ROADMAP: align leaf tilings with packed ranges to make the
+        # assembly collective-free.
+        buf = jax.lax.with_sharding_constraint(pack(outer, spec), t_sh)
+        ws = WindowState(ring=ring, total=total, count=count,
+                         next_idx=next_idx, window=I, kind="ring", spec=spec)
+        # kernels only on a single device (Pallas is opaque to GSPMD —
+        # per-shard execution with global-shape semantics corrupts values)
+        ws2, avg, new_cycle = window_push_packed(
+            hwa_cfg, buf, ws, cycle,
+            use_kernel=hwa_cfg.use_kernels and mesh.size == 1)
+        wa = unpack(avg, spec)
+        return (new_inner, ws2.ring, ws2.total, ws2.count, ws2.next_idx,
+                wa, new_cycle)
+
     p_sh = rules.tree_shardings(stacked_abs, stacked_dims)
-    r_sh = rules.tree_shardings(ring_abs, ring_dims)
-    t_sh = rules.tree_shardings(total_abs, param_dims)
     w_sh = rules.tree_shardings(params_abs, param_dims)
     s_sh = NamedSharding(mesh, P())
     return StepBundle(
@@ -468,4 +537,4 @@ def make_mesh_hwa_sync_step(lm: LM, rules: ShardingRules, hwa_cfg: HWAConfig,
                        scalar_i),
         in_shardings=(p_sh, r_sh, t_sh, s_sh, s_sh, s_sh),
         out_shardings=(p_sh, r_sh, t_sh, s_sh, s_sh, w_sh, s_sh),
-        donate_argnums=(0, 1, 2))
+        donate_argnums=(0, 1, 2), pack_spec=spec)

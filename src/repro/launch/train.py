@@ -75,9 +75,9 @@ def run_mesh_native(args) -> dict:
     from repro.launch.steps import _mk_optimizer
     opt = _mk_optimizer("sgd")   # must match the compiled step's optimizer
     inner_opt = jax.vmap(opt.init)(inner)
-    ring = jax.tree.map(
-        lambda s: jnp.zeros((args.window,) + s.shape, jnp.float32), params)
-    total = jax.tree.map(lambda s: jnp.zeros(s.shape, jnp.float32), params)
+    spec = sync.pack_spec       # window state is packed: one (I, P) ring
+    ring = jnp.zeros((args.window, spec.padded), jnp.float32)
+    total = jnp.zeros((spec.padded,), jnp.float32)
     count = nidx = cycle = jnp.zeros((), jnp.int32)
 
     train_c = train.lower(mesh).compile()

@@ -119,9 +119,9 @@ ws_oracle, wa_oracle = window_update(
 
 sync = make_mesh_hwa_sync_step(lm, rules, hwa_cfg)
 sync_c = sync.lower(mesh).compile()
-ring = jax.tree.map(lambda s: jnp.zeros((hwa_cfg.window,) + s.shape,
-                                        jnp.float32), params)
-total = jax.tree.map(lambda s: jnp.zeros(s.shape, jnp.float32), params)
+spec = sync.pack_spec               # window state is packed (I, P)/(P,)
+ring = jnp.zeros((hwa_cfg.window, spec.padded), jnp.float32)
+total = jnp.zeros((spec.padded,), jnp.float32)
 zero = jnp.zeros((), jnp.int32)
 with use_mesh(mesh):
     (s_inner, s_ring, s_total, s_count, s_nidx, s_wa,
@@ -136,6 +136,25 @@ err_wa = tree_err(s_wa, wa_oracle)
 check(f"sync: window average == oracle (err={err_wa:.2e})", err_wa < 1e-5)
 check("sync: count/cycle advanced",
       int(s_count) == 1 and int(s_cycle) == 1)
+
+# use_kernels=True on a multi-device mesh must produce the SAME values:
+# Pallas is opaque to GSPMD (per-shard execution with global-shape
+# semantics corrupts values), so the bundles gate the kernel path to
+# single-device meshes — this leg catches any regression of that gate.
+hwa_cfg_k = HWAConfig(n_replicas=K, window=3, use_kernels=True)
+sync_k = make_mesh_hwa_sync_step(lm, rules, hwa_cfg_k)
+sync_kc = sync_k.lower(mesh).compile()
+ring_k = jnp.zeros((hwa_cfg_k.window, spec.padded), jnp.float32)
+total_k = jnp.zeros((spec.padded,), jnp.float32)
+with use_mesh(mesh):
+    out_k = sync_kc(s_inner, ring_k, total_k, zero, zero, zero)
+# s_inner replicas are all W̄ from the first sync; its window push equals
+# a fresh window_update with that (replica-invariant) value
+ws_k_oracle, wa_k_oracle = window_update(
+    window_init(params, hwa_cfg_k.window), outer_oracle)
+err_kwa = tree_err(out_k[5], wa_k_oracle)
+check(f"sync(use_kernels on mesh): values correct (err={err_kwa:.2e})",
+      err_kwa < 1e-5)
 
 # ---- HLO structure: replica-axis traffic only in hwa_sync -----------------
 train_hlo = mesh_train_c.as_text()

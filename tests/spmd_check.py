@@ -112,8 +112,9 @@ check(f"mesh HWA step == single-device vmap (err={err:.2e})", err < 5e-3)
 sync = make_hwa_sync_step(lm, rules3, hwa_cfg)
 sync_c = sync.lower(mesh3).compile()
 I = hwa_cfg.window
-ring = jax.tree.map(lambda s: jnp.zeros((I,) + s.shape, jnp.float32), params)
-total = jax.tree.map(lambda s: jnp.zeros(s.shape, jnp.float32), params)
+spec = sync.pack_spec               # window state is packed (I, P)/(P,)
+ring = jnp.zeros((I, spec.padded), jnp.float32)
+total = jnp.zeros((spec.padded,), jnp.float32)
 zero = jnp.zeros((), jnp.int32)
 with use_mesh(mesh3):
     out = sync_c(new_stacked, ring, total, zero, zero)

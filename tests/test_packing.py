@@ -1,0 +1,298 @@
+"""Packed WA state (repro.common.packing): round-trip, single-launch
+guarantees, exact (0 ULP) equivalence vs the per-leaf formulation, and
+checkpoint round-trip + migration."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.packing import (ALIGN, pack, pack_spec, pack_stacked,
+                                  unpack, unpack_leaf)
+from repro.core import (HWAConfig, HWAState, hwa_init, hwa_sync,
+                        online_average, window_init, window_update)
+from repro.kernels import ref as kref
+from repro.launch.hlo import count_pallas_calls
+from repro.optim import sgd
+
+
+def ragged_tree(seed=0):
+    """Ragged shapes, mixed dtypes, an empty leaf, a scalar."""
+    ks = jax.random.split(jax.random.key(seed), 4)
+    return {"w": jax.random.normal(ks[0], (37, 13)),
+            "blocks": [{"m": jax.random.normal(ks[1], (8, 128)),
+                        "b": jax.random.normal(ks[2], (128,)).astype(
+                            jnp.bfloat16)}],
+            "empty": jnp.zeros((0, 5)),
+            "scale": jax.random.normal(ks[3], ()).astype(jnp.float16)}
+
+
+def params_like(seed=0):
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    return {"w": jax.random.normal(k1, (4, 3)),
+            "b": jax.random.normal(k2, (7,))}
+
+
+# ------------------------------------------------------------- round-trip
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_pack_unpack_roundtrip(seed):
+    tree = ragged_tree(seed)
+    spec = pack_spec(tree)
+    assert spec.padded % ALIGN == 0 and spec.padded >= spec.size
+    buf = pack(tree, spec)
+    assert buf.shape == (spec.padded,) and buf.dtype == jnp.float32
+    back = unpack(buf, spec)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_roundtrip_property():
+    """Hypothesis sweep over arbitrary pytrees (shapes incl. empty/scalar,
+    float dtypes that embed exactly in the f32 buffer)."""
+    pytest.importorskip("hypothesis", reason="hypothesis not installed "
+                        "(see requirements-dev.txt)")
+    from hypothesis import given, settings, strategies as st
+
+    shapes = st.lists(st.integers(0, 9), min_size=0, max_size=3).map(tuple)
+    dtypes = st.sampled_from(["float32", "bfloat16", "float16"])
+
+    @given(st.lists(st.tuples(shapes, dtypes), min_size=0, max_size=8),
+           st.integers(0, 1000))
+    @settings(max_examples=25, deadline=None)
+    def run(leaf_specs, seed):
+        ks = jax.random.split(jax.random.key(seed), max(len(leaf_specs), 1))
+        tree = {f"l{i}": jax.random.normal(ks[i], shape).astype(dt)
+                for i, (shape, dt) in enumerate(leaf_specs)}
+        spec = pack_spec(tree)
+        back = unpack(pack(tree, spec), spec)
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+            assert a.shape == b.shape and a.dtype == b.dtype
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+    run()
+
+
+def test_unpack_leaf_and_stacked_views():
+    tree = ragged_tree()
+    spec = pack_spec(tree)
+    buf = pack(tree, spec)
+    flat = jax.tree.leaves(tree)
+    for i in range(spec.n_leaves):
+        np.testing.assert_array_equal(
+            np.asarray(unpack_leaf(buf, spec, i), np.float32),
+            np.asarray(flat[i], np.float32))
+    stacked_tree = jax.tree.map(lambda x: jnp.stack([x, 2 * x]), tree)
+    sbuf = pack_stacked(stacked_tree, spec)
+    assert sbuf.shape == (2, spec.padded)
+    np.testing.assert_array_equal(np.asarray(sbuf[0]), np.asarray(buf))
+    # unpack preserves leading batch dims (ring rows never get unpacked
+    # wholesale in production; this is the debugging view)
+    back = unpack(sbuf, spec)
+    for a, b in zip(jax.tree.leaves(stacked_tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+# ----------------------------------------- 0 ULP vs per-leaf formulation
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_window_update_bitwise_equals_per_leaf(use_kernel):
+    """The packed window state is bit-identical (0 ULP, f32) to running
+    the reference update independently on every leaf."""
+    I = 3
+    p0 = params_like()
+    ws = window_init(p0, I)
+    leaf_ring = jax.tree.map(lambda x: jnp.zeros((I,) + x.shape), p0)
+    leaf_total = jax.tree.map(jnp.zeros_like, p0)
+    is3 = lambda x: isinstance(x, tuple) and len(x) == 3
+    for t in range(7):
+        outer = params_like(100 + t)
+        ws, wa = window_update(ws, outer, use_kernel=use_kernel)
+        idx, full = t % I, float(t >= I)
+        inv = 1.0 / min(t + 1, I)
+        triples = jax.tree.map(
+            lambda r, tt, n: kref.wa_window_update_ref(
+                r, tt, n, idx, full, inv), leaf_ring, leaf_total, outer)
+        leaf_ring = jax.tree.map(lambda x: x[0], triples, is_leaf=is3)
+        leaf_total = jax.tree.map(lambda x: x[1], triples, is_leaf=is3)
+        leaf_wa = jax.tree.map(lambda x: x[2], triples, is_leaf=is3)
+        for a, b in zip(jax.tree.leaves(wa), jax.tree.leaves(leaf_wa)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        unpacked_total = unpack(ws.total, ws.spec)
+        for a, b in zip(jax.tree.leaves(unpacked_total),
+                        jax.tree.leaves(leaf_total)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for row in range(I):
+            ring_row = unpack(ws.ring[row], ws.spec)
+            for a, b in zip(jax.tree.leaves(ring_row),
+                            jax.tree.leaves(leaf_ring)):
+                np.testing.assert_array_equal(np.asarray(a),
+                                              np.asarray(b[row]))
+
+
+def test_online_average_kernel_bitwise_equals_per_leaf():
+    K = 4   # power of two: sum*(1/K) == sum/K bitwise
+    stacked = jax.tree.map(
+        lambda x: jnp.stack([x * (i + 1) for i in range(K)]),
+        params_like())
+    got = online_average(stacked, use_kernel=True)
+    want = jax.tree.map(lambda x: jnp.mean(x, 0), stacked)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("window_stride", [1, 2])
+def test_hwa_sync_kernel_path_equals_reference(window_stride):
+    """Fused sync (stride 1: single launch) and the packed two-step
+    (stride 2: cond'd) produce bitwise-identical state vs the jnp path
+    for K=2 (1/K exact in f32)."""
+    opt = sgd(momentum=0.0)
+    mk = lambda uk: HWAConfig(n_replicas=2, window=3, use_kernels=uk,
+                              window_stride=window_stride)
+    states = {}
+    for uk in (False, True):
+        state = hwa_init(mk(uk), params_like(), opt)
+        inner = jax.tree.map(
+            lambda x: jnp.stack([x, x * 1.5]), params_like(1))
+        state = HWAState(inner=inner, inner_opt=state.inner_opt,
+                         window_state=state.window_state, wa=state.wa,
+                         cycle=state.cycle, step=state.step)
+        for _ in range(3):
+            state, _ = hwa_sync(mk(uk), state)
+        states[uk] = state
+    a, b = states[False], states[True]
+    for x, y in zip(jax.tree.leaves((a.inner, a.wa)),
+                    jax.tree.leaves((b.inner, b.wa))):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    np.testing.assert_array_equal(np.asarray(a.window_state.total),
+                                  np.asarray(b.window_state.total))
+    np.testing.assert_array_equal(np.asarray(a.window_state.ring),
+                                  np.asarray(b.window_state.ring))
+    assert int(a.window_state.count) == int(b.window_state.count)
+
+
+# --------------------------------------------------- one launch, always
+
+
+def test_window_update_is_one_pallas_call():
+    """O(1) launches regardless of leaf count (the tentpole guarantee)."""
+    tree = {f"l{i}": jnp.ones((5 + i,)) for i in range(12)}
+    ws = window_init(tree, 4)
+    jaxpr = jax.make_jaxpr(
+        lambda w, o: window_update(w, o, use_kernel=True))(ws, tree)
+    assert count_pallas_calls(jaxpr) == 1
+
+
+def test_online_average_is_one_pallas_call():
+    tree = {f"l{i}": jnp.ones((3, 5 + i)) for i in range(12)}
+    jaxpr = jax.make_jaxpr(
+        lambda t: online_average(t, use_kernel=True))(tree)
+    assert count_pallas_calls(jaxpr) == 1
+
+
+def test_fused_sync_is_one_pallas_call_total():
+    cfg = HWAConfig(n_replicas=2, window=3, use_kernels=True)
+    state = hwa_init(cfg, {f"l{i}": jnp.ones((7 + i,)) for i in range(12)},
+                     sgd(momentum=0.0))
+    jaxpr = jax.make_jaxpr(lambda s: hwa_sync(cfg, s))(state)
+    assert count_pallas_calls(jaxpr) == 1
+
+
+def test_per_leaf_path_is_one_launch_per_leaf():
+    """The baseline the packed path replaces: L leaves ⇒ L launches."""
+    from repro.kernels import ops as kops
+    tree = {f"l{i}": jnp.ones((5 + i,)) for i in range(12)}
+    ring = jax.tree.map(lambda x: jnp.zeros((4,) + x.shape), tree)
+    total = jax.tree.map(jnp.zeros_like, tree)
+    jaxpr = jax.make_jaxpr(lambda r, t, n: jax.tree.map(
+        lambda rr, tt, nn: kops.wa_window_update(rr, tt, nn, 0, 1.0, 0.25),
+        r, t, n))(ring, total, tree)
+    assert count_pallas_calls(jaxpr) == len(jax.tree.leaves(tree))
+
+
+# ------------------------------------------------------------ checkpoint
+
+
+def test_window_state_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint import load_window_state, save_window_state
+    ws = window_init(params_like(), 3)
+    for t in range(4):
+        ws, _ = window_update(ws, params_like(10 + t))
+    path = str(tmp_path / "ws.npz")
+    save_window_state(path, ws)
+    like = window_init(params_like(), 3)
+    back = load_window_state(path, like)
+    np.testing.assert_array_equal(np.asarray(back.ring), np.asarray(ws.ring))
+    np.testing.assert_array_equal(np.asarray(back.total),
+                                  np.asarray(ws.total))
+    assert int(back.count) == int(ws.count)
+    assert int(back.next_idx) == int(ws.next_idx)
+    assert back.spec == ws.spec
+
+
+def test_window_state_migration_from_per_leaf(tmp_path):
+    """Pre-packing checkpoints stored one ring/total leaf PER PARAMETER;
+    loading re-packs them bit-identically."""
+    from repro.checkpoint import load_window_state, save_pytree
+    I = 3
+    p = params_like()
+    ws = window_init(p, I)
+    for t in range(4):
+        ws, _ = window_update(ws, params_like(10 + t))
+    # write the OLD format: per-leaf (I, *shape) ring and (*shape) total
+    old_ring = {k: np.stack([np.asarray(unpack(ws.ring[r], ws.spec)[k])
+                             for r in range(I)]) for k in p}
+    old_total = {k: np.asarray(unpack(ws.total, ws.spec)[k]) for k in p}
+    path = str(tmp_path / "old_ws.npz")
+    save_pytree(path, {"ring": old_ring, "total": old_total,
+                       "count": ws.count, "next_idx": ws.next_idx})
+    back = load_window_state(path, window_init(p, I))
+    np.testing.assert_array_equal(np.asarray(back.ring), np.asarray(ws.ring))
+    np.testing.assert_array_equal(np.asarray(back.total),
+                                  np.asarray(ws.total))
+    assert int(back.count) == int(ws.count)
+
+
+def test_window_state_migration_rejects_mismatched_keys(tmp_path):
+    """Same shapes under different key paths must NOT migrate silently —
+    positional packing would put values at the wrong offsets."""
+    from repro.checkpoint import load_window_state, save_pytree
+    I = 2
+    tmpl = {"a": jnp.zeros((3,)), "b": jnp.zeros((3,))}
+    zeros = np.zeros((3,), np.float32)
+    path = str(tmp_path / "bad_ws.npz")
+    save_pytree(path, {
+        "ring": {"c": np.zeros((I, 3), np.float32),
+                 "d": np.zeros((I, 3), np.float32)},
+        "total": {"c": zeros, "d": zeros},
+        "count": jnp.zeros((), jnp.int32),
+        "next_idx": jnp.zeros((), jnp.int32)})
+    with pytest.raises(ValueError, match="key mismatch"):
+        load_window_state(path, window_init(tmpl, I))
+
+
+# ------------------------------------------------------------------ TPU
+
+
+@pytest.mark.tpu
+@pytest.mark.skipif(jax.default_backend() != "tpu",
+                    reason="compiled (non-interpret) Pallas needs a TPU")
+def test_packed_kernels_compiled_on_tpu():
+    from repro.kernels.wa_update import wa_sync_fused_2d, wa_window_update_2d
+    tree = ragged_tree()
+    spec = pack_spec(tree)
+    new = pack(tree, spec)
+    ring = jnp.zeros((2, spec.padded // 1024, 1024))
+    total = jnp.zeros((spec.padded // 1024, 1024))
+    got = wa_window_update_2d(ring, total, new.reshape(total.shape),
+                              jnp.int32(0), jnp.float32(0.0),
+                              jnp.float32(1.0), interpret=False)
+    want = kref.wa_window_update_ref(ring, total, new.reshape(total.shape),
+                                     0, 0.0, 1.0)
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
