@@ -3,11 +3,16 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test spmd mesh-hwa bench bench-kernels train-smoke
+.PHONY: test spmd mesh-hwa bench bench-kernels train-smoke docs-check
 
-# tier-1: the full CPU suite (SPMD checks run in their own subprocesses)
-test:
+# tier-1: docs sanity + the full CPU suite (SPMD checks run in their own
+# subprocesses)
+test: docs-check
 	$(PY) -m pytest -x -q
+
+# README quickstart targets in dry-run mode + intra-repo doc link check
+docs-check:
+	$(PY) tools/docs_check.py
 
 # 8-host-device subprocess checks only (SPMD + mesh-native HWA)
 spmd:

@@ -53,3 +53,36 @@ def run_method(method: str, *, k: int = 2, window: int = WINDOW,
 
 def csv_row(name: str, us: float, derived: str) -> str:
     return f"{name},{us:.1f},{derived}"
+
+
+def run_forced_device_worker(worker_file: str, flag: str, *,
+                             error_row: str, print_fn=print,
+                             n_devices: int = 8, timeout: int = 600):
+    """Re-exec ``worker_file`` with ``flag`` under N forced host devices
+    and return its last-stdout-line JSON dict ({} on failure).
+
+    Mesh benchmarks must run the device-hungry part in a subprocess so
+    the forced host platform never leaks into the benchmark process;
+    this is the shared driver (benchmarks/mesh_comm.py,
+    benchmarks/kernel_bench.py).
+    """
+    import json
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={n_devices}"
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep + root + \
+        os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, os.path.abspath(worker_file), flag],
+        capture_output=True, text=True, env=env, timeout=timeout, cwd=root)
+    if proc.returncode != 0:
+        print_fn(csv_row(error_row, 0.0,
+                         (proc.stderr or proc.stdout)[-160:].replace(
+                             "\n", " ").replace(",", ";")))
+        return {}
+    return json.loads(proc.stdout.strip().splitlines()[-1])

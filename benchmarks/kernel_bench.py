@@ -12,9 +12,18 @@ The packed-vs-per-leaf comparison drives a transformer-like tree
 (≥100 leaves, mixed 128-element biases and 1M-element matrices) through
 both WA-update formulations and reports, per path: kernel-launch count
 (structural, from the jaxpr), padding waste (bytes padded / bytes
-useful), and ref-impl wall time. ``benchmarks.run`` tees the returned
-dict into BENCH_kernels.json at the repo root for cross-PR tracking.
+useful), and ref-impl wall time.
+
+The gated-vs-mesh-resident comparison (subprocess, 8 forced host
+devices, (2,2,2) replica/data/model mesh) lowers the mesh sync bundle
+both ways and reports, per path: Pallas launches, collective counts and
+modeled per-device ICI bytes per sync split into the replica-axis weight
+all-reduce vs packed-W̄ assembly traffic — the cost the shard-aware
+layout removes. ``benchmarks.run`` tees the returned dict into
+BENCH_kernels.json at the repo root for cross-PR tracking.
 """
+import json
+import sys
 import time
 
 import jax
@@ -159,6 +168,71 @@ def packed_vs_per_leaf(print_fn=print):
     return rec
 
 
+_WORKER_FLAG = "--mesh-sync-worker"
+
+
+def _mesh_sync_worker():
+    """Runs with 8 forced host devices: lower the mesh sync bundle gated
+    (legacy GSPMD fallback) vs mesh-resident and measure the difference."""
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.core.hwa import HWAConfig
+    from repro.launch.hlo import (collective_stats, count_pallas_calls,
+                                  result_bytes, sync_collective_audit)
+    from repro.launch.mesh import make_test_mesh
+    from repro.launch.steps import make_mesh_hwa_sync_step
+    from repro.models.registry import build_model
+    from repro.sharding.rules import make_tp_rules
+
+    mesh = make_test_mesh((2, 2, 2), ("replica", "data", "model"))
+    rules = make_tp_rules(mesh, replica_axis="replica")
+    lm = build_model(get_smoke_config("granite-3-2b"))
+    out = {}
+    for name, resident, kernels in [("gated", False, True),
+                                    ("mesh_resident", True, True)]:
+        hwa_cfg = HWAConfig(n_replicas=2, window=3, use_kernels=kernels)
+        bundle = make_mesh_hwa_sync_step(lm, rules, hwa_cfg,
+                                         mesh_resident=resident)
+        compiled = bundle.lower(mesh).compile()
+        hlo = compiled.as_text()
+        audit = sync_collective_audit(hlo, mesh)
+        assembly = {h for hits in audit["other"].values() for h in hits}
+        out[name] = {
+            "pallas_launches": count_pallas_calls(
+                jax.make_jaxpr(bundle.fn)(*bundle.abstract_args)),
+            "collectives": sum(collective_stats(hlo).counts.values()),
+            "replica_allreduce_bytes": result_bytes(audit["replica"]),
+            "assembly_collectives": len(assembly),
+            "assembly_bytes": result_bytes(sorted(assembly)),
+            "ici_bytes_per_sync": collective_stats(hlo).traffic_bytes,
+            "pack_padded_bytes": 4 * bundle.pack_spec.padded,
+        }
+    print(json.dumps(out))
+
+
+def gated_vs_mesh_resident(print_fn=print):
+    """Subprocess driver (forced host devices must not leak into the
+    benchmark process)."""
+    from benchmarks.common import run_forced_device_worker
+    rec = run_forced_device_worker(__file__, _WORKER_FLAG,
+                                   error_row="kernel/mesh_sync/ERROR",
+                                   print_fn=print_fn)
+    if not rec:
+        return {}
+    for name in ("gated", "mesh_resident"):
+        r = rec[name]
+        print_fn(csv_row(
+            f"kernel/mesh_sync/{name}", 0.0,
+            f"launches={r['pallas_launches']};"
+            f"collectives={r['collectives']};"
+            f"assembly_collectives={r['assembly_collectives']};"
+            f"assembly_bytes={r['assembly_bytes']};"
+            f"weight_allreduce_bytes={r['replica_allreduce_bytes']};"
+            f"ici_bytes_per_sync={r['ici_bytes_per_sync']:.3e}"))
+    return rec
+
+
 def main(print_fn=print):
     out = {}
     N = 1 << 20
@@ -199,6 +273,7 @@ def main(print_fn=print):
                      f"traffic_cut={1 - sync_fused_bytes / sync_split_bytes:.2f}"))
 
     out["packed_vs_per_leaf"] = packed_vs_per_leaf(print_fn)
+    out["mesh_sync_gated_vs_resident"] = gated_vs_mesh_resident(print_fn)
 
     B, S, H, D = 2, 1024, 4, 64
     ks = jax.random.split(jax.random.key(0), 3)
@@ -220,4 +295,7 @@ def main(print_fn=print):
 
 
 if __name__ == "__main__":
-    main()
+    if _WORKER_FLAG in sys.argv:
+        _mesh_sync_worker()
+    else:
+        main()

@@ -10,8 +10,6 @@ Runs the device-hungry part in a subprocess so the forced 8-device host
 platform never leaks into the benchmark process.
 """
 import json
-import os
-import subprocess
 import sys
 
 from benchmarks.common import csv_row
@@ -25,8 +23,7 @@ def _worker():
 
     from repro.configs import get_smoke_config
     from repro.core.hwa import HWAConfig
-    from repro.launch.hlo import (collectives_crossing_axis, _COLL_RE,
-                                  _shape_bytes)
+    from repro.launch.hlo import collectives_crossing_axis, result_bytes
     from repro.launch.mesh import make_test_mesh
     from repro.launch.specs import input_specs
     from repro.launch.steps import (make_hwa_train_step,
@@ -46,13 +43,7 @@ def _worker():
 
     def crossing_bytes(compiled):
         hits = collectives_crossing_axis(compiled.as_text(), mesh, "replica")
-        total = 0
-        for op, line in hits:
-            m = _COLL_RE.search(line)
-            # result type only (group 1) — the whole line would also count
-            # the operand shapes and double the figure
-            total += _shape_bytes(m.group(1)) if m else 0
-        return len(hits), total
+        return len(hits), result_bytes(hits)
 
     out = {}
     mesh_train = make_mesh_hwa_train_step(
@@ -72,20 +63,12 @@ def _worker():
 
 
 def main(print_fn=print):
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep + root + \
-        os.pathsep + env.get("PYTHONPATH", "")
-    proc = subprocess.run(
-        [sys.executable, os.path.abspath(__file__), _WORKER_FLAG],
-        capture_output=True, text=True, env=env, timeout=600, cwd=root)
-    if proc.returncode != 0:
-        print_fn(csv_row("mesh_comm/ERROR", 0.0,
-                         (proc.stderr or proc.stdout)[-160:].replace(
-                             "\n", " ").replace(",", ";")))
+    from benchmarks.common import run_forced_device_worker
+    rec = run_forced_device_worker(__file__, _WORKER_FLAG,
+                                   error_row="mesh_comm/ERROR",
+                                   print_fn=print_fn)
+    if not rec:
         return {}
-    rec = json.loads(proc.stdout.strip().splitlines()[-1])
     mesh_n, mesh_b = rec["mesh_train"]
     vmap_n, vmap_b = rec["vmap_train"]
     sync_n, sync_b = rec["sync"]

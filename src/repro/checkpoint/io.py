@@ -93,22 +93,44 @@ def load_pytree(path: str, like: Any) -> Any:
 #
 # The slide-window state (repro.core.offline.WindowState) is held packed:
 # one (I, P) ring + one (P,) total over the whole parameter set. Saving it
-# is a plain 4-leaf pytree save; loading migrates pre-packing checkpoints
-# (one ring/total leaf PER PARAMETER) by re-packing them into the layout
-# described by the template's PackSpec — bit-identically, since packing is
-# layout-only.
+# is a plain pytree save PLUS the PackSpec layout as JSON metadata.
+# Loading handles three cases, all bit-exactly (packing is layout-only):
+#
+#   1. stored layout == template layout        -> direct load;
+#   2. stored layout != template layout        -> repack (e.g. a state
+#      saved under one mesh's shard-aware layout restored under another
+#      mesh's, or on a single device);
+#   3. pre-packing checkpoint (one ring/total leaf PER PARAMETER)
+#      -> migrate by packing the stored leaves into the template layout.
+
+
+def _contiguous_spec(spec):
+    """The default contiguous (shards=1) layout of a spec's leaf set —
+    what every checkpoint written before layout metadata existed used."""
+    from repro.common.packing import pack_spec
+    flat = [jax.ShapeDtypeStruct(ls.shape, ls.dtype) for ls in spec.leaves]
+    return pack_spec(jax.tree.unflatten(spec.treedef, flat),
+                     align=spec.align)
 
 
 def save_window_state(path: str, state: Any) -> None:
-    """Save a (packed) WindowState: ring/total buffers + counters."""
-    save_pytree(path, {"ring": state.ring, "total": state.total,
-                       "count": state.count, "next_idx": state.next_idx})
+    """Save a (packed) WindowState: ring/total buffers + counters + the
+    packed layout (so a different mesh can repack on load)."""
+    from repro.common.packing import spec_to_json
+
+    tree = {"ring": state.ring, "total": state.total,
+            "count": state.count, "next_idx": state.next_idx}
+    if state.spec is not None:
+        tree["spec_json"] = np.asarray(spec_to_json(state.spec))
+    save_pytree(path, tree)
 
 
 def load_window_state(path: str, like: Any) -> Any:
-    """Load a WindowState saved by :func:`save_window_state` — or migrate
-    an old per-leaf checkpoint — into the packed layout of ``like``
-    (a WindowState template whose ``spec`` fixes offsets and treedef)."""
+    """Load a WindowState saved by :func:`save_window_state` — repacking
+    across layout changes, or migrating an old per-leaf checkpoint — into
+    the packed layout of ``like`` (a WindowState template whose ``spec``
+    fixes offsets and treedef)."""
+    from repro.common.packing import repack as repack_buf, spec_from_json
     from repro.core.offline import WindowState
 
     keys, leaves = _read_raw(path)
@@ -117,6 +139,10 @@ def load_window_state(path: str, like: Any) -> Any:
     for key, leaf in zip(keys, leaves):
         group, _, subkey = key.partition(_SEP)
         by_group.setdefault(group, []).append((subkey, leaf))
+
+    stored_spec = None
+    if "spec_json" in by_group:
+        stored_spec = spec_from_json(str(by_group.pop("spec_json")[0][1]))
 
     # key paths of the packed layout's leaves, in flatten order — the
     # migration must match stored per-leaf keys against these, not rely
@@ -133,15 +159,37 @@ def load_window_state(path: str, like: Any) -> Any:
                              f"(stored keys: {keys})")
         return by_group[group]
 
-    def repack(group_items, lead: tuple, dtype):
-        if len(group_items) == 1 and group_items[0][1].shape == \
-                lead + (spec.padded,):
-            return jnp.asarray(group_items[0][1], dtype)   # already packed
+    def restore(group_items, lead: tuple, dtype):
+        if len(group_items) == 1:
+            arr = group_items[0][1]
+            if stored_spec is not None and \
+                    not spec.same_layout(stored_spec):
+                # saved under a different (e.g. other-mesh shard-aware)
+                # layout: bit-exact repack into the template's
+                if arr.shape != lead + (stored_spec.padded,):
+                    raise ValueError(f"packed buffer {arr.shape} does not "
+                                     f"match its stored layout "
+                                     f"({stored_spec.padded})")
+                return repack_buf(jnp.asarray(arr, dtype), stored_spec,
+                                  spec).astype(dtype)
+            if arr.shape == lead + (spec.padded,):
+                return jnp.asarray(arr, dtype)           # layout unchanged
+            # pre-layout-metadata checkpoint (no spec_json): the only
+            # layout ever written back then was the default contiguous
+            # one — rederive it from the template's leaves and repack
+            legacy = _contiguous_spec(spec)
+            if stored_spec is None and \
+                    arr.shape == lead + (legacy.padded,):
+                return repack_buf(jnp.asarray(arr, dtype), legacy,
+                                  spec).astype(dtype)
+            raise ValueError(f"packed buffer shape {arr.shape} does not "
+                             f"match template ({lead + (spec.padded,)})")
         # migration: one stored leaf per parameter, in flatten order
         if len(group_items) != spec.n_leaves:
             raise ValueError(
                 f"cannot migrate: checkpoint has {len(group_items)} leaves,"
                 f" packed template expects {spec.n_leaves} (or 1 packed)")
+        from repro.common.packing import pack_leaves
         parts = []
         for (subkey, arr), ls, want in zip(group_items, spec.leaves,
                                            expected_keys):
@@ -152,16 +200,13 @@ def load_window_state(path: str, like: Any) -> Any:
             if tuple(arr.shape) != lead + ls.shape:
                 raise ValueError(f"migration shape mismatch: {arr.shape} "
                                  f"vs {lead + ls.shape}")
-            parts.append(np.asarray(arr, np.float32).reshape(lead + (ls.size,)))
-        pad = spec.padded - spec.size
-        if pad:
-            parts.append(np.zeros(lead + (pad,), np.float32))
-        return jnp.asarray(np.concatenate(parts, axis=-1), dtype)
+            parts.append(jnp.asarray(np.asarray(arr, np.float32)))
+        return pack_leaves(parts, spec, n_lead=len(lead)).astype(dtype)
 
     ring = None
     if like.ring is not None:
-        ring = repack(grab("ring"), (like.window,), like.ring.dtype)
-    total = repack(grab("total"), (), jnp.float32)
+        ring = restore(grab("ring"), (like.window,), like.ring.dtype)
+    total = restore(grab("total"), (), jnp.float32)
     count = jnp.asarray(grab("count")[0][1], jnp.int32)
     next_idx = jnp.asarray(grab("next_idx")[0][1], jnp.int32)
     return WindowState(ring=ring, total=total, count=count,

@@ -13,14 +13,38 @@ The layout is described by a static :class:`PackSpec` (offsets/shapes
 table + treedef) computed from abstract shapes, so it is identical under
 ``jit``/``eval_shape`` and hashable (usable as pytree metadata).
 
+**Shard-aware layout** (``shards > 1``). On a multi-device mesh the packed
+buffer is sharded over a *packed super-axis* — a tuple of mesh axes
+(``spec.axes``) whose device count is ``spec.shards``. So that packing is
+a purely LOCAL operation on every device (zero assembly collectives), the
+buffer is laid out segment-major: it is ``shards`` equal segments of
+``seg_len`` elements, and segment ``s`` holds, for every leaf in flatten
+order,
+
+- the leaf's shard ``s`` along its ``shard_dim`` (flattened row-major),
+  when the leaf is sharded over the super-axis, or
+- a full copy of the leaf, when the leaf is replicated over the
+  super-axis (the copy is duplicated into EVERY segment so the per-device
+  program is uniform — replicated leaves are small biases/norms, so the
+  duplication cost is noise against the matrices).
+
+Device ``s`` of the super-axis then owns exactly segment ``s``, and that
+segment is computable from the device's local leaf shards alone:
+``pack(local_tree, spec.local_spec())`` == its slice of the global
+``pack(tree, spec)``. ``shards == 1`` (the default) degenerates to the
+original contiguous layout bit-for-bit.
+
 Packing is elementwise-layout-only: no arithmetic touches the values, so
 any elementwise update on the packed buffer is bit-identical (0 ULP) to
-the same update applied per leaf.
+the same update applied per leaf. :func:`repack` converts a buffer
+between two layouts of the same leaf set (e.g. checkpoints moving
+between mesh shapes) with the same 0-ULP guarantee.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+import json
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -31,17 +55,25 @@ PyTree = Any
 # One (8, 1024) f32 VMEM tile worth of elements. Must equal
 # ``kernels.wa_update.TILE_ROWS * TILE_COLS`` (asserted in kernels.ops) so
 # a packed buffer reshapes to (rows, 1024) with rows % 8 == 0 and feeds the
-# Pallas kernels with zero per-call padding.
+# Pallas kernels with zero per-call padding. Each SEGMENT of a sharded
+# layout is padded to an ALIGN multiple, so the per-device slice tiles
+# exactly too.
 ALIGN = 8 * 1024
 
 
 @dataclasses.dataclass(frozen=True)
 class LeafSpec:
-    """Placement of one pytree leaf inside the packed buffer."""
+    """Placement of one pytree leaf inside the packed buffer.
+
+    ``offset`` is the WITHIN-SEGMENT offset (== the global offset when
+    ``shards == 1``). ``shard_dim`` names the leaf dim split over the
+    packed super-axis, or None for a leaf replicated into every segment.
+    """
     offset: int
     size: int
     shape: tuple[int, ...]
     dtype: str
+    shard_dim: int | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,37 +82,109 @@ class PackSpec:
 
     Hashable (treedef + tuples), so it can ride along as pytree metadata
     (``register_dataclass`` meta field) and as a ``jit`` static argument.
+    ``axes`` records the mesh axes of the packed super-axis (layout
+    metadata only — packing itself never touches a mesh).
     """
-    treedef: Any                     # jax PyTreeDef
+    treedef: Any                     # jax PyTreeDef (None for specs
+                                     # rehydrated from checkpoint metadata)
     leaves: tuple[LeafSpec, ...]
-    size: int                        # total useful elements
-    padded: int                      # buffer length, multiple of ``align``
+    size: int                        # total useful elements (no duplicates)
+    padded: int                      # buffer length == shards * seg_len
     align: int = ALIGN
+    shards: int = 1
+    axes: tuple[str, ...] = ()
 
     @property
     def n_leaves(self) -> int:
         return len(self.leaves)
 
     @property
+    def seg_len(self) -> int:
+        return self.padded // self.shards
+
+    @property
     def pad_waste(self) -> float:
-        """Padded-but-useless fraction: bytes padded / bytes useful."""
+        """Non-useful fraction: (padding + replicated duplicates) / useful."""
         return (self.padded - self.size) / max(self.size, 1)
 
+    def piece_size(self, ls: LeafSpec) -> int:
+        return ls.size // self.shards if ls.shard_dim is not None else ls.size
 
-def pack_spec(tree: PyTree, align: int = ALIGN) -> PackSpec:
-    """Compute the packed layout of ``tree`` (arrays or ShapeDtypeStructs)."""
+    def local_spec(self) -> "PackSpec":
+        """The per-device view of a sharded layout: one segment, local leaf
+        shapes (``shard_dim`` divided by ``shards``), same offsets.
+
+        Inside a manual ``shard_map`` whose in_specs shard each leaf over
+        the super-axis on its ``shard_dim``, ``pack(local_tree,
+        spec.local_spec())`` equals the device's ``seg_len`` slice of the
+        global ``pack(tree, spec)`` — the invariant that makes the
+        mesh-resident WA path collective-free.
+        """
+        if self.shards == 1:
+            return self
+        leaves = []
+        for ls in self.leaves:
+            if ls.shard_dim is None:
+                leaves.append(LeafSpec(offset=ls.offset, size=ls.size,
+                                       shape=ls.shape, dtype=ls.dtype))
+            else:
+                shape = list(ls.shape)
+                shape[ls.shard_dim] //= self.shards
+                leaves.append(LeafSpec(offset=ls.offset,
+                                       size=ls.size // self.shards,
+                                       shape=tuple(shape), dtype=ls.dtype))
+        return PackSpec(treedef=self.treedef, leaves=tuple(leaves),
+                        size=sum(l.size for l in leaves),
+                        padded=self.seg_len, align=self.align)
+
+    def same_layout(self, other: "PackSpec") -> bool:
+        """Layout equality ignoring the treedef (checkpoint-rehydrated
+        specs have none)."""
+        return (self.leaves == other.leaves and self.padded == other.padded
+                and self.shards == other.shards and self.align == other.align)
+
+
+def pack_spec(tree: PyTree, align: int = ALIGN, *, shards: int = 1,
+              shard_dims: Sequence[int | None] | None = None,
+              axes: tuple[str, ...] = ()) -> PackSpec:
+    """Compute the packed layout of ``tree`` (arrays or ShapeDtypeStructs).
+
+    ``shards``/``shard_dims``/``axes`` select the shard-aware layout:
+    ``shard_dims`` is a flat sequence (flatten order) giving, per leaf,
+    the dim split over the packed super-axis, or None to replicate the
+    leaf into every segment. Each named dim must divide by ``shards``.
+    """
     flat, treedef = jax.tree.flatten(tree)
+    if shards < 1:
+        raise ValueError(f"shards must be >= 1, got {shards}")
+    if shard_dims is None:
+        sd_flat: list[int | None] = [None] * len(flat)
+    else:
+        sd_flat = list(shard_dims)
+        if len(sd_flat) != len(flat):
+            raise ValueError(f"shard_dims has {len(sd_flat)} entries for "
+                             f"{len(flat)} leaves")
     leaves = []
     offset = 0
-    for leaf in flat:
+    for leaf, sd in zip(flat, sd_flat):
         shape = tuple(int(d) for d in leaf.shape)
         size = int(np.prod(shape, dtype=np.int64)) if shape else 1
+        if shards == 1:
+            sd = None
+        if sd is not None:
+            if not (0 <= sd < len(shape)) or size == 0 or \
+                    shape[sd] % shards != 0:
+                raise ValueError(f"leaf {shape} cannot shard dim {sd} "
+                                 f"{shards}-ways")
         leaves.append(LeafSpec(offset=offset, size=size, shape=shape,
-                               dtype=np.dtype(leaf.dtype).name))
-        offset += size
-    padded = max(align, -(-offset // align) * align)
-    return PackSpec(treedef=treedef, leaves=tuple(leaves), size=offset,
-                    padded=padded, align=align)
+                               dtype=np.dtype(leaf.dtype).name,
+                               shard_dim=sd))
+        offset += size // shards if sd is not None else size
+    seg_len = max(align, -(-offset // align) * align)
+    return PackSpec(treedef=treedef, leaves=tuple(leaves),
+                    size=sum(l.size for l in leaves),
+                    padded=shards * seg_len, align=align, shards=shards,
+                    axes=tuple(axes))
 
 
 def _check(tree: PyTree, spec: PackSpec) -> list:
@@ -94,6 +198,33 @@ def _check(tree: PyTree, spec: PackSpec) -> list:
     return flat
 
 
+def _piece(leaf, ls: LeafSpec, spec: PackSpec, s: int, n_lead: int):
+    """Leaf's segment-``s`` contribution, flattened (lead dims kept)."""
+    lead = tuple(leaf.shape[:n_lead])
+    if ls.shard_dim is None or spec.shards == 1:
+        return jnp.reshape(leaf, lead + (ls.size,))
+    c = ls.shape[ls.shard_dim] // spec.shards
+    sl = jax.lax.slice_in_dim(leaf, s * c, (s + 1) * c,
+                              axis=ls.shard_dim + n_lead)
+    return jnp.reshape(sl, lead + (ls.size // spec.shards,))
+
+
+def pack_leaves(flat: Sequence[Any], spec: PackSpec, dtype=jnp.float32,
+                n_lead: int = 0) -> jax.Array:
+    """Pack already-flattened leaves (``n_lead`` shared leading batch dims
+    per leaf, e.g. the K of :func:`pack_stacked` or a ring's I rows)."""
+    lead = tuple(flat[0].shape[:n_lead]) if flat else ()
+    segs = []
+    for s in range(spec.shards):
+        parts = [_piece(leaf, ls, spec, s, n_lead).astype(dtype)
+                 for leaf, ls in zip(flat, spec.leaves)]
+        used = sum(p.shape[-1] for p in parts)
+        if spec.seg_len > used:
+            parts.append(jnp.zeros(lead + (spec.seg_len - used,), dtype))
+        segs.append(jnp.concatenate(parts, axis=-1))
+    return jnp.concatenate(segs, axis=-1) if spec.shards > 1 else segs[0]
+
+
 def pack(tree: PyTree, spec: PackSpec | None = None,
          dtype=jnp.float32) -> jax.Array:
     """Flatten ``tree`` into one ``(spec.padded,)`` buffer of ``dtype``.
@@ -102,11 +233,7 @@ def pack(tree: PyTree, spec: PackSpec | None = None,
     it zero, so nothing ever needs re-padding.
     """
     spec = spec or pack_spec(tree)
-    flat = _check(tree, spec)
-    parts = [jnp.ravel(l).astype(dtype) for l in flat]
-    if spec.padded > spec.size:
-        parts.append(jnp.zeros((spec.padded - spec.size,), dtype))
-    return jnp.concatenate(parts)
+    return pack_leaves(_check(tree, spec), spec, dtype)
 
 
 def pack_stacked(tree: PyTree, spec: PackSpec, dtype=jnp.float32) -> jax.Array:
@@ -121,14 +248,28 @@ def pack_stacked(tree: PyTree, spec: PackSpec, dtype=jnp.float32) -> jax.Array:
     if not flat:
         raise ValueError("pack_stacked needs at least one leaf to infer K")
     K = flat[0].shape[0]
-    parts = []
     for leaf, ls in zip(flat, spec.leaves):
         if tuple(leaf.shape) != (K,) + ls.shape:
             raise ValueError(f"stacked leaf {leaf.shape} != (K,)+{ls.shape}")
-        parts.append(jnp.reshape(leaf, (K, ls.size)).astype(dtype))
-    if spec.padded > spec.size:
-        parts.append(jnp.zeros((K, spec.padded - spec.size), dtype))
-    return jnp.concatenate(parts, axis=1)
+    return pack_leaves(flat, spec, dtype, n_lead=1)
+
+
+def _unpack_one(buf: jax.Array, spec: PackSpec, ls: LeafSpec):
+    """One leaf's view of the packed buffer (lead dims preserved)."""
+    lead = buf.shape[:-1]
+    if ls.shard_dim is None or spec.shards == 1:
+        x = jax.lax.slice_in_dim(buf, ls.offset, ls.offset + ls.size,
+                                 axis=buf.ndim - 1)
+        return jnp.reshape(x, lead + ls.shape)
+    piece = ls.size // spec.shards
+    local = list(ls.shape)
+    local[ls.shard_dim] //= spec.shards
+    parts = []
+    for s in range(spec.shards):
+        off = s * spec.seg_len + ls.offset
+        x = jax.lax.slice_in_dim(buf, off, off + piece, axis=buf.ndim - 1)
+        parts.append(jnp.reshape(x, lead + tuple(local)))
+    return jnp.concatenate(parts, axis=len(lead) + ls.shard_dim)
 
 
 def unpack(buf: jax.Array, spec: PackSpec, like: PyTree | None = None
@@ -139,14 +280,11 @@ def unpack(buf: jax.Array, spec: PackSpec, like: PyTree | None = None
     preserved on every leaf. Dtypes come from ``like`` when given, else
     from the spec (the dtypes of the tree the spec was computed from).
     """
-    lead = buf.shape[:-1]
     like_flat = _check(like, spec) if like is not None else None
     leaves = []
     for i, ls in enumerate(spec.leaves):
         dt = like_flat[i].dtype if like_flat is not None else ls.dtype
-        x = jax.lax.slice_in_dim(buf, ls.offset, ls.offset + ls.size,
-                                 axis=buf.ndim - 1)
-        leaves.append(jnp.reshape(x, lead + ls.shape).astype(dt))
+        leaves.append(_unpack_one(buf, spec, ls).astype(dt))
     return jax.tree.unflatten(spec.treedef, leaves)
 
 
@@ -154,6 +292,46 @@ def unpack_leaf(buf: jax.Array, spec: PackSpec, index: int,
                 dtype=None) -> jax.Array:
     """View of a single leaf (by flatten order) of the packed buffer."""
     ls = spec.leaves[index]
-    x = jax.lax.slice_in_dim(buf, ls.offset, ls.offset + ls.size,
-                             axis=buf.ndim - 1)
-    return jnp.reshape(x, buf.shape[:-1] + ls.shape).astype(dtype or ls.dtype)
+    return _unpack_one(buf, spec, ls).astype(dtype or ls.dtype)
+
+
+def repack(buf: jax.Array, src: PackSpec, dst: PackSpec) -> jax.Array:
+    """Layout-convert a packed buffer between two PackSpecs of the same
+    leaf set (bit-exact — packing never touches values). Leading batch
+    dims (e.g. ring rows) are preserved. Used by checkpoint loading when
+    a buffer saved under one mesh's shard-aware layout is restored under
+    another's."""
+    if tuple(l.shape for l in src.leaves) != \
+            tuple(l.shape for l in dst.leaves):
+        raise ValueError("repack: leaf shapes differ between layouts")
+    leaves = [_unpack_one(buf, src, ls) for ls in src.leaves]
+    return pack_leaves(leaves, dst, buf.dtype, n_lead=buf.ndim - 1)
+
+
+# ------------------------------------------- layout (de)serialization
+#
+# Checkpoints store the layout next to the buffers so a window state saved
+# under one mesh's shard-aware layout can be rehydrated (treedef-less) and
+# repacked under another's. JSON keeps the .npz container dependency-free.
+
+
+def spec_to_json(spec: PackSpec) -> str:
+    return json.dumps({
+        "align": spec.align, "shards": spec.shards, "axes": list(spec.axes),
+        "size": spec.size, "padded": spec.padded,
+        "leaves": [[ls.offset, ls.size, list(ls.shape), ls.dtype,
+                    ls.shard_dim] for ls in spec.leaves]})
+
+
+def spec_from_json(s: str) -> PackSpec:
+    """Rehydrate a layout saved by :func:`spec_to_json`. The treedef is
+    not serializable; the result supports the flat/leaf-level operations
+    (``pack_leaves``/``unpack_leaf``/:func:`repack`) but not tree-level
+    pack/unpack."""
+    d = json.loads(s)
+    leaves = tuple(LeafSpec(offset=o, size=n, shape=tuple(sh), dtype=dt,
+                            shard_dim=sd)
+                   for o, n, sh, dt, sd in d["leaves"])
+    return PackSpec(treedef=None, leaves=leaves, size=d["size"],
+                    padded=d["padded"], align=d["align"],
+                    shards=d["shards"], axes=tuple(d["axes"]))

@@ -102,8 +102,11 @@ def window_push_packed(cfg: HWAConfig, new_buf: jax.Array,
     Returns (window state, packed W̿_e, incremented cycle counter). Keeps
     everything in the packed (P,) layout so callers control when (and
     under what sharding) the final unpack happens. ``use_kernel``
-    overrides ``cfg.use_kernels`` (multi-device bundles must force it
-    off: Pallas calls are opaque to the GSPMD partitioner).
+    overrides ``cfg.use_kernels``; on multi-device meshes kernels are
+    only safe inside a fully-manual shard_map on local buffer slices
+    (``launch.steps._local_packed_sync``) — a bare Pallas call is opaque
+    to the GSPMD partitioner, which would run it per-shard with
+    global-shape semantics and corrupt values.
     """
     from repro.core.offline import window_average_packed, \
         window_update_packed
@@ -245,10 +248,13 @@ def hwa_sync_named(cfg: HWAConfig, params: PyTree,
     .. warning:: Safe under ``vmap(axis_name=...)``; do NOT call inside a
        partial-auto ``shard_map`` on jax 0.4.x — the window push packs W̄
        from auto-sharded leaves, and XLA miscompiles that assembly in
-       manual subgroups (values come back 2×). The mesh-native sync
-       bundle (``launch.steps.make_mesh_hwa_sync_step``) therefore
-       pmeans inside the shard_map and window-pushes outside it; use
-       that structure on meshes.
+       manual subgroups (values come back 2×, the IsManualSubgroup bug
+       class). The mesh-native sync bundle
+       (``launch.steps.make_mesh_hwa_sync_step``) therefore runs the
+       WHOLE sync — psum, window push, unpack — inside a FULLY-manual
+       shard_map over a shard-aware packed layout (no auto axes, no
+       subgroup to miscompile, no assembly collectives); use that
+       structure on meshes.
     """
     outer = online_average_named(params, axis_name)
     new_ws, wa, new_cycle = _window_push(cfg, outer, window_state, cycle)

@@ -23,7 +23,11 @@ Three implementations with one state container:
 kernel launches regardless of leaf count, with zero per-call padding and
 real buffer donation; only the final W̿ is unpacked back to leaf views.
 Packing is layout-only, so results are bit-identical (0 ULP) to the
-per-leaf formulation.
+per-leaf formulation. On multi-device meshes the sync bundles use a
+SHARD-AWARE layout (``PackSpec.shards > 1``) whose ``padded`` size
+differs — always build buffers from the spec the state actually carries
+(``state.spec`` / ``bundle.pack_spec``), never a freshly computed
+default one (docs/ARCHITECTURE.md describes the layout).
 """
 from __future__ import annotations
 

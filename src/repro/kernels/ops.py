@@ -59,11 +59,16 @@ def wa_window_update_packed(ring, total, new, idx, full_flag, inv_count):
     return (ring_o.reshape(I, Pn), total_o.reshape(Pn), avg.reshape(Pn))
 
 
-@jax.jit
-def online_mean_packed(stacked):
-    """(K, P) packed replicas -> (P,) f32 mean. One kernel launch."""
+@functools.partial(jax.jit, static_argnames=("inv_k",))
+def online_mean_packed(stacked, inv_k: float | None = None):
+    """(K, P) packed replicas -> (P,) f32 mean. One kernel launch.
+
+    With ``inv_k`` set, computes the partial mean ``sum × inv_k`` instead
+    (the mesh-resident sync's pre-psum contribution when the replica
+    stack is itself sharded over a mesh axis)."""
     K, Pn = stacked.shape
-    return online_mean_2d(_tiles(stacked), interpret=_interpret()).reshape(Pn)
+    return online_mean_2d(_tiles(stacked), interpret=_interpret(),
+                          inv_k=inv_k).reshape(Pn)
 
 
 @functools.partial(jax.jit, donate_argnums=(1, 2))

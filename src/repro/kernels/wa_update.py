@@ -175,13 +175,20 @@ def _online_mean_kernel(x_ref, o_ref, *, inv_k: float):
     o_ref[...] = jnp.sum(x_ref[...].astype(jnp.float32), axis=0) * inv_k
 
 
-def online_mean_2d(stacked, *, interpret: bool = True):
-    """stacked: (K, R, C) -> (R, C) f32 mean over axis 0."""
+def online_mean_2d(stacked, *, interpret: bool = True,
+                   inv_k: float | None = None):
+    """stacked: (K, R, C) -> (R, C) f32 mean over axis 0.
+
+    ``inv_k`` overrides the 1/K scale — the mesh-resident sync path uses
+    it to compute a PARTIAL mean (local sum × 1/K_global) whose psum over
+    the replica mesh axis is the global mean.
+    """
     K, R, C = stacked.shape
     assert R % TILE_ROWS == 0 and C % TILE_COLS == 0, (R, C)
     grid = (R // TILE_ROWS, C // TILE_COLS)
     return pl.pallas_call(
-        functools.partial(_online_mean_kernel, inv_k=1.0 / K),
+        functools.partial(_online_mean_kernel,
+                          inv_k=1.0 / K if inv_k is None else inv_k),
         grid=grid,
         in_specs=[pl.BlockSpec((K, TILE_ROWS, TILE_COLS),
                                lambda i, j: (0, i, j))],

@@ -74,7 +74,12 @@ def collective_stats(hlo_text: str) -> CollectiveStats:
         type_str, op = m.group(1), m.group(2)
         b = _shape_bytes(type_str)
         gm = _GROUPS_RE.search(line)
-        g = int(gm.group(2)) if gm else 1
+        if gm:
+            g = int(gm.group(2))
+        else:
+            # explicit-list groups ({{0,4},{1,5},...}) and permute pairs
+            groups = parse_replica_groups(line)
+            g = max((len(grp) for grp in groups), default=1) if groups else 1
         if g <= 1:
             factor = 0.0
         elif op == "all-reduce":
@@ -175,6 +180,46 @@ def collectives_crossing_axis(hlo_text: str, mesh, axis: str
                 hits.append((m.group(2), line.strip()))
                 break
     return hits
+
+
+def result_bytes(hits) -> int:
+    """Total RESULT bytes of ``(op, hlo line)`` collective hits (as
+    returned by :func:`collectives_crossing_axis` /
+    :func:`sync_collective_audit`). Result type only — counting the whole
+    line would also include operand shapes and double the figure."""
+    total = 0
+    for op, line in hits:
+        m = _COLL_RE.search(line)
+        total += _shape_bytes(m.group(1)) if m else 0
+    return total
+
+
+def sync_collective_audit(hlo_text: str, mesh, replica_axis: str = "replica"
+                          ) -> dict:
+    """Structural audit of an HWA sync step's collectives.
+
+    The mesh-resident packed sync's contract is: exactly ONE collective —
+    the weight all-reduce (pmean/psum) over the replica axis — and ZERO
+    collectives crossing any other mesh axis (i.e. the packed-W̄ assembly
+    and the W̿ unpack are shard-local). Returns::
+
+        {"replica": [(op, line), ...],       # collectives crossing replica
+         "other":   {axis: [(op, line), ...]},
+         "replica_allreduce_only": bool,     # replica hits are 1 all-reduce
+         "assembly_free": bool}              # no non-replica crossings
+
+    Used by tests/mesh_hwa_check.py and benchmarks/kernel_bench.py.
+    """
+    replica = collectives_crossing_axis(hlo_text, mesh, replica_axis)
+    other = {ax: collectives_crossing_axis(hlo_text, mesh, ax)
+             for ax in mesh.axis_names if ax != replica_axis}
+    return {
+        "replica": replica,
+        "other": other,
+        "replica_allreduce_only": (
+            len(replica) == 1 and replica[0][0] == "all-reduce"),
+        "assembly_free": not any(hits for hits in other.values()),
+    }
 
 
 # --------------------------------------------------- kernel-launch counting

@@ -11,20 +11,35 @@ Verifies the tentpole properties of mesh-native HWA on a (2,2,2)
   3. the lowered inner train step contains NO collective crossing the
      replica mesh axis — inter-replica traffic happens only in hwa_sync
      (every H steps), which is the paper's communication amortization;
-  4. every replica-crossing collective in the sync step is the weight
-     all-reduce (the single pmean).
+  4. the mesh-RESIDENT sync (shard-aware packed layout, fully-manual
+     shard_map) is bit-identical to the single-device fused Pallas path
+     AND to the per-leaf reference, compiles to exactly ONE Pallas launch
+     per sync, and its HLO contains exactly one replica-axis all-reduce
+     and ZERO collectives crossing any other axis (collective-free
+     packed-W̄ assembly).
+
+All oracles are computed on HOST-materialized copies: eagerly packing
+DISTRIBUTED leaves (a concat across differently-sharded operands) is
+miscompiled by XLA 0.4.37's CPU SPMD partitioner — replicated shards get
+overcounted ~(data×model)-fold. The legacy GSPMD sync path hit the same
+partitioner pattern in-jit, which is why the mesh-resident layout now
+assembles shard-locally and leaves nothing for the partitioner to get
+wrong (the legacy fallback is still asserted, structurally only, below).
 """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.common.compat import use_mesh
+from repro.common.packing import pack_spec, pack_stacked, unpack
 from repro.configs import get_smoke_config
 from repro.core.hwa import HWAConfig
 from repro.core.offline import window_init, window_update
-from repro.launch.hlo import collectives_crossing_axis
+from repro.launch.hlo import (collectives_crossing_axis, count_pallas_calls,
+                              sync_collective_audit)
 from repro.launch.mesh import make_test_mesh
 from repro.launch.specs import input_specs
 from repro.launch.steps import (make_hwa_train_step, make_mesh_hwa_sync_step,
@@ -44,9 +59,20 @@ def check(name, cond):
     ok = ok and cond
 
 
+def to_host(tree):
+    """Host copies — oracle math must never run on distributed arrays
+    (see module docstring)."""
+    return jax.tree.map(lambda x: jnp.asarray(np.asarray(x)), tree)
+
+
 def tree_err(a, b):
-    return max(float(jnp.max(jnp.abs(x.astype(jnp.float32)
-                                     - y.astype(jnp.float32))))
+    return max(float(np.max(np.abs(np.asarray(x, np.float32)
+                                   - np.asarray(y, np.float32))))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def tree_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
                for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
 
 
@@ -112,14 +138,19 @@ check(f"mesh-native == single-device oracle (err={err_ac:.2e})",
       err_ac < 1e-5)
 
 # ---- sync: mesh-native vs stacked oracle ----------------------------------
-# oracle first: the sync bundle donates its inputs
-outer_oracle = jax.tree.map(lambda x: jnp.mean(jnp.asarray(x), 0), a_inner)
+# oracles first (the sync bundle donates its inputs), on HOST copies
+a_host = to_host(a_inner)
+a_host2 = a_host                      # same diverged state for the kernel leg
+a_inner2 = jax.tree.map(jnp.array, a_host)   # fresh copies: sync donates
+outer_oracle = jax.tree.map(lambda x: jnp.mean(x, 0), a_host)
 ws_oracle, wa_oracle = window_update(
     window_init(params, hwa_cfg.window), outer_oracle)
 
 sync = make_mesh_hwa_sync_step(lm, rules, hwa_cfg)
 sync_c = sync.lower(mesh).compile()
 spec = sync.pack_spec               # window state is packed (I, P)/(P,)
+check(f"sync: pack_spec is shard-aware (axes={spec.axes}, "
+      f"shards={spec.shards})", spec.shards > 1 and len(spec.axes) >= 1)
 ring = jnp.zeros((hwa_cfg.window, spec.padded), jnp.float32)
 total = jnp.zeros((spec.padded,), jnp.float32)
 zero = jnp.zeros((), jnp.int32)
@@ -137,24 +168,59 @@ check(f"sync: window average == oracle (err={err_wa:.2e})", err_wa < 1e-5)
 check("sync: count/cycle advanced",
       int(s_count) == 1 and int(s_cycle) == 1)
 
-# use_kernels=True on a multi-device mesh must produce the SAME values:
-# Pallas is opaque to GSPMD (per-shard execution with global-shape
-# semantics corrupts values), so the bundles gate the kernel path to
-# single-device meshes — this leg catches any regression of that gate.
+# ---- mesh-RESIDENT kernel sync: the Pallas path runs on the mesh ----------
+# Bit-parity vs (a) the single-device fused kernel and (b) the per-leaf
+# reference — the packed layouts differ (shard-aware vs contiguous), so
+# all comparisons go through unpacked leaf views of host copies.
 hwa_cfg_k = HWAConfig(n_replicas=K, window=3, use_kernels=True)
 sync_k = make_mesh_hwa_sync_step(lm, rules, hwa_cfg_k)
 sync_kc = sync_k.lower(mesh).compile()
-ring_k = jnp.zeros((hwa_cfg_k.window, spec.padded), jnp.float32)
-total_k = jnp.zeros((spec.padded,), jnp.float32)
+spec_k = sync_k.pack_spec
+ring_k = jnp.zeros((hwa_cfg_k.window, spec_k.padded), jnp.float32)
+total_k = jnp.zeros((spec_k.padded,), jnp.float32)
 with use_mesh(mesh):
-    out_k = sync_kc(s_inner, ring_k, total_k, zero, zero, zero)
-# s_inner replicas are all W̄ from the first sync; its window push equals
-# a fresh window_update with that (replica-invariant) value
-ws_k_oracle, wa_k_oracle = window_update(
-    window_init(params, hwa_cfg_k.window), outer_oracle)
-err_kwa = tree_err(out_k[5], wa_k_oracle)
-check(f"sync(use_kernels on mesh): values correct (err={err_kwa:.2e})",
-      err_kwa < 1e-5)
+    out_k = sync_kc(a_inner2, ring_k, total_k, zero, zero, zero)
+(k_inner, k_ring, k_total, k_count, k_nidx, k_wa, k_cycle) = out_k
+k_ring_h, k_total_h = to_host(k_ring), to_host(k_total)
+
+# (a) single-device fused path (one hwa_sync_packed launch, default spec)
+from repro.kernels import ops as kops
+spec1 = pack_spec(params)
+stacked1 = pack_stacked(a_host2, spec1)
+ring1, total1, avg1 = kops.hwa_sync_packed(
+    stacked1, jnp.zeros((hwa_cfg_k.window, spec1.padded), jnp.float32),
+    jnp.zeros((spec1.padded,), jnp.float32), zero, jnp.zeros(()),
+    jnp.ones(()))
+check("mesh-resident kernel sync: W̿ bit-equal to single-device fused",
+      tree_equal(k_wa, unpack(avg1, spec1)))
+check("mesh-resident kernel sync: restart bit-equal to fused ring slot",
+      tree_equal(jax.tree.map(lambda x: x[0], k_inner),
+                 unpack(ring1[0], spec1)))
+check("mesh-resident kernel sync: ring slot bit-equal",
+      tree_equal(unpack(k_ring_h[0], spec_k), unpack(ring1[0], spec1)))
+check("mesh-resident kernel sync: total bit-equal",
+      tree_equal(unpack(k_total_h, spec_k), unpack(total1, spec1)))
+
+# (b) per-leaf reference (kernel-matching math: mean = sum × 1/K)
+from repro.kernels import ref as kref
+ring_tree = jax.tree.map(
+    lambda x: jnp.zeros((hwa_cfg_k.window,) + x.shape), params)
+total_tree = jax.tree.map(jnp.zeros_like, params)
+triples = jax.tree.map(
+    lambda s, r, t: kref.wa_sync_fused_ref(s, r, t, 0, 0.0, 1.0),
+    a_host2, ring_tree, total_tree)
+is3 = lambda x: isinstance(x, tuple) and len(x) == 3
+leaf_wa = jax.tree.map(lambda t: t[2], triples, is_leaf=is3)
+check("mesh-resident kernel sync: W̿ bit-equal to per-leaf reference",
+      tree_equal(k_wa, leaf_wa))
+check("mesh-resident kernel sync: window advanced",
+      int(k_count) == 1 and int(k_cycle) == 1)
+
+# exactly ONE Pallas launch per sync, counted structurally in the jaxpr
+jaxpr_k = jax.make_jaxpr(sync_k.fn)(*sync_k.abstract_args)
+check(f"mesh-resident kernel sync: one pallas_call in the jaxpr "
+      f"(found {count_pallas_calls(jaxpr_k)})",
+      count_pallas_calls(jaxpr_k) == 1)
 
 # ---- HLO structure: replica-axis traffic only in hwa_sync -----------------
 train_hlo = mesh_train_c.as_text()
@@ -162,12 +228,24 @@ cross_train = collectives_crossing_axis(train_hlo, mesh, "replica")
 check(f"train step: zero replica-crossing collectives "
       f"(found {len(cross_train)})", len(cross_train) == 0)
 
-sync_hlo = sync_c.as_text()
-cross_sync = collectives_crossing_axis(sync_hlo, mesh, "replica")
-ops = {op for op, _ in cross_sync}
-check(f"sync step: replica-crossing collectives are the weight "
-      f"all-reduce only (ops={sorted(ops)})",
-      len(cross_sync) >= 1 and ops == {"all-reduce"})
+for label, compiled in [("sync", sync_c), ("kernel sync", sync_kc)]:
+    audit = sync_collective_audit(compiled.as_text(), mesh)
+    check(f"{label} step: exactly one replica-crossing collective, the "
+          f"weight all-reduce (found {[op for op, _ in audit['replica']]})",
+          audit["replica_allreduce_only"])
+    n_other = {ax: len(h) for ax, h in audit["other"].items()}
+    check(f"{label} step: packed-W̄ assembly is collective-free "
+          f"(non-replica crossings: {n_other})", audit["assembly_free"])
+
+# the legacy (non-mesh-resident) fallback still compiles; structurally it
+# pays the assembly redistribution — the cost the aligned layout removes
+sync_legacy = make_mesh_hwa_sync_step(lm, rules, hwa_cfg,
+                                      mesh_resident=False)
+legacy_audit = sync_collective_audit(
+    sync_legacy.lower(mesh).compile().as_text(), mesh)
+n_legacy = sum(len(h) for h in legacy_audit["other"].values())
+check(f"legacy fallback: compiles, assembly pays non-replica collectives "
+      f"(found {n_legacy})", n_legacy >= 1)
 
 # vmap-path train step, for contrast, is *allowed* replica traffic (GSPMD
 # may or may not insert it) — we only report it, the guarantee is the

@@ -1,0 +1,26 @@
+"""Docs stay buildable: the ``make docs-check`` logic runs inside the
+tier-1 suite too (tools/docs_check.py is the single source of truth)."""
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tools"))
+import docs_check
+
+
+def test_readme_exists_with_quickstart():
+    assert os.path.exists(os.path.join(docs_check.ROOT, "README.md"))
+    assert os.path.exists(os.path.join(docs_check.ROOT, "docs",
+                                       "ARCHITECTURE.md"))
+
+
+def test_intra_repo_links_resolve():
+    assert docs_check.check_links() == []
+
+
+def test_quickstart_make_targets_dry_run():
+    if not any(os.access(os.path.join(p, "make"), os.X_OK)
+               for p in os.environ.get("PATH", "").split(os.pathsep) if p):
+        pytest.skip("make not on PATH")
+    assert docs_check.check_quickstart() == []

@@ -1,0 +1,91 @@
+#!/usr/bin/env python
+"""Docs sanity: quickstart commands dry-run + intra-repo link check.
+
+Two failure classes this guards against (wired into ``make test`` via the
+``docs-check`` target, and into the pytest suite via tests/test_docs.py):
+
+1. README quickstart commands referencing Make targets that no longer
+   exist — every ``make <target>`` found in fenced code blocks of
+   README.md is executed with ``make -n`` (dry-run: recipes are printed,
+   never run), which fails on unknown targets or Makefile syntax errors.
+2. Broken intra-repo markdown links — every ``[text](path)`` whose
+   target is not an external URL or anchor must resolve to an existing
+   file/directory relative to the linking document.
+
+Exit code 0 iff everything passes; offending items are printed.
+"""
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE_RE = re.compile(r"```(?:bash|sh|shell)?\n(.*?)```", re.S)
+_MAKE_RE = re.compile(r"^\s*make\s+([A-Za-z0-9_.-]+)\s*(?:#.*)?$", re.M)
+_EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def md_files() -> list[str]:
+    out = []
+    for dirpath, dirnames, filenames in os.walk(ROOT):
+        dirnames[:] = [d for d in dirnames
+                       if d not in (".git", "__pycache__", ".pytest_cache")]
+        out.extend(os.path.join(dirpath, f) for f in filenames
+                   if f.endswith(".md"))
+    return sorted(out)
+
+
+def check_links() -> list[str]:
+    errors = []
+    for path in md_files():
+        text = open(path, encoding="utf-8").read()
+        base = os.path.dirname(path)
+        for target in _LINK_RE.findall(text):
+            if target.startswith(_EXTERNAL) or target.startswith("#"):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            resolved = os.path.normpath(os.path.join(base, rel))
+            if not os.path.exists(resolved):
+                errors.append(f"{os.path.relpath(path, ROOT)}: broken link "
+                              f"-> {target}")
+    return errors
+
+
+def check_quickstart() -> list[str]:
+    errors = []
+    readme = os.path.join(ROOT, "README.md")
+    if not os.path.exists(readme):
+        return [f"missing {readme}"]
+    text = open(readme, encoding="utf-8").read()
+    targets = []
+    for block in _FENCE_RE.findall(text):
+        targets.extend(_MAKE_RE.findall(block))
+    if not targets:
+        return ["README.md quickstart names no `make` targets"]
+    for t in dict.fromkeys(targets):
+        proc = subprocess.run(["make", "-n", t], cwd=ROOT,
+                              capture_output=True, text=True, timeout=60)
+        if proc.returncode != 0:
+            errors.append(f"`make -n {t}` failed: "
+                          f"{(proc.stderr or proc.stdout).strip()[:160]}")
+    return errors
+
+
+def main() -> int:
+    errors = check_links() + check_quickstart()
+    for e in errors:
+        print(f"DOCS-CHECK FAIL: {e}")
+    if not errors:
+        print(f"docs-check OK ({len(md_files())} markdown files, "
+              "quickstart targets dry-run clean)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
