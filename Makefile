@@ -3,7 +3,8 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test spmd mesh-hwa bench bench-kernels train-smoke docs-check
+.PHONY: test spmd mesh-hwa bench bench-kernels bench-sync train-smoke \
+	docs-check
 
 # tier-1: docs sanity + the full CPU suite (SPMD checks run in their own
 # subprocesses)
@@ -32,3 +33,8 @@ bench:
 # repo root (cross-PR perf trajectory)
 bench-kernels:
 	$(PY) -m benchmarks.run --only kernels
+
+# flat-vs-two-level sync-tree traffic on the pod-carved (2,2,2) mesh;
+# appends the sync/tree block to BENCH_kernels.json
+bench-sync:
+	$(PY) -m benchmarks.run --only sync_tree

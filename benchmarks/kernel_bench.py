@@ -174,7 +174,16 @@ _WORKER_FLAG = "--mesh-sync-worker"
 def _mesh_sync_worker():
     """Runs with 8 forced host devices: lower the mesh sync bundle gated
     (legacy GSPMD fallback) vs mesh-resident and measure the difference."""
+    import os
+
     import jax
+
+    # The gated leg deliberately builds the legacy GSPMD fallback, which
+    # is a hard error on multi-device CPU meshes (launch/sync/legacy.py —
+    # XLA 0.4.37 miscompiles the assembly). This worker only introspects
+    # the lowered HLO and never trusts computed values, so opt into the
+    # escape hatch.
+    os.environ.setdefault("REPRO_ALLOW_LEGACY_ASSEMBLY", "1")
 
     from repro.configs import get_smoke_config
     from repro.core.hwa import HWAConfig

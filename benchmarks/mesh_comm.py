@@ -59,6 +59,18 @@ def _worker():
         int(jnp.prod(jnp.asarray(l.shape)))
         for l in jax.tree.leaves(lm.abstract()[0]))
     out["param_bytes"] = 4 * n_params
+    # flat-vs-tree sync topologies on the pod-carved (2,2,2) mesh — the
+    # same record `make bench-sync` persists into BENCH_kernels.json.
+    # Recomputed here (~3 s: three small sync-bundle compiles) rather
+    # than read from that file: the worker subprocesses cannot share a
+    # live record, and a stale file would silently misreport. Isolated
+    # so a tree-path regression cannot void the unrelated replica-byte
+    # measurements above (it surfaces as a tree/ERROR row).
+    try:
+        from benchmarks.sync_tree import tree_sync_record
+        out["tree"] = tree_sync_record()
+    except Exception as e:  # noqa: BLE001 — report and keep the rest
+        out["tree"] = {"error": f"{type(e).__name__}: {e}"}
     print(json.dumps(out))
 
 
@@ -85,6 +97,19 @@ def main(print_fn=print):
         print_fn(csv_row(f"mesh_comm/bytes_per_step/H={H}", 0.0,
                          f"mesh_native={per_step:.3e};"
                          f"per_step_allreduce={sync_b:.3e}"))
+    # flat vs two-level tree: modeled ICI bytes per cycle of H₂ syncs on
+    # the pod-carved (2,2,2) mesh (cross-pod traffic is the tree's win)
+    tree = rec.get("tree", {})
+    if "error" in tree:
+        print_fn(csv_row("mesh_comm/sync_tree_cycle/ERROR", 0.0,
+                         tree["error"].replace(",", ";")[:160]))
+    for h2, c in tree.get("per_cycle", {}).items():
+        print_fn(csv_row(
+            f"mesh_comm/sync_tree_cycle/{h2}", 0.0,
+            f"flat_ici={c['flat_ici_bytes']:.3e};"
+            f"tree_ici={c['tree_ici_bytes']:.3e};"
+            f"flat_pod={c['flat_pod_bytes']:.3e};"
+            f"tree_pod={c['tree_pod_bytes']:.3e}"))
     return rec
 
 

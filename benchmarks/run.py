@@ -25,8 +25,39 @@ BENCHES = [
     ("comm", "benchmarks.comm_amortization"),
     ("mesh_comm", "benchmarks.mesh_comm"),
     ("kernels", "benchmarks.kernel_bench"),
+    ("sync_tree", "benchmarks.sync_tree"),
     ("roofline", "benchmarks.roofline"),
 ]
+
+# Benchmarks whose structured result is persisted into BENCH_kernels.json
+# at the repo root (cross-PR perf trajectory). "kernels" merges its
+# record at the top level (historical layout); "sync_tree" appends under
+# the "sync/tree" key — existing keys from other benchmarks survive.
+_BENCH_JSON_KEY = {"kernels": None, "sync_tree": "sync/tree"}
+
+
+def _merge_bench_json(name: str, result: dict) -> None:
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    path = os.path.join(root, "BENCH_kernels.json")
+    data = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            data = {}
+    key = _BENCH_JSON_KEY[name]
+    if key is None:
+        # kernels owns the top level: drop its stale keys (a renamed or
+        # removed benchmark must not linger as a "current" measurement),
+        # keeping only the blocks other benchmarks own
+        keep = {k for k in _BENCH_JSON_KEY.values() if k is not None}
+        data = {k: v for k, v in data.items() if k in keep}
+        data.update(result)
+    else:
+        data[key] = result
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
 
 
 def main() -> None:
@@ -53,10 +84,8 @@ def main() -> None:
             result = None
             sink(f"{name}/ERROR,0,{type(e).__name__}: {e}")
         sink(f"{name}/wall_s,{(time.time()-t0)*1e6:.0f},done")
-        if name == "kernels" and isinstance(result, dict) and result:
-            root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-            with open(os.path.join(root, "BENCH_kernels.json"), "w") as f:
-                json.dump(result, f, indent=2, sort_keys=True)
+        if name in _BENCH_JSON_KEY and isinstance(result, dict) and result:
+            _merge_bench_json(name, result)
     with open("experiments/bench/rows.csv", "w") as f:
         f.write("name,us_per_call,derived\n")
         f.write("\n".join(rows) + "\n")

@@ -1,0 +1,136 @@
+"""Flat vs two-level sync-tree traffic, measured from real lowered HLO on
+the (2,2,2) pod-carved test mesh (pod=2, replica=2, model=2 → K=4 as
+2 pods × 2 members).
+
+Both topologies run on the SAME mesh so "cross-pod bytes" is a
+well-defined quantity for both: the flat baseline is ``Flat(("pod",
+"replica"))`` — one joint all-reduce whose groups span pods every sync —
+while the tree's inner sync reduces within pods only and its outer sync
+adds exactly one cross-pod all-reduce (audited per level by
+``sync_collective_audit``). Per-cycle numbers model a cycle of H₂ syncs:
+flat pays the pod-crossing all-reduce H₂ times, the tree once — the
+H₂-fold cross-pod amortization the ISSUE/ROADMAP hierarchical-sync item
+asks for, on top of the paper's H-fold.
+
+``make bench-sync`` runs this module alone; ``benchmarks.run`` merges
+the returned record into BENCH_kernels.json under the ``sync/tree`` key
+(cross-PR trajectory). Runs the device-hungry part in a subprocess so
+the forced 8-device host platform never leaks into the benchmark
+process.
+"""
+import json
+import sys
+
+from benchmarks.common import csv_row
+
+_WORKER_FLAG = "--sync-tree-worker"
+
+OUTER_EVERY = 2          # H₂ of the measured tree bundles
+CYCLE_H2 = (2, 4, 8)     # per-cycle amortization models
+
+
+def tree_sync_record() -> dict:
+    """Lower + compile the flat / inner / outer sync bundles on the
+    pod-carved test mesh and extract per-bundle collective structure.
+    Must run in a process with ≥8 (forced) host devices."""
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.core.hwa import HWAConfig
+    from repro.launch.hlo import (collective_stats, count_pallas_calls,
+                                  result_bytes, sync_collective_audit)
+    from repro.launch.mesh import make_tree_test_mesh
+    from repro.launch.steps import (Flat, TwoLevel,
+                                    make_mesh_hwa_inner_sync_step,
+                                    make_mesh_hwa_sync_step)
+    from repro.models.registry import build_model
+    from repro.sharding.rules import make_tp_rules
+
+    mesh = make_tree_test_mesh()
+    rules = make_tp_rules(mesh, replica_axis=("pod", "replica"))
+    lm = build_model(get_smoke_config("granite-3-2b"))
+    tree_cfg = HWAConfig(n_replicas=4, window=3, use_kernels=True,
+                         outer_every=OUTER_EVERY)
+    flat_cfg = HWAConfig(n_replicas=4, window=3, use_kernels=True)
+    topo = TwoLevel("replica", "pod", outer_every=OUTER_EVERY)
+    bundles = {
+        "flat": make_mesh_hwa_sync_step(
+            lm, rules, flat_cfg, topology=Flat(("pod", "replica"))),
+        "outer": make_mesh_hwa_sync_step(lm, rules, tree_cfg, topology=topo),
+        "inner": make_mesh_hwa_inner_sync_step(lm, rules, tree_cfg, topo),
+    }
+    rec = {"mesh": {k: int(v) for k, v in mesh.shape.items()},
+           "outer_every": OUTER_EVERY}
+    for name, bundle in bundles.items():
+        hlo = bundle.lower(mesh).compile().as_text()
+        stats = collective_stats(hlo)
+        audit = sync_collective_audit(hlo, mesh, "replica", "pod")
+        pod_hits = audit["outer"]        # collectives crossing pods
+        pod_text = "\n".join(line for _, line in pod_hits)
+        rec[name] = {
+            "collectives": sum(stats.counts.values()),
+            "ici_bytes_per_sync": stats.traffic_bytes,
+            "pod_crossing_collectives": len(pod_hits),
+            "pod_crossing_result_bytes": result_bytes(pod_hits),
+            "pod_crossing_ici_bytes": collective_stats(pod_text).traffic_bytes,
+            "pallas_launches": count_pallas_calls(
+                jax.make_jaxpr(bundle.fn)(*bundle.abstract_args)),
+            "inner_sync_ok": audit["inner_sync_ok"],
+            "outer_sync_ok": audit["outer_sync_ok"],
+            "mixed": len(audit["mixed"]),
+        }
+    # per-cycle model: a cycle = H₂ syncs; the tree runs H₂-1 inner + 1
+    # outer, the flat baseline H₂ full syncs
+    rec["per_cycle"] = {}
+    for h2 in CYCLE_H2:
+        flat_pod = h2 * rec["flat"]["pod_crossing_ici_bytes"]
+        tree_pod = ((h2 - 1) * rec["inner"]["pod_crossing_ici_bytes"]
+                    + rec["outer"]["pod_crossing_ici_bytes"])
+        rec["per_cycle"][f"H2={h2}"] = {
+            "flat_pod_bytes": flat_pod,
+            "tree_pod_bytes": tree_pod,
+            "flat_ici_bytes": h2 * rec["flat"]["ici_bytes_per_sync"],
+            "tree_ici_bytes": ((h2 - 1) * rec["inner"]["ici_bytes_per_sync"]
+                               + rec["outer"]["ici_bytes_per_sync"]),
+        }
+    return rec
+
+
+def _worker():
+    print(json.dumps(tree_sync_record()))
+
+
+def main(print_fn=print):
+    from benchmarks.common import run_forced_device_worker
+    rec = run_forced_device_worker(__file__, _WORKER_FLAG,
+                                   error_row="sync/tree/ERROR",
+                                   print_fn=print_fn)
+    if not rec:
+        return {}
+    for name in ("flat", "inner", "outer"):
+        r = rec[name]
+        print_fn(csv_row(
+            f"sync/tree/{name}", 0.0,
+            f"collectives={r['collectives']};"
+            f"ici_bytes_per_sync={r['ici_bytes_per_sync']:.3e};"
+            f"pod_crossing_collectives={r['pod_crossing_collectives']};"
+            f"pod_crossing_ici_bytes={r['pod_crossing_ici_bytes']:.3e};"
+            f"launches={r['pallas_launches']};"
+            f"inner_ok={r['inner_sync_ok']};outer_ok={r['outer_sync_ok']}"))
+    for h2, c in rec["per_cycle"].items():
+        # no measured flat pod traffic -> nothing to cut (not a 100% win)
+        cut = (1.0 - c["tree_pod_bytes"] / c["flat_pod_bytes"]
+               if c["flat_pod_bytes"] else 0.0)
+        print_fn(csv_row(
+            f"sync/tree/cycle/{h2}", 0.0,
+            f"flat_pod_bytes={c['flat_pod_bytes']:.3e};"
+            f"tree_pod_bytes={c['tree_pod_bytes']:.3e};"
+            f"pod_traffic_cut={cut:.2f}"))
+    return rec
+
+
+if __name__ == "__main__":
+    if _WORKER_FLAG in sys.argv:
+        _worker()
+    else:
+        main()

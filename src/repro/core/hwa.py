@@ -38,6 +38,12 @@ class HWAConfig:
     window_kind: str = "ring"    # ring | streaming (O(1)-memory, beyond paper)
     avg_opt_state: bool = False  # also average optimizer moments at sync
     use_kernels: bool = False    # fused Pallas WA update path
+    outer_every: int = 1         # H₂, the two-level sync tree's outer
+                                 # period: every H steps pods average
+                                 # INTERNALLY; only every H·H₂ steps does
+                                 # the cross-pod all-reduce + window push
+                                 # run (launch/sync/topology.py TwoLevel).
+                                 # 1 ≡ flat sync (every sync is global).
 
 
 @dataclasses.dataclass
@@ -104,7 +110,7 @@ def window_push_packed(cfg: HWAConfig, new_buf: jax.Array,
     under what sharding) the final unpack happens. ``use_kernel``
     overrides ``cfg.use_kernels``; on multi-device meshes kernels are
     only safe inside a fully-manual shard_map on local buffer slices
-    (``launch.steps._local_packed_sync``) — a bare Pallas call is opaque
+    (``launch.sync.packed._local_packed_sync``) — a bare Pallas call is opaque
     to the GSPMD partitioner, which would run it per-shard with
     global-shape semantics and corrupt values.
     """
@@ -250,7 +256,7 @@ def hwa_sync_named(cfg: HWAConfig, params: PyTree,
        from auto-sharded leaves, and XLA miscompiles that assembly in
        manual subgroups (values come back 2×, the IsManualSubgroup bug
        class). The mesh-native sync bundle
-       (``launch.steps.make_mesh_hwa_sync_step``) therefore runs the
+       (``launch.sync.bundles.make_mesh_hwa_sync_step``) therefore runs the
        WHOLE sync — psum, window push, unpack — inside a FULLY-manual
        shard_map over a shard-aware packed layout (no auto axes, no
        subgroup to miscompile, no assembly collectives); use that

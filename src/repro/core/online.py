@@ -48,6 +48,97 @@ def broadcast_to_replicas(outer: Any, n_replicas: int) -> Any:
         outer)
 
 
+# --------------------------------------------- grouped / subgroup means
+#
+# The two-level sync tree (launch/sync/topology.py) computes the global
+# mean as a COMPOSITION of grouped reductions: per-pod partial sums of
+# 1/K-pre-scaled replicas, then a sum of the pod partials. Floating-point
+# addition is not associative, so "composition == flat" is only a 0-ULP
+# statement when the reduction ORDER is pinned. ``jnp.sum``'s order is an
+# XLA implementation detail (measured on the CPU backend it is neither
+# sequential nor pairwise for wide rows), so the canonical order lives
+# here instead: a contiguous-pairing binary tree.
+
+
+def halving_sum_axis0(x: jax.Array) -> jax.Array:
+    """Sum over axis 0 by a fixed contiguous-pairing binary tree.
+
+    Adjacent pairs are added, then adjacent partial pairs, and so on (an
+    odd trailing element is carried to the next round). Two properties
+    the sync tree is built on:
+
+    1. **composition** — split axis 0 into G contiguous groups of a
+       power-of-two size, halving-sum each group, then halving-sum the G
+       partials: that performs EXACTLY the additions of the flat halving
+       sum, in the same order — bit-identical, not merely close;
+    2. **mesh equivalence** — a psum over a size-2 mesh axis is one IEEE
+       add (commutative, hence order-free), so a chain of 2-way
+       collectives over contiguous replica blocks reproduces this tree's
+       bits. That is how the two-level sync's grouped psum composition
+       matches the flat path to 0 ULP (docs/ARCHITECTURE.md §4).
+    """
+    while x.shape[0] > 1:
+        n = x.shape[0]
+        half = x[0:n - (n % 2):2] + x[1:n:2]
+        x = jnp.concatenate([half, x[n - 1:]], axis=0) if n % 2 else half
+    return x[0]
+
+
+def online_average_canonical(stacked_params: Any) -> Any:
+    """Flat K-replica mean with a *defined* reduction order: every
+    replica pre-scaled by 1/K (mirroring the mesh path's pre-scaled
+    partial psums; exact for power-of-two K), then :func:`halving_sum_axis0`.
+
+    This is the host-side reference the grouped/two-level means are
+    bit-compared against (tests/test_sync_topology.py, mesh_hwa_check).
+    Agrees with :func:`online_average` to normal float tolerance; the
+    0-ULP claims are between canonical/grouped/mesh formulations only.
+    """
+    def one(x):
+        k = x.shape[0]
+        return halving_sum_axis0(x.astype(jnp.float32) * (1.0 / k)).astype(x.dtype)
+    return jax.tree.map(one, stacked_params)
+
+
+def online_average_grouped(stacked_params: Any, n_groups: int) -> Any:
+    """Two-level (grouped) K-replica mean: axis 0 split into ``n_groups``
+    contiguous pods, per-pod halving sums of the 1/K-pre-scaled replicas,
+    then a halving sum over the pod partials — the exact arithmetic the
+    two-level sync tree performs with its inner/outer psum composition.
+
+    Bit-identical to :func:`online_average_canonical` whenever the group
+    size K/n_groups is a power of two (so for EVERY factorization of a
+    power-of-two K) — the property pinned by the hypothesis test in
+    tests/test_sync_topology.py.
+    """
+    def one(x):
+        k = x.shape[0]
+        if n_groups < 1 or k % n_groups:
+            raise ValueError(f"{n_groups} groups do not divide K={k}")
+        scaled = x.astype(jnp.float32) * (1.0 / k)
+        grouped = scaled.reshape((n_groups, k // n_groups) + x.shape[1:])
+        partials = jax.vmap(halving_sum_axis0)(grouped)   # per-pod sums
+        return halving_sum_axis0(partials).astype(x.dtype)
+    return jax.tree.map(one, stacked_params)
+
+
+def pod_mean_grouped(stacked_params: Any, n_groups: int) -> Any:
+    """Per-pod means, stacked: (K, ...) → (n_groups, ...) where group g
+    is the mean of its K/n_groups contiguous replicas — the host oracle
+    for the INNER (pod-local) sync level's restart values. Same halving
+    order and pre-scaling as the mesh path (exact for power-of-two group
+    sizes)."""
+    def one(x):
+        k = x.shape[0]
+        if n_groups < 1 or k % n_groups:
+            raise ValueError(f"{n_groups} groups do not divide K={k}")
+        per = k // n_groups
+        grouped = x.astype(jnp.float32).reshape((n_groups, per) + x.shape[1:])
+        return jax.vmap(
+            lambda g: halving_sum_axis0(g * (1.0 / per)))(grouped).astype(x.dtype)
+    return jax.tree.map(one, stacked_params)
+
+
 def online_average_named(params: Any, axis_name: str = "replica") -> Any:
     """Outer weights W̄_e in the mesh-native path: each replica holds its
     own *unstacked* params and the average is a single ``pmean`` over the

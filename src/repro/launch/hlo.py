@@ -194,31 +194,76 @@ def result_bytes(hits) -> int:
     return total
 
 
-def sync_collective_audit(hlo_text: str, mesh, replica_axis: str = "replica"
-                          ) -> dict:
-    """Structural audit of an HWA sync step's collectives.
+def sync_collective_audit(hlo_text: str, mesh, replica_axis: str = "replica",
+                          outer_axis: str | None = None) -> dict:
+    """Structural audit of an HWA sync step's collectives, per level.
 
-    The mesh-resident packed sync's contract is: exactly ONE collective —
-    the weight all-reduce (pmean/psum) over the replica axis — and ZERO
-    collectives crossing any other mesh axis (i.e. the packed-W̄ assembly
-    and the W̿ unpack are shard-local). Returns::
+    **Flat** (``outer_axis=None``): the mesh-resident packed sync's
+    contract is exactly ONE collective — the weight all-reduce
+    (pmean/psum) over the replica axis — and ZERO collectives crossing
+    any other mesh axis (i.e. the packed-W̄ assembly and the W̿ unpack
+    are shard-local).
 
-        {"replica": [(op, line), ...],       # collectives crossing replica
+    **Two-level** (``outer_axis`` set, e.g. ``"pod"``): each collective
+    is classified by which of the two replica-population axes its
+    ``replica_groups`` actually span —
+
+    - *inner-only*: crosses ``replica_axis`` but NOT ``outer_axis`` (a
+      per-pod reduction with pod-local groups);
+    - *outer-only*: crosses ``outer_axis`` but NOT ``replica_axis`` (the
+      cross-pod all-reduce of already-pod-reduced partials);
+    - *mixed*: spans both — a MISWIRED grouping (e.g. one joint
+      all-reduce where the tree promises a composition), rejected by
+      both per-level verdicts below.
+
+    The per-level expectations the tree bundles are audited against:
+
+    - ``inner_sync_ok`` — an INNER sync crosses ONLY the inner groups:
+      exactly one inner-only all-reduce, zero outer crossings, zero
+      mixed, assembly-free;
+    - ``outer_sync_ok`` — an OUTER sync adds exactly one cross-pod
+      all-reduce on top: one inner-only + one outer-only all-reduce,
+      zero mixed, assembly-free.
+
+    Returns::
+
+        {"replica": [(op, line), ...],   # all collectives crossing replica
+         "outer":   [(op, line), ...],   # all crossing outer_axis ([] if None)
+         "mixed":   [(op, line), ...],   # crossing both (miswired grouping)
          "other":   {axis: [(op, line), ...]},
-         "replica_allreduce_only": bool,     # replica hits are 1 all-reduce
-         "assembly_free": bool}              # no non-replica crossings
+         "replica_allreduce_only": bool, # replica hits are 1 all-reduce
+         "assembly_free": bool,          # no crossings outside the levels
+         "inner_sync_ok": bool,
+         "outer_sync_ok": bool}
 
-    Used by tests/mesh_hwa_check.py and benchmarks/kernel_bench.py.
+    Used by tests/mesh_hwa_check.py, tests/test_sync_topology.py and
+    benchmarks/kernel_bench.py / benchmarks/sync_tree.py.
     """
     replica = collectives_crossing_axis(hlo_text, mesh, replica_axis)
+    outer = (collectives_crossing_axis(hlo_text, mesh, outer_axis)
+             if outer_axis is not None else [])
+    outer_lines = {line for _, line in outer}
+    replica_lines = {line for _, line in replica}
+    mixed = [h for h in replica if h[1] in outer_lines]
+    inner_only = [h for h in replica if h[1] not in outer_lines]
+    outer_only = [h for h in outer if h[1] not in replica_lines]
     other = {ax: collectives_crossing_axis(hlo_text, mesh, ax)
-             for ax in mesh.axis_names if ax != replica_axis}
+             for ax in mesh.axis_names
+             if ax != replica_axis and ax != outer_axis}
+    assembly_free = not any(hits for hits in other.values())
+    one_ar = lambda hits: len(hits) == 1 and hits[0][0] == "all-reduce"
     return {
         "replica": replica,
+        "outer": outer,
+        "mixed": mixed,
         "other": other,
         "replica_allreduce_only": (
             len(replica) == 1 and replica[0][0] == "all-reduce"),
-        "assembly_free": not any(hits for hits in other.values()),
+        "assembly_free": assembly_free,
+        "inner_sync_ok": (one_ar(inner_only) and not outer
+                          and assembly_free),
+        "outer_sync_ok": (one_ar(inner_only) and one_ar(outer_only)
+                          and not mixed and assembly_free),
     }
 
 

@@ -37,3 +37,22 @@ def make_hwa_mesh(n_replicas: int = 2, *, multi_pod: bool = False):
 def make_test_mesh(shape=(2, 2, 2), axes=("replica", "data", "model")):
     """Small mesh for CI-scale SPMD tests (requires forced host devices)."""
     return make_mesh(shape, axes)
+
+
+def make_tree_test_mesh(shape=(2, 2, 2), axes=("pod", "replica", "model")):
+    """Pod-carved test mesh for the two-level sync tree (8 forced host
+    devices): K = 4 replicas as 2 pods × 2 members, with a real ``model``
+    TP axis so the shard-aware packed layout is exercised under the tree.
+
+    The replica population is split over TWO axes — ``pod`` (slow,
+    expensive cross-pod links) and ``replica`` (fast, pod-internal) — so
+    the tree's inner sync reduces over ``replica`` only and the rare
+    outer sync adds the one cross-``pod`` all-reduce
+    (``launch.sync.topology.TwoLevel``). Axis order is pod-major: the
+    stacked K dim sharded over ``("pod", "replica")`` keeps each pod a
+    CONTIGUOUS replica block, which the 0-ULP flat↔tree parity relies on
+    (docs/ARCHITECTURE.md §4). At production scale the driver carves the
+    same (pod, replica, data, model) shape from the real topology
+    (``repro.launch.train --sync-tree two-level``).
+    """
+    return make_mesh(shape, axes)

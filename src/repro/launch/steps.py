@@ -1,868 +1,68 @@
-"""Step builders: plain data+tensor-parallel training/serving steps and the
-HWA-stacked variants, with in/out shardings resolved from the logical-dim
-trees. These are what the dry-run lowers and what real launches would run.
+"""Step builders — thin re-exporting facade over ``repro.launch.sync``.
+
+The 868-line monolith this module used to be was carved into the
+``launch/sync/`` subsystem in PR 4:
+
+- ``launch.sync.topology`` — the :class:`SyncTopology` abstraction:
+  ``Flat(axis)`` (one global all-reduce per sync, the historical
+  behavior) and ``TwoLevel(inner_axis, outer_axis, outer_every)`` (the
+  paper's namesake hierarchy: pod-internal averaging every H steps, the
+  cross-pod all-reduce + window push only every H·H₂).
+- ``launch.sync.packed`` — the mesh-resident packed sync machinery:
+  ``_mesh_resident_layout`` (shard-aware layout chooser),
+  ``_local_packed_sync`` / ``_local_inner_sync`` (the fully-manual
+  per-device bodies), ``_packed_sharding``.
+- ``launch.sync.legacy`` — the legacy GSPMD fallback for non-qualifying
+  layouts (e.g. FSDP), now a HARD ERROR on multi-device CPU meshes where
+  XLA 0.4.37 miscompiles the packed-W̄ assembly
+  (``REPRO_ALLOW_LEGACY_ASSEMBLY=1`` downgrades it to the old warning).
+- ``launch.sync.bundles`` — the StepBundle builders themselves.
+
+Every name importable from here before the split still is; new code
+should import from ``repro.launch.sync`` directly.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-import math
-from typing import Any
-
-import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-
-from repro.common.compat import shard_map
+# The bundle builders and their public dataclasses.
+from repro.launch.sync.bundles import (StepBundle, _expand0, _mk_optimizer,
+                                       _prefix_dims, _squeeze0,
+                                       make_decode_step, make_hwa_sync_step,
+                                       make_hwa_train_step,
+                                       make_mesh_hwa_inner_sync_step,
+                                       make_mesh_hwa_sync_step,
+                                       make_mesh_hwa_train_step,
+                                       make_prefill_step, make_train_step,
+                                       opt_state_dims)
+# Sync topologies (new in PR 4).
+from repro.launch.sync.topology import Flat, SyncTopology, TwoLevel
+# Mesh-resident packed machinery (private names kept importable — the
+# ROADMAP/ARCHITECTURE docs and downstream experiments reference them).
+from repro.launch.sync.packed import (_axes_entry, _local_inner_sync,
+                                      _local_packed_sync,
+                                      _mesh_resident_layout, _norm_entry,
+                                      _packed_sharding)
+# Legacy GSPMD fallback; ``check_legacy_assembly`` is the promoted hard
+# error (the old ``_warn_legacy_assembly`` name stays as an alias).
+from repro.launch.sync.legacy import (check_legacy_assembly,
+                                      make_legacy_mesh_sync_step,
+                                      make_legacy_sync_step)
+# Names the monolith used to expose at module scope via its own imports;
+# kept so pre-split `from repro.launch.steps import X` code still works.
 from repro.core.hwa import (HWAConfig, hwa_inner_step, hwa_local_inner_step,
                             hwa_sync)
-from repro.models.registry import LM
-from repro.optim import adamw, apply_updates, sgd
 from repro.sharding.rules import (ShardingRules, make_tp_rules,
                                   replicated_specs, stacked_replica_specs)
 
-PyTree = Any
-
-
-def _prefix_dims(dim_tree, name):
-    """Prepend a logical dim to every dims-tuple leaf (e.g. 'replica')."""
-    is_dims = lambda t: isinstance(t, tuple) and all(
-        isinstance(e, (str, type(None))) for e in t)
-    return jax.tree.map(lambda t: (name,) + t, dim_tree, is_leaf=is_dims)
-
-
-def opt_state_dims(opt_state_abs, param_dims):
-    """Logical dims for optimizer state: moments mirror the params."""
-    def dims_for(path_leaf):
-        return param_dims
-    # adamw: {"m": params-like, "v": params-like, "count": scalar}
-    # sgd(momentum): {"mu": params-like}
-    out = {}
-    for k, v in opt_state_abs.items():
-        if k == "count":
-            out[k] = ()
-        else:
-            out[k] = param_dims
-    return out
-
-
-@dataclasses.dataclass
-class StepBundle:
-    """A step function plus its abstract args and in/out shardings.
-
-    ``pack_spec`` is set by the WA sync bundles: their window state (and
-    returned W̿) lives in the packed layout of ``repro.common.packing``;
-    consumers materialize leaf views with ``packing.unpack(buf,
-    bundle.pack_spec)``.
-    """
-    fn: Any
-    abstract_args: tuple
-    in_shardings: tuple
-    out_shardings: Any
-    donate_argnums: tuple = ()
-    pack_spec: Any = None
-
-    def lower(self, mesh: Mesh):
-        jitted = jax.jit(self.fn, in_shardings=self.in_shardings,
-                         out_shardings=self.out_shardings,
-                         donate_argnums=self.donate_argnums)
-        with mesh:
-            return jitted.lower(*self.abstract_args)
-
-
-def _mk_optimizer(name: str):
-    if name == "sgd":
-        return sgd(momentum=0.9, weight_decay=5e-4)
-    return adamw(weight_decay=0.1)
-
-
-def make_train_step(lm: LM, rules: ShardingRules, batch_specs, batch_dims,
-                    optimizer: str = "adamw", lr: float = 3e-4,
-                    opt_rules: ShardingRules | None = None,
-                    n_microbatches: int = 1) -> StepBundle:
-    """Plain data+tensor-parallel train step (the 40-combo baseline).
-
-    ``opt_rules`` lets the optimizer moments use a different (e.g. FSDP)
-    rule table than the compute params. ``n_microbatches`` > 1 enables
-    gradient accumulation: peak activation temps scale ~1/n_mb while the
-    f32 grad accumulator is fully sharded — the lever that fits the ≥27B
-    trainings into 16 GB/chip (EXPERIMENTS.md §Perf).
-    """
-    opt = _mk_optimizer(optimizer)
-    params_abs, param_dims = lm.abstract()
-    opt_abs = jax.eval_shape(opt.init, params_abs)
-    o_dims = opt_state_dims(opt_abs, param_dims)
-    opt_rules = opt_rules or rules
-    loss_fn = lambda p, b: lm.loss(p, b, rules=rules)
-
-    def step(params, opt_state, batch):
-        if n_microbatches == 1:
-            (loss, metrics), grads = jax.value_and_grad(
-                loss_fn, has_aux=True)(params, batch)
-        else:
-            mb = jax.tree.map(
-                lambda x: x.reshape((n_microbatches,
-                                     x.shape[0] // n_microbatches)
-                                    + x.shape[1:]), batch)
-
-            def body(acc, mbatch):
-                g_acc, l_acc, a_acc = acc
-                (loss, metrics), g = jax.value_and_grad(
-                    loss_fn, has_aux=True)(params, mbatch)
-                g_acc = jax.tree.map(
-                    lambda a, gi: a + gi.astype(jnp.float32), g_acc, g)
-                return (g_acc, l_acc + metrics["loss"],
-                        a_acc + metrics["acc"]), None
-
-            zeros = jax.tree.map(
-                lambda pp: jnp.zeros(pp.shape, jnp.float32), params)
-            (g_sum, l_sum, a_sum), _ = jax.lax.scan(
-                body, (zeros, jnp.zeros(()), jnp.zeros(())), mb)
-            grads = jax.tree.map(
-                lambda g, pp: (g / n_microbatches).astype(pp.dtype),
-                g_sum, params)
-            metrics = {"loss": l_sum / n_microbatches,
-                       "aux": jnp.zeros(()),
-                       "acc": a_sum / n_microbatches}
-        updates, opt_state = opt.update(grads, opt_state, params, lr)
-        params = apply_updates(params, updates)
-        return params, opt_state, metrics
-
-    p_sh = rules.tree_shardings(params_abs, param_dims)
-    o_sh = opt_rules.tree_shardings(opt_abs, o_dims)
-    b_sh = rules.tree_shardings(batch_specs, batch_dims)
-    scalar_sh = NamedSharding(rules.mesh, P())
-    m_sh = {"loss": scalar_sh, "aux": scalar_sh, "acc": scalar_sh}
-    return StepBundle(
-        fn=step, abstract_args=(params_abs, opt_abs, batch_specs),
-        in_shardings=(p_sh, o_sh, b_sh),
-        out_shardings=(p_sh, o_sh, m_sh),
-        donate_argnums=(0, 1))
-
-
-def make_prefill_step(lm: LM, rules: ShardingRules, batch_specs, batch_dims,
-                      cache_abs, cache_dims) -> StepBundle:
-    def step(params, cache, batch):
-        return lm.prefill(params, cache, batch, rules=rules)
-
-    params_abs, param_dims = lm.abstract()
-    p_sh = rules.tree_shardings(params_abs, param_dims)
-    c_sh = rules.tree_shardings(cache_abs, cache_dims)
-    b_sh = rules.tree_shardings(batch_specs, batch_dims)
-    logits_abs = jax.eval_shape(step, params_abs, cache_abs, batch_specs)[0]
-    logits_dims = ("batch",) + (None,) * (len(logits_abs.shape) - 2) + ("vocab",)
-    l_sh = rules.tree_shardings(logits_abs, logits_dims)
-    return StepBundle(
-        fn=step, abstract_args=(params_abs, cache_abs, batch_specs),
-        in_shardings=(p_sh, c_sh, b_sh),
-        out_shardings=(l_sh, c_sh),
-        donate_argnums=(1,))
-
-
-def make_decode_step(lm: LM, rules: ShardingRules, token_specs, token_dims,
-                     cache_abs, cache_dims) -> StepBundle:
-    def step(params, cache, tokens):
-        return lm.decode_step(params, cache, tokens, rules=rules)
-
-    params_abs, param_dims = lm.abstract()
-    p_sh = rules.tree_shardings(params_abs, param_dims)
-    c_sh = rules.tree_shardings(cache_abs, cache_dims)
-    t_sh = rules.tree_shardings(token_specs, token_dims)
-    logits_abs = jax.eval_shape(step, params_abs, cache_abs, token_specs)[0]
-    logits_dims = ("batch",) + (None,) * (len(logits_abs.shape) - 2) + ("vocab",)
-    l_sh = rules.tree_shardings(logits_abs, logits_dims)
-    return StepBundle(
-        fn=step, abstract_args=(params_abs, cache_abs, token_specs),
-        in_shardings=(p_sh, c_sh, t_sh),
-        out_shardings=(l_sh, c_sh),
-        donate_argnums=(1,))
-
-
-# ------------------------------------------------------------- HWA steps
-
-
-def make_hwa_train_step(lm: LM, rules: ShardingRules, batch_specs, batch_dims,
-                        hwa_cfg: HWAConfig, optimizer: str = "adamw",
-                        lr: float = 3e-4,
-                        opt_rules: ShardingRules | None = None,
-                        n_microbatches: int = 1) -> StepBundle:
-    """Inner HWA step: K independent replicas, stacked on the replica axis.
-
-    Gradient all-reduce stays *inside* each replica's data shard; nothing
-    crosses the replica/pod axis here — that is the H-fold comm saving.
-    """
-    opt = _mk_optimizer(optimizer)
-    K = hwa_cfg.n_replicas
-    params_abs, param_dims = lm.abstract()
-    stacked_abs = jax.tree.map(
-        lambda s: jax.ShapeDtypeStruct((K,) + s.shape, s.dtype), params_abs)
-    stacked_dims = _prefix_dims(param_dims, "replica")
-    opt_abs = jax.eval_shape(lambda p: jax.vmap(opt.init)(p), stacked_abs)
-    o_dims = opt_state_dims(opt_abs, stacked_dims)
-    if "count" in o_dims:          # adamw step counter, vmapped to (K,)
-        o_dims["count"] = ("replica",)
-    opt_rules = opt_rules or rules
-    kbatch_abs = jax.tree.map(
-        lambda s: jax.ShapeDtypeStruct((K,) + s.shape, s.dtype), batch_specs)
-    kbatch_dims = _prefix_dims(batch_dims, "replica")
-
-    def loss_fn(params, batch):
-        return lm.loss(params, batch, rules=rules)
-
-    def step(inner, inner_opt, batches):
-        def one(params, opt_state, batch):
-            if n_microbatches == 1:
-                (loss, metrics), grads = jax.value_and_grad(
-                    loss_fn, has_aux=True)(params, batch)
-            else:
-                mb = jax.tree.map(
-                    lambda x: x.reshape((n_microbatches,
-                                         x.shape[0] // n_microbatches)
-                                        + x.shape[1:]), batch)
-
-                def body(acc, mbatch):
-                    g_acc, l_acc = acc
-                    (l, m), g = jax.value_and_grad(
-                        loss_fn, has_aux=True)(params, mbatch)
-                    g_acc = jax.tree.map(
-                        lambda a, gi: a + gi.astype(jnp.float32), g_acc, g)
-                    return (g_acc, l_acc + m["loss"]), None
-
-                zeros = jax.tree.map(
-                    lambda pp: jnp.zeros(pp.shape, jnp.float32), params)
-                (g_sum, l_sum), _ = jax.lax.scan(
-                    body, (zeros, jnp.zeros(())), mb)
-                grads = jax.tree.map(
-                    lambda g, pp: (g / n_microbatches).astype(pp.dtype),
-                    g_sum, params)
-                metrics = {"loss": l_sum / n_microbatches}
-            updates, opt_state = opt.update(grads, opt_state, params, lr)
-            return apply_updates(params, updates), opt_state, metrics["loss"]
-
-        inner, inner_opt, losses = jax.vmap(one)(inner, inner_opt, batches)
-        return inner, inner_opt, jnp.mean(losses)
-
-    p_sh = rules.tree_shardings(stacked_abs, stacked_dims)
-    o_sh = opt_rules.tree_shardings(opt_abs, o_dims)
-    b_sh = rules.tree_shardings(kbatch_abs, kbatch_dims)
-    scalar_sh = NamedSharding(rules.mesh, P())
-    return StepBundle(
-        fn=step, abstract_args=(stacked_abs, opt_abs, kbatch_abs),
-        in_shardings=(p_sh, o_sh, b_sh),
-        out_shardings=(p_sh, o_sh, scalar_sh),
-        donate_argnums=(0, 1))
-
-
-def _norm_entry(entry) -> tuple[str, ...]:
-    """A PartitionSpec entry as a tuple of mesh-axis names."""
-    if entry is None:
-        return ()
-    return tuple(entry) if isinstance(entry, (tuple, list)) else (entry,)
-
-
-def _axes_entry(axes: tuple[str, ...]):
-    """A packed super-axis as a PartitionSpec entry (None/str/tuple)."""
-    if not axes:
-        return None
-    return axes[0] if len(axes) == 1 else tuple(axes)
-
-
-def _packed_sharding(mesh: Mesh, padded: int, lead_dims: int = 0,
-                     axes: tuple[str, ...] | None = None) -> NamedSharding:
-    """Sharding for a packed WA buffer.
-
-    ``axes`` is the packed super-axis of a shard-aware ``PackSpec``
-    (``spec.axes``) — the packed dim is split over exactly those mesh
-    axes, jointly. ``axes=None`` keeps the legacy heuristic used by the
-    non-mesh-resident fallback: split over ``model`` when it divides
-    (it always does — ``padded`` is an ALIGN multiple), else replicate.
-    """
-    if axes is None:
-        ax = "model" if ("model" in mesh.shape
-                         and padded % mesh.shape["model"] == 0) else None
-    else:
-        ax = _axes_entry(axes)
-    return NamedSharding(mesh, P(*([None] * lead_dims + [ax])))
-
-
-def _mesh_resident_layout(mesh: Mesh, flat_specs, flat_shapes,
-                          exclude: tuple[str, ...] = ()):
-    """Choose a packed super-axis aligning leaf tilings with packed ranges.
-
-    Returns ``(axes, shard_dims)`` such that ``pack_spec(params,
-    shards=prod(axes), shard_dims=..., axes=axes)`` makes packed-W̄
-    assembly and W̿ unpacking shard-local (zero collectives): every leaf
-    either has exactly ONE dim sharded over exactly ``axes`` (jointly, in
-    order) — that dim becomes its ``shard_dim`` — or is replicated over
-    the non-``exclude`` mesh axes and gets duplicated per segment.
-
-    Candidates are the distinct PartitionSpec entries the leaves actually
-    use (arbitrary mesh-axis sets, not just the single ``model`` axis),
-    tried largest-device-count first; ``((), all-None)`` is returned for
-    fully-replicated trees, and ``(None, None)`` when no super-axis covers
-    every leaf (e.g. FSDP's mixed data/model tilings) — callers then fall
-    back to the legacy redistribute-and-all-reduce assembly.
-    """
-    cands: list[tuple[str, ...]] = []
-    for sp in flat_specs:
-        for e in sp:
-            t = _norm_entry(e)
-            if (t and not (set(t) & set(exclude)) and t not in cands
-                    and math.prod(mesh.shape[a] for a in t) > 1):
-                cands.append(t)
-    cands.sort(key=lambda t: -math.prod(mesh.shape[a] for a in t))
-    cands.append(())
-    for cand in cands:
-        S = math.prod(mesh.shape[a] for a in cand) if cand else 1
-        dims: list[int | None] = []
-        ok = True
-        for sp, shape in zip(flat_specs, flat_shapes):
-            hot = []
-            for i, e in enumerate(sp):
-                t = _norm_entry(e)
-                if not t or math.prod(mesh.shape[a] for a in t) == 1:
-                    continue                      # effectively replicated
-                if t == cand:
-                    hot.append(i)
-                else:
-                    ok = False                    # sharded over another set
-                    break
-            if not ok or len(hot) > 1:
-                ok = False
-                break
-            if not hot:
-                dims.append(None)
-            elif shape[hot[0]] % S == 0 and all(d > 0 for d in shape):
-                dims.append(hot[0])
-            else:
-                ok = False
-                break
-        if ok:
-            return (cand, dims) if S > 1 else ((), [None] * len(flat_specs))
-    return None, None
-
-
-def _warn_legacy_assembly(mesh: Mesh) -> None:
-    """The legacy GSPMD packed-W̄ assembly (masked concat + param-size
-    all-reduce) is MISCOMPILED by XLA 0.4.37's CPU SPMD partitioner —
-    replicated shards get overcounted (~4× on the (2,2,2) test mesh), so
-    the fallback silently corrupts W̿ there. It is only reachable when
-    the parameter tilings admit no aligned packed layout (e.g. FSDP);
-    warn loudly rather than fail, since non-CPU backends lower the same
-    pattern correctly."""
-    if mesh.size > 1 and jax.default_backend() == "cpu":
-        import warnings
-        warnings.warn(
-            "HWA sync: falling back to the legacy GSPMD packed-W̄ assembly "
-            "on a multi-device CPU mesh — XLA 0.4.37's CPU partitioner is "
-            "known to miscompile this pattern (overcounted replicated "
-            "shards). Use tilings that _mesh_resident_layout can align "
-            "(see docs/ARCHITECTURE.md §1) or treat W̿ as untrusted here.",
-            RuntimeWarning, stacklevel=3)
-
-
-def _local_packed_sync(hwa_cfg: HWAConfig, lspec, K: int,
-                       k_axes: tuple[str, ...], use_kernel: bool,
-                       with_stride: bool, inner, ring, total, count,
-                       next_idx, cycle):
-    """Per-device body of the mesh-resident packed sync.
-
-    Runs under a FULLY-MANUAL shard_map (every mesh axis manual), so the
-    Pallas kernels see true local shapes — the per-shard (I, P/shards)
-    ring slice — instead of GSPMD's global-shape view that made them
-    unusable on meshes. ``lspec`` is ``pack_spec.local_spec()``: the
-    device's segment of the shard-aware layout, assembled here from the
-    local leaf shards alone (zero collectives by construction).
-
-    The ONE inter-replica collective is the psum of the pre-scaled
-    partial mean over ``k_axes`` (the mesh axes sharding the stacked K
-    dim); with K resident on a single device (``k_axes == ()``) even that
-    disappears and the whole sync fuses into one kernel launch.
-    """
-    from repro.common.packing import pack_stacked, unpack
-    from repro.core.hwa import window_push_packed
-    from repro.core.offline import WindowState, window_update_packed
-    from repro.core.online import broadcast_to_replicas
-
-    I = hwa_cfg.window
-    sbuf = pack_stacked(inner, lspec)            # (K_local, seg_len) f32
-    k_local = sbuf.shape[0]
-    fused = (use_kernel and not k_axes and ring.dtype == jnp.float32
-             and (not with_stride or hwa_cfg.window_stride == 1))
-    if fused:
-        # whole sync in ONE launch on the local slice: K-mean + window
-        # push, (K+2) reads + 3 writes, W̄ read back from the ring slot
-        from repro.kernels import ops as kops
-        idx = next_idx
-        full = (count >= I).astype(jnp.float32)
-        new_count = jnp.minimum(count + 1, I)
-        ring2, total2, avg = kops.hwa_sync_packed(
-            sbuf, ring, total, idx, full,
-            1.0 / new_count.astype(jnp.float32))
-        mean = jax.lax.dynamic_index_in_dim(ring2, idx, keepdims=False)
-        ws2 = WindowState(ring=ring2, total=total2, count=new_count,
-                          next_idx=jnp.mod(idx + 1, I), window=I,
-                          kind="ring", spec=lspec)
-        new_cycle = cycle + 1
-    else:
-        if use_kernel and k_local > 1:
-            from repro.kernels import ops as kops
-            part = kops.online_mean_packed(sbuf, inv_k=1.0 / K)
-        else:
-            part = jnp.sum(sbuf, axis=0) * (1.0 / K)
-        # THE weight all-reduce: pre-scaled partial sums keep the result
-        # bit-identical to the fused kernel's sum×(1/K) for power-of-two K
-        mean = jax.lax.psum(part, k_axes) if k_axes else part
-        ws = WindowState(ring=ring, total=total, count=count,
-                         next_idx=next_idx, window=I, kind="ring",
-                         spec=lspec)
-        if with_stride:
-            ws2, avg, new_cycle = window_push_packed(
-                hwa_cfg, mean, ws, cycle, use_kernel=use_kernel)
-        else:
-            ws2, avg = window_update_packed(ws, mean, use_kernel=use_kernel)
-            new_cycle = cycle + 1
-    outer = unpack(mean, lspec)                  # local leaf views, free
-    wa = unpack(avg, lspec)
-    new_inner = broadcast_to_replicas(outer, k_local)
-    return (new_inner, ws2.ring, ws2.total, ws2.count, ws2.next_idx, wa,
-            new_cycle)
-
-
-def make_hwa_sync_step(lm: LM, rules: ShardingRules, hwa_cfg: HWAConfig,
-                       ring_dtype=jnp.float32,
-                       mesh_resident: bool | None = None) -> StepBundle:
-    """Synchronization + window update: the once-per-H-steps collective.
-
-    outer = mean over the replica axis (one all-reduce across pods);
-    inner ← broadcast(outer); slide-window update on PACKED state: the
-    ring is one (I, P) buffer and the total one (P,) buffer over the whole
-    parameter set (``repro.common.packing``), held packed across the jit
-    boundary so the donation of ring/total is a true in-place update
-    step-to-step — no per-leaf launches, no per-call padding.
-
-    **pack_spec contract.** ``bundle.pack_spec`` is the layout the caller
-    MUST allocate the window buffers from — ``ring = zeros((I,
-    spec.padded), ring_dtype)``, ``total = zeros((spec.padded,), f32)`` —
-    and the layout W̿/checkpointed state are expressed in. It is not
-    always the default contiguous layout: the mesh-resident path below
-    chooses a shard-aware layout (``spec.shards > 1``) whose ``padded``
-    differs, so callers must never substitute their own
-    ``pack_spec(params)``. Leaf views come back via ``packing.unpack(buf,
-    bundle.pack_spec)``; checkpoints written through
-    ``checkpoint.save_window_state`` record the layout and repack on load
-    when it changed.
-
-    **Donation invariants.** args 0-2 (stacked inner, ring, total) are
-    donated: the caller's arrays are consumed every call and the returned
-    buffers must be threaded into the next call (the trainer's steady
-    state — this is what makes the ring update truly in place). Scalars
-    (count, next_idx) are not donated.
-
-    **Kernel gating / mesh residency.** On a single device the fused
-    Pallas path runs as-is. On a multi-device mesh a bare ``pallas_call``
-    is opaque to the GSPMD partitioner — XLA runs it per-shard with
-    GLOBAL-shape semantics and silently corrupts values — so multi-device
-    meshes default to the MESH-RESIDENT path: the whole sync runs inside
-    a fully-manual ``shard_map`` where each device assembles and updates
-    its local ``(I, P/shards)`` slice of a shard-aware packed layout
-    (zero assembly collectives; see ``_local_packed_sync``), driving the
-    Pallas kernel on true local shapes when ``use_kernels`` and the jnp
-    reference otherwise. When the parameter tilings admit no such layout
-    (``_mesh_resident_layout`` → None, e.g. FSDP) the legacy GSPMD
-    fallback below runs instead, paying one param-size assembly
-    all-reduce per sync (and trusting the backend's partitioner with the
-    packed-buffer redistribution — the 0.4.37 CPU partitioner is known
-    to overcount replicated shards in exactly that pattern, one more
-    reason the aligned layout is the default). ``mesh_resident`` forces
-    the choice (True raises if the layout does not qualify); None picks
-    automatically.
-
-    Variants (EXPERIMENTS.md §Perf pair 3): exact f32 ring (paper),
-    bf16 ring (2× window memory saving), or hwa_cfg.window_kind ==
-    "streaming" (O(1) extra copies, windowed-running-mean approximation;
-    always the jnp path — it is a two-pass rescale, not ring-shaped).
-    """
-    from repro.common.packing import pack, pack_spec, pack_stacked, unpack
-    from repro.core.offline import WindowState, window_update_packed
-    from repro.core.online import broadcast_to_replicas, online_average
-
-    K = hwa_cfg.n_replicas
-    I = hwa_cfg.window
-    mesh = rules.mesh
-    streaming = hwa_cfg.window_kind == "streaming"
-    use_kernel = hwa_cfg.use_kernels and mesh.size == 1
-    params_abs, param_dims = lm.abstract()
-    stacked_abs = jax.tree.map(
-        lambda s: jax.ShapeDtypeStruct((K,) + s.shape, s.dtype), params_abs)
-    stacked_dims = _prefix_dims(param_dims, "replica")
-    scalar_i = jax.ShapeDtypeStruct((), jnp.int32)
-
-    pspec_tree = rules.tree_specs(params_abs, param_dims)
-    flat_specs = jax.tree.leaves(pspec_tree)
-    flat_shapes = [tuple(l.shape) for l in jax.tree.leaves(params_abs)]
-    k_entry = rules.spec(("replica",), (K,))
-    k_axes = _norm_entry(k_entry[0] if len(k_entry) else None)
-    axes, shard_dims = _mesh_resident_layout(mesh, flat_specs, flat_shapes,
-                                             exclude=k_axes)
-    if mesh_resident is None:
-        mesh_resident = (mesh.size > 1 and not streaming
-                         and axes is not None)
-    if mesh_resident and (axes is None or streaming):
-        raise ValueError("mesh-resident sync needs a ring window and "
-                         "leaf tilings that align with packed ranges "
-                         "(_mesh_resident_layout found none)")
-
-    if mesh_resident:
-        S = math.prod(mesh.shape[a] for a in axes) if axes else 1
-        spec = pack_spec(params_abs, shards=S, shard_dims=shard_dims,
-                         axes=axes)
-        ring_abs = jax.ShapeDtypeStruct((I, spec.padded), ring_dtype)
-        total_abs = jax.ShapeDtypeStruct((spec.padded,), jnp.float32)
-        stacked_pspecs = rules.tree_specs(stacked_abs, stacked_dims)
-        pax = _axes_entry(axes)
-        body = functools.partial(_local_packed_sync, hwa_cfg,
-                                 spec.local_spec(), K, k_axes,
-                                 hwa_cfg.use_kernels, False)
-
-        def local_step(inner, ring, total, count, next_idx):
-            return body(inner, ring, total, count, next_idx,
-                        jnp.zeros((), jnp.int32))[:6]
-
-        step = shard_map(
-            local_step, mesh,
-            in_specs=(stacked_pspecs, P(None, pax), P(pax), P(), P()),
-            out_specs=(stacked_pspecs, P(None, pax), P(pax), P(), P(),
-                       pspec_tree),
-            check_rep=False)
-        p_sh = rules.tree_shardings(stacked_abs, stacked_dims)
-        w_sh = rules.tree_shardings(params_abs, param_dims)
-        r_sh = _packed_sharding(mesh, spec.padded, lead_dims=1, axes=axes)
-        t_sh = _packed_sharding(mesh, spec.padded, axes=axes)
-        s_sh = NamedSharding(mesh, P())
-        return StepBundle(
-            fn=step,
-            abstract_args=(stacked_abs, ring_abs, total_abs, scalar_i,
-                           scalar_i),
-            in_shardings=(p_sh, r_sh, t_sh, s_sh, s_sh),
-            out_shardings=(p_sh, r_sh, t_sh, s_sh, s_sh, w_sh),
-            donate_argnums=(0, 1, 2), pack_spec=spec)
-
-    _warn_legacy_assembly(mesh)
-    spec = pack_spec(params_abs)
-    ring_abs = jax.ShapeDtypeStruct((I, spec.padded), ring_dtype)
-    total_abs = jax.ShapeDtypeStruct((spec.padded,), jnp.float32)
-    r_sh = _packed_sharding(rules.mesh, spec.padded, lead_dims=1)
-    t_sh = _packed_sharding(rules.mesh, spec.padded)
-
-    def mean_and_buf(inner):
-        """(W̄ leaf views, packed W̄) without a pack/unpack round-trip.
-
-        The sharding constraint pins the packed buffer to the window
-        state's own sharding so the elementwise push stays shard-local
-        (GSPMD otherwise computes it as distributed partial sums + a
-        full-buffer all-reduce crossing every mesh axis).
-        """
-        if use_kernel:
-            from repro.kernels import ops as kops
-            buf = kops.online_mean_packed(pack_stacked(inner, spec))
-            outer = unpack(buf, spec)
-        else:
-            outer = online_average(inner)
-            buf = pack(outer, spec)
-        return outer, jax.lax.with_sharding_constraint(buf, t_sh)
-
-    def step_ring(inner, ring, total, count, next_idx):
-        outer, buf = mean_and_buf(inner)
-        new_inner = broadcast_to_replicas(outer, K)
-        ws = WindowState(ring=ring, total=total, count=count,
-                         next_idx=next_idx, window=I, kind="ring", spec=spec)
-        ws2, avg = window_update_packed(ws, buf, use_kernel=use_kernel)
-        wa = unpack(avg, spec)      # leaf views of W̿ (slices, no copy)
-        return new_inner, ws2.ring, ws2.total, ws2.count, ws2.next_idx, wa
-
-    def step_streaming(inner, total, count):
-        outer, buf = mean_and_buf(inner)
-        new_inner = broadcast_to_replicas(outer, K)
-        ws = WindowState(ring=None, total=total, count=count,
-                         next_idx=jnp.zeros((), jnp.int32), window=I,
-                         kind="streaming", spec=spec)
-        ws2, avg = window_update_packed(ws, buf)
-        return new_inner, ws2.total, ws2.count, unpack(avg, spec)
-
-    p_sh = rules.tree_shardings(stacked_abs, stacked_dims)
-    w_sh = rules.tree_shardings(params_abs, param_dims)
-    s_sh = NamedSharding(rules.mesh, P())
-    if streaming:
-        return StepBundle(
-            fn=step_streaming,
-            abstract_args=(stacked_abs, total_abs, scalar_i),
-            in_shardings=(p_sh, t_sh, s_sh),
-            out_shardings=(p_sh, t_sh, s_sh, w_sh),
-            donate_argnums=(0, 1), pack_spec=spec)
-    return StepBundle(
-        fn=step_ring,
-        abstract_args=(stacked_abs, ring_abs, total_abs, scalar_i, scalar_i),
-        in_shardings=(p_sh, r_sh, t_sh, s_sh, s_sh),
-        out_shardings=(p_sh, r_sh, t_sh, s_sh, s_sh, w_sh),
-        donate_argnums=(0, 1, 2), pack_spec=spec)
-
-
-# ----------------------------------------------- mesh-native HWA (shard_map)
-#
-# Same storage layout as the vmap path — stacked (K, ...) state with the
-# leading dim sharded over the ``replica`` mesh axis — but the step runs
-# under shard_map *manual* over replica (data/model stay auto/GSPMD):
-# each replica block squeezes its (1, ...) slice and steps locally, so the
-# lowered inner-step HLO provably contains no collective crossing the
-# replica axis, and hwa_sync is one jax.lax.pmean over it. That makes the
-# paper's H-fold inter-replica communication amortization a structural
-# property of the program rather than a GSPMD-propagation accident.
-
-
-def _squeeze0(tree):
-    return jax.tree.map(lambda x: x[0], tree)
-
-
-def _expand0(tree):
-    return jax.tree.map(lambda x: x[None], tree)
-
-
-def make_mesh_hwa_train_step(lm: LM, rules: ShardingRules, batch_specs,
-                             batch_dims, hwa_cfg: HWAConfig,
-                             optimizer: str = "adamw", lr: float = 3e-4,
-                             opt_rules: ShardingRules | None = None,
-                             replica_axis: str = "replica") -> StepBundle:
-    """Mesh-native inner HWA step.
-
-    Collective-free over ``replica_axis`` by construction (shard_map keeps
-    the replica blocks independent; the only collectives GSPMD may insert
-    live inside a block, over the data/model axes). Returns per-replica
-    losses as a (K,) array sharded over the replica axis — averaging them
-    to a replicated scalar would itself be a replica collective, so the
-    caller takes the mean after fetching.
-    """
-    opt = _mk_optimizer(optimizer)
-    K = hwa_cfg.n_replicas
-    mesh = rules.mesh
-    assert replica_axis in mesh.shape, (replica_axis, mesh.shape)
-    assert K == mesh.shape[replica_axis], \
-        f"mesh-native path needs K == mesh axis size ({K} != " \
-        f"{mesh.shape[replica_axis]}); use the vmap path otherwise"
-    auto = frozenset(a for a in mesh.axis_names if a != replica_axis)
-    if not lm.cfg.scan_unroll:
-        # XLA (0.4.x) fatals on a while loop under manual-subgroup
-        # shardings; unrolling the layer scan keeps the body loop-free.
-        from repro.models.registry import build_model
-        lm = build_model(lm.cfg.with_(scan_unroll=True))
-    params_abs, param_dims = lm.abstract()
-    stacked_abs = jax.tree.map(
-        lambda s: jax.ShapeDtypeStruct((K,) + s.shape, s.dtype), params_abs)
-    stacked_dims = _prefix_dims(param_dims, "replica")
-    opt_abs = jax.eval_shape(lambda p: jax.vmap(opt.init)(p), stacked_abs)
-    o_dims = opt_state_dims(opt_abs, stacked_dims)
-    if "count" in o_dims:
-        o_dims["count"] = ("replica",)
-    opt_rules = opt_rules or rules
-    kbatch_abs = jax.tree.map(
-        lambda s: jax.ShapeDtypeStruct((K,) + s.shape, s.dtype), batch_specs)
-    kbatch_dims = _prefix_dims(batch_dims, "replica")
-
-    # The body runs the model's pure-jnp path (rules=None): the rules-aware
-    # path opens nested shard_maps (vocab-sharded gather, EP MoE) which 0.4.x
-    # cannot nest inside a partial-auto map. Layouts over the auto axes are
-    # still driven by the jit in/out shardings; constraints are hints only,
-    # so the math is unchanged.
-    def loss_fn(params, batch):
-        return lm.loss(params, batch, rules=None)
-
-    def local_step(inner, inner_opt, batch):
-        params, opt_state, loss, _ = hwa_local_inner_step(
-            _squeeze0(inner), _squeeze0(inner_opt), _squeeze0(batch),
-            loss_fn, opt, lr)
-        return _expand0(params), _expand0(opt_state), loss[None]
-
-    step = shard_map(
-        local_step, mesh,
-        in_specs=(stacked_replica_specs(stacked_abs, replica_axis),
-                  stacked_replica_specs(opt_abs, replica_axis),
-                  stacked_replica_specs(kbatch_abs, replica_axis)),
-        out_specs=(stacked_replica_specs(stacked_abs, replica_axis),
-                   stacked_replica_specs(opt_abs, replica_axis),
-                   P(replica_axis)),
-        check_rep=False, auto=auto)
-
-    p_sh = rules.tree_shardings(stacked_abs, stacked_dims)
-    o_sh = opt_rules.tree_shardings(opt_abs, o_dims)
-    b_sh = rules.tree_shardings(kbatch_abs, kbatch_dims)
-    losses_sh = NamedSharding(mesh, P(replica_axis))
-    return StepBundle(
-        fn=step, abstract_args=(stacked_abs, opt_abs, kbatch_abs),
-        in_shardings=(p_sh, o_sh, b_sh),
-        out_shardings=(p_sh, o_sh, losses_sh),
-        donate_argnums=(0, 1))
-
-
-def make_mesh_hwa_sync_step(lm: LM, rules: ShardingRules, hwa_cfg: HWAConfig,
-                            ring_dtype=jnp.float32,
-                            replica_axis: str = "replica",
-                            mesh_resident: bool | None = None) -> StepBundle:
-    """Mesh-native synchronization: the once-per-H-steps collective.
-
-    **Mesh-resident path (default).** The ENTIRE sync — packed-W̄
-    assembly, the weight all-reduce, the slide-window push, the W̿ unpack
-    — runs inside ONE fully-manual ``shard_map`` over every mesh axis
-    (``_local_packed_sync``). The window state lives in a shard-aware
-    packed layout (``_mesh_resident_layout`` aligns each leaf's tiling
-    with its packed range), so each device assembles its own
-    ``(I, P/shards)`` ring slice from its local leaf shards, psums the
-    pre-scaled partial mean over ``replica_axis`` (the single
-    inter-replica collective — and the single collective, period), and
-    runs the window push locally: with ``use_kernels`` that is the Pallas
-    kernel on true local shapes, which GSPMD could never be trusted with
-    (it runs opaque custom calls per-shard with global-shape semantics).
-    tests/mesh_hwa_check.py asserts both properties on the lowered HLO
-    via ``launch.hlo.sync_collective_audit``: exactly one replica-axis
-    all-reduce, zero collectives crossing any other axis.
-
-    Going fully manual also sidesteps the XLA 0.4.x partial-auto caveat
-    that previously forced the window push OUTSIDE the manual region:
-    partial-auto manual subgroups miscompile packed-buffer assembly from
-    auto-sharded leaves (a spurious replica-axis reduction doubles the
-    values — the same IsManualSubgroup bug class as the scan_unroll item;
-    see ROADMAP "partial-auto on new JAX"/"scan under manual subgroups").
-    With no auto axes in the sync map there is no subgroup to miscompile.
-
-    **Fallback.** When the parameter tilings admit no aligned layout
-    (``_mesh_resident_layout`` → None, e.g. FSDP's mixed tilings), the
-    legacy split runs instead: pmean inside a partial-auto shard_map,
-    window push outside in GSPMD-land — correct, but the packed-W̄
-    assembly then costs ONE param-size masked all-reduce per sync.
-    ``mesh_resident`` forces the choice (True raises if the layout does
-    not qualify); None picks automatically.
-
-    **pack_spec contract.** Callers allocate the window buffers from
-    ``bundle.pack_spec`` — ``ring = zeros((I, spec.padded), ring_dtype)``,
-    ``total = zeros((spec.padded,), f32)`` — and read leaf views with
-    ``packing.unpack(buf, bundle.pack_spec)``. The mesh-resident layout's
-    ``padded`` includes per-segment alignment and replicated-leaf
-    duplicates, so it is NOT interchangeable with ``pack_spec(params)``;
-    checkpoints written via ``checkpoint.save_window_state`` record the
-    layout and repack bit-exactly on load under a different mesh.
-
-    **Donation invariants.** args 0-2 (stacked inner, ring, total) are
-    donated — thread the returned buffers into the next call; the scalar
-    counters (count, next_idx, cycle) are returned fresh, not donated.
-    """
-    from repro.common.packing import pack, pack_spec, unpack
-    from repro.core.hwa import window_push_packed
-    from repro.core.offline import WindowState
-    from repro.core.online import broadcast_to_replicas, online_average_named
-
-    K = hwa_cfg.n_replicas
-    I = hwa_cfg.window
-    mesh = rules.mesh
-    assert replica_axis in mesh.shape and K == mesh.shape[replica_axis], \
-        (K, mesh.shape)
-    params_abs, param_dims = lm.abstract()
-    stacked_abs = jax.tree.map(
-        lambda s: jax.ShapeDtypeStruct((K,) + s.shape, s.dtype), params_abs)
-    stacked_dims = _prefix_dims(param_dims, "replica")
-    scalar_i = jax.ShapeDtypeStruct((), jnp.int32)
-    p_sh = rules.tree_shardings(stacked_abs, stacked_dims)
-    w_sh = rules.tree_shardings(params_abs, param_dims)
-    s_sh = NamedSharding(mesh, P())
-
-    pspec_tree = rules.tree_specs(params_abs, param_dims)
-    flat_specs = jax.tree.leaves(pspec_tree)
-    flat_shapes = [tuple(l.shape) for l in jax.tree.leaves(params_abs)]
-    stacked_pspecs = rules.tree_specs(stacked_abs, stacked_dims)
-    k_entry = rules.spec(("replica",), (K,))
-    k_axes = _norm_entry(k_entry[0] if len(k_entry) else None)
-    axes, shard_dims = _mesh_resident_layout(mesh, flat_specs, flat_shapes,
-                                             exclude=k_axes or
-                                             (replica_axis,))
-    if mesh_resident is None:
-        mesh_resident = axes is not None
-    elif mesh_resident and axes is None:
-        raise ValueError("mesh-resident sync: leaf tilings do not align "
-                         "with any packed super-axis")
-
-    if mesh_resident:
-        S = math.prod(mesh.shape[a] for a in axes) if axes else 1
-        spec = pack_spec(params_abs, shards=S, shard_dims=shard_dims,
-                         axes=axes)
-        ring_abs = jax.ShapeDtypeStruct((I, spec.padded), ring_dtype)
-        total_abs = jax.ShapeDtypeStruct((spec.padded,), jnp.float32)
-        pax = _axes_entry(axes)
-        step = shard_map(
-            functools.partial(_local_packed_sync, hwa_cfg,
-                              spec.local_spec(), K, k_axes,
-                              hwa_cfg.use_kernels, True),
-            mesh,
-            in_specs=(stacked_pspecs, P(None, pax), P(pax), P(), P(), P()),
-            out_specs=(stacked_pspecs, P(None, pax), P(pax), P(), P(),
-                       pspec_tree, P()),
-            check_rep=False)
-        r_sh = _packed_sharding(mesh, spec.padded, lead_dims=1, axes=axes)
-        t_sh = _packed_sharding(mesh, spec.padded, axes=axes)
-        return StepBundle(
-            fn=step,
-            abstract_args=(stacked_abs, ring_abs, total_abs, scalar_i,
-                           scalar_i, scalar_i),
-            in_shardings=(p_sh, r_sh, t_sh, s_sh, s_sh, s_sh),
-            out_shardings=(p_sh, r_sh, t_sh, s_sh, s_sh, w_sh, s_sh),
-            donate_argnums=(0, 1, 2), pack_spec=spec)
-
-    # ------- legacy fallback: partial-auto pmean + GSPMD-land window push
-    _warn_legacy_assembly(mesh)
-    auto = frozenset(a for a in mesh.axis_names if a != replica_axis)
-    spec = pack_spec(params_abs)
-    ring_abs = jax.ShapeDtypeStruct((I, spec.padded), ring_dtype)
-    total_abs = jax.ShapeDtypeStruct((spec.padded,), jnp.float32)
-
-    def local_mean(inner):
-        """The one inter-replica collective: W̄ = pmean(W^k)."""
-        return online_average_named(_squeeze0(inner), replica_axis)
-
-    mean_fn = shard_map(
-        local_mean, mesh,
-        in_specs=(stacked_replica_specs(stacked_abs, replica_axis),),
-        out_specs=replicated_specs(params_abs),
-        check_rep=False, auto=auto)
-
-    r_sh = _packed_sharding(mesh, spec.padded, lead_dims=1)
-    t_sh = _packed_sharding(mesh, spec.padded)
-
-    def step(inner, ring, total, count, next_idx, cycle):
-        outer = mean_fn(inner)
-        new_inner = broadcast_to_replicas(outer, K)
-        # Packing W̄ from per-leaf (data/model)-tiled shards into the
-        # contiguous buffer is a real layout redistribution: GSPMD
-        # materializes the concat as masked contributions + ONE
-        # param-size all-reduce spanning the whole mesh, once per sync
-        # (amortized by H; absent entirely on a single device, and
-        # absent from the mesh-resident path above). The constraint pins
-        # the buffer to the window state's sharding so the push itself
-        # stays shard-local; W̿ leaf views then slice from the
-        # already-assembled buffer for free.
-        buf = jax.lax.with_sharding_constraint(pack(outer, spec), t_sh)
-        ws = WindowState(ring=ring, total=total, count=count,
-                         next_idx=next_idx, window=I, kind="ring", spec=spec)
-        # bare kernels only on a single device (Pallas is opaque to GSPMD
-        # — per-shard execution with global-shape semantics corrupts
-        # values); on meshes kernels require the mesh-resident path
-        ws2, avg, new_cycle = window_push_packed(
-            hwa_cfg, buf, ws, cycle,
-            use_kernel=hwa_cfg.use_kernels and mesh.size == 1)
-        wa = unpack(avg, spec)
-        return (new_inner, ws2.ring, ws2.total, ws2.count, ws2.next_idx,
-                wa, new_cycle)
-
-    return StepBundle(
-        fn=step,
-        abstract_args=(stacked_abs, ring_abs, total_abs, scalar_i, scalar_i,
-                       scalar_i),
-        in_shardings=(p_sh, r_sh, t_sh, s_sh, s_sh, s_sh),
-        out_shardings=(p_sh, r_sh, t_sh, s_sh, s_sh, w_sh, s_sh),
-        donate_argnums=(0, 1, 2), pack_spec=spec)
+_warn_legacy_assembly = check_legacy_assembly
+
+__all__ = [
+    "Flat", "HWAConfig", "ShardingRules", "StepBundle", "SyncTopology",
+    "TwoLevel", "check_legacy_assembly", "hwa_inner_step",
+    "hwa_local_inner_step", "hwa_sync", "make_decode_step",
+    "make_hwa_sync_step", "make_hwa_train_step",
+    "make_legacy_mesh_sync_step", "make_legacy_sync_step",
+    "make_mesh_hwa_inner_sync_step", "make_mesh_hwa_sync_step",
+    "make_mesh_hwa_train_step", "make_prefill_step", "make_train_step",
+    "make_tp_rules", "opt_state_dims", "replicated_specs",
+    "stacked_replica_specs",
+]

@@ -1,0 +1,36 @@
+"""Sync-topology subsystem (PR 4 split of the launch/steps.py monolith).
+
+- ``topology`` — WHERE/WHEN the replica mean reduces: ``Flat`` (one
+  global all-reduce) vs ``TwoLevel`` (pod-inner every H steps, pod-outer
+  + window push every H·H₂).
+- ``packed``  — the mesh-resident machinery: shard-aware layout chooser
+  and the fully-manual per-device sync bodies.
+- ``legacy``  — the GSPMD fallback for non-qualifying layouts, hard-
+  errored on multi-device CPU meshes where XLA 0.4.37 miscompiles it.
+- ``bundles`` — the StepBundle builders (train / prefill / decode / HWA
+  / mesh-native HWA / two-level inner sync).
+
+``repro.launch.steps`` re-exports everything below, so existing imports
+keep working.
+"""
+from repro.launch.sync.bundles import (StepBundle, make_decode_step,
+                                       make_hwa_sync_step,
+                                       make_hwa_train_step,
+                                       make_mesh_hwa_inner_sync_step,
+                                       make_mesh_hwa_sync_step,
+                                       make_mesh_hwa_train_step,
+                                       make_prefill_step, make_train_step,
+                                       opt_state_dims)
+from repro.launch.sync.legacy import (check_legacy_assembly,
+                                      make_legacy_mesh_sync_step,
+                                      make_legacy_sync_step)
+from repro.launch.sync.topology import Flat, SyncTopology, TwoLevel
+
+__all__ = [
+    "Flat", "StepBundle", "SyncTopology", "TwoLevel",
+    "check_legacy_assembly", "make_decode_step", "make_hwa_sync_step",
+    "make_hwa_train_step", "make_legacy_mesh_sync_step",
+    "make_legacy_sync_step", "make_mesh_hwa_inner_sync_step",
+    "make_mesh_hwa_sync_step", "make_mesh_hwa_train_step",
+    "make_prefill_step", "make_train_step", "opt_state_dims",
+]

@@ -1,0 +1,743 @@
+"""Step builders: plain data+tensor-parallel training/serving steps and
+the HWA-stacked variants, with in/out shardings resolved from the
+logical-dim trees. These are what the dry-run lowers and what real
+launches run.
+
+Split of the former ``launch/steps.py`` monolith (PR 4): this module
+assembles StepBundles; the sync-topology abstraction lives in
+``launch.sync.topology`` (Flat / TwoLevel), the mesh-resident packed
+machinery in ``launch.sync.packed``, and the legacy GSPMD fallback in
+``launch.sync.legacy``. ``repro.launch.steps`` remains a re-exporting
+facade, so every pre-split import keeps working.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.common.compat import shard_map
+from repro.core.hwa import HWAConfig, hwa_local_inner_step
+from repro.launch.sync.legacy import (check_legacy_assembly,
+                                      make_legacy_mesh_sync_step,
+                                      make_legacy_sync_step)
+from repro.launch.sync.packed import (_axes_entry, _local_inner_sync,
+                                      _local_packed_sync,
+                                      _mesh_resident_layout, _norm_entry,
+                                      _packed_sharding)
+from repro.launch.sync.topology import Flat, SyncTopology, TwoLevel
+from repro.models.registry import LM
+from repro.optim import adamw, apply_updates, sgd
+from repro.sharding.rules import ShardingRules, stacked_replica_specs
+
+PyTree = Any
+
+
+def _prefix_dims(dim_tree, name):
+    """Prepend a logical dim to every dims-tuple leaf (e.g. 'replica')."""
+    is_dims = lambda t: isinstance(t, tuple) and all(
+        isinstance(e, (str, type(None))) for e in t)
+    return jax.tree.map(lambda t: (name,) + t, dim_tree, is_leaf=is_dims)
+
+
+def opt_state_dims(opt_state_abs, param_dims):
+    """Logical dims for optimizer state: moments mirror the params."""
+    # adamw: {"m": params-like, "v": params-like, "count": scalar}
+    # sgd(momentum): {"mu": params-like}
+    out = {}
+    for k, v in opt_state_abs.items():
+        if k == "count":
+            out[k] = ()
+        else:
+            out[k] = param_dims
+    return out
+
+
+@dataclasses.dataclass
+class StepBundle:
+    """A step function plus its abstract args and in/out shardings.
+
+    ``pack_spec`` is set by the WA sync bundles: their window state (and
+    returned W̿) lives in the packed layout of ``repro.common.packing``;
+    consumers materialize leaf views with ``packing.unpack(buf,
+    bundle.pack_spec)``.
+    """
+    fn: Any
+    abstract_args: tuple
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple = ()
+    pack_spec: Any = None
+
+    def lower(self, mesh: Mesh):
+        jitted = jax.jit(self.fn, in_shardings=self.in_shardings,
+                         out_shardings=self.out_shardings,
+                         donate_argnums=self.donate_argnums)
+        with mesh:
+            return jitted.lower(*self.abstract_args)
+
+
+def _mk_optimizer(name: str):
+    if name == "sgd":
+        return sgd(momentum=0.9, weight_decay=5e-4)
+    return adamw(weight_decay=0.1)
+
+
+def make_train_step(lm: LM, rules: ShardingRules, batch_specs, batch_dims,
+                    optimizer: str = "adamw", lr: float = 3e-4,
+                    opt_rules: ShardingRules | None = None,
+                    n_microbatches: int = 1) -> StepBundle:
+    """Plain data+tensor-parallel train step (the 40-combo baseline).
+
+    ``opt_rules`` lets the optimizer moments use a different (e.g. FSDP)
+    rule table than the compute params. ``n_microbatches`` > 1 enables
+    gradient accumulation: peak activation temps scale ~1/n_mb while the
+    f32 grad accumulator is fully sharded — the lever that fits the ≥27B
+    trainings into 16 GB/chip (EXPERIMENTS.md §Perf).
+    """
+    opt = _mk_optimizer(optimizer)
+    params_abs, param_dims = lm.abstract()
+    opt_abs = jax.eval_shape(opt.init, params_abs)
+    o_dims = opt_state_dims(opt_abs, param_dims)
+    opt_rules = opt_rules or rules
+    loss_fn = lambda p, b: lm.loss(p, b, rules=rules)
+
+    def step(params, opt_state, batch):
+        if n_microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape((n_microbatches,
+                                     x.shape[0] // n_microbatches)
+                                    + x.shape[1:]), batch)
+
+            def body(acc, mbatch):
+                g_acc, l_acc, a_acc = acc
+                (loss, metrics), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mbatch)
+                g_acc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + metrics["loss"],
+                        a_acc + metrics["acc"]), None
+
+            zeros = jax.tree.map(
+                lambda pp: jnp.zeros(pp.shape, jnp.float32), params)
+            (g_sum, l_sum, a_sum), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros(()), jnp.zeros(())), mb)
+            grads = jax.tree.map(
+                lambda g, pp: (g / n_microbatches).astype(pp.dtype),
+                g_sum, params)
+            metrics = {"loss": l_sum / n_microbatches,
+                       "aux": jnp.zeros(()),
+                       "acc": a_sum / n_microbatches}
+        updates, opt_state = opt.update(grads, opt_state, params, lr)
+        params = apply_updates(params, updates)
+        return params, opt_state, metrics
+
+    p_sh = rules.tree_shardings(params_abs, param_dims)
+    o_sh = opt_rules.tree_shardings(opt_abs, o_dims)
+    b_sh = rules.tree_shardings(batch_specs, batch_dims)
+    scalar_sh = NamedSharding(rules.mesh, P())
+    m_sh = {"loss": scalar_sh, "aux": scalar_sh, "acc": scalar_sh}
+    return StepBundle(
+        fn=step, abstract_args=(params_abs, opt_abs, batch_specs),
+        in_shardings=(p_sh, o_sh, b_sh),
+        out_shardings=(p_sh, o_sh, m_sh),
+        donate_argnums=(0, 1))
+
+
+def make_prefill_step(lm: LM, rules: ShardingRules, batch_specs, batch_dims,
+                      cache_abs, cache_dims) -> StepBundle:
+    def step(params, cache, batch):
+        return lm.prefill(params, cache, batch, rules=rules)
+
+    params_abs, param_dims = lm.abstract()
+    p_sh = rules.tree_shardings(params_abs, param_dims)
+    c_sh = rules.tree_shardings(cache_abs, cache_dims)
+    b_sh = rules.tree_shardings(batch_specs, batch_dims)
+    logits_abs = jax.eval_shape(step, params_abs, cache_abs, batch_specs)[0]
+    logits_dims = ("batch",) + (None,) * (len(logits_abs.shape) - 2) + ("vocab",)
+    l_sh = rules.tree_shardings(logits_abs, logits_dims)
+    return StepBundle(
+        fn=step, abstract_args=(params_abs, cache_abs, batch_specs),
+        in_shardings=(p_sh, c_sh, b_sh),
+        out_shardings=(l_sh, c_sh),
+        donate_argnums=(1,))
+
+
+def make_decode_step(lm: LM, rules: ShardingRules, token_specs, token_dims,
+                     cache_abs, cache_dims) -> StepBundle:
+    def step(params, cache, tokens):
+        return lm.decode_step(params, cache, tokens, rules=rules)
+
+    params_abs, param_dims = lm.abstract()
+    p_sh = rules.tree_shardings(params_abs, param_dims)
+    c_sh = rules.tree_shardings(cache_abs, cache_dims)
+    t_sh = rules.tree_shardings(token_specs, token_dims)
+    logits_abs = jax.eval_shape(step, params_abs, cache_abs, token_specs)[0]
+    logits_dims = ("batch",) + (None,) * (len(logits_abs.shape) - 2) + ("vocab",)
+    l_sh = rules.tree_shardings(logits_abs, logits_dims)
+    return StepBundle(
+        fn=step, abstract_args=(params_abs, cache_abs, token_specs),
+        in_shardings=(p_sh, c_sh, t_sh),
+        out_shardings=(l_sh, c_sh),
+        donate_argnums=(1,))
+
+
+# ------------------------------------------------------------- HWA steps
+
+
+def make_hwa_train_step(lm: LM, rules: ShardingRules, batch_specs, batch_dims,
+                        hwa_cfg: HWAConfig, optimizer: str = "adamw",
+                        lr: float = 3e-4,
+                        opt_rules: ShardingRules | None = None,
+                        n_microbatches: int = 1) -> StepBundle:
+    """Inner HWA step: K independent replicas, stacked on the replica axis.
+
+    Gradient all-reduce stays *inside* each replica's data shard; nothing
+    crosses the replica/pod axis here — that is the H-fold comm saving.
+    """
+    opt = _mk_optimizer(optimizer)
+    K = hwa_cfg.n_replicas
+    params_abs, param_dims = lm.abstract()
+    stacked_abs = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((K,) + s.shape, s.dtype), params_abs)
+    stacked_dims = _prefix_dims(param_dims, "replica")
+    opt_abs = jax.eval_shape(lambda p: jax.vmap(opt.init)(p), stacked_abs)
+    o_dims = opt_state_dims(opt_abs, stacked_dims)
+    if "count" in o_dims:          # adamw step counter, vmapped to (K,)
+        o_dims["count"] = ("replica",)
+    opt_rules = opt_rules or rules
+    kbatch_abs = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((K,) + s.shape, s.dtype), batch_specs)
+    kbatch_dims = _prefix_dims(batch_dims, "replica")
+
+    def loss_fn(params, batch):
+        return lm.loss(params, batch, rules=rules)
+
+    def step(inner, inner_opt, batches):
+        def one(params, opt_state, batch):
+            if n_microbatches == 1:
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, batch)
+            else:
+                mb = jax.tree.map(
+                    lambda x: x.reshape((n_microbatches,
+                                         x.shape[0] // n_microbatches)
+                                        + x.shape[1:]), batch)
+
+                def body(acc, mbatch):
+                    g_acc, l_acc = acc
+                    (l, m), g = jax.value_and_grad(
+                        loss_fn, has_aux=True)(params, mbatch)
+                    g_acc = jax.tree.map(
+                        lambda a, gi: a + gi.astype(jnp.float32), g_acc, g)
+                    return (g_acc, l_acc + m["loss"]), None
+
+                zeros = jax.tree.map(
+                    lambda pp: jnp.zeros(pp.shape, jnp.float32), params)
+                (g_sum, l_sum), _ = jax.lax.scan(
+                    body, (zeros, jnp.zeros(())), mb)
+                grads = jax.tree.map(
+                    lambda g, pp: (g / n_microbatches).astype(pp.dtype),
+                    g_sum, params)
+                metrics = {"loss": l_sum / n_microbatches}
+            updates, opt_state = opt.update(grads, opt_state, params, lr)
+            return apply_updates(params, updates), opt_state, metrics["loss"]
+
+        inner, inner_opt, losses = jax.vmap(one)(inner, inner_opt, batches)
+        return inner, inner_opt, jnp.mean(losses)
+
+    p_sh = rules.tree_shardings(stacked_abs, stacked_dims)
+    o_sh = opt_rules.tree_shardings(opt_abs, o_dims)
+    b_sh = rules.tree_shardings(kbatch_abs, kbatch_dims)
+    scalar_sh = NamedSharding(rules.mesh, P())
+    return StepBundle(
+        fn=step, abstract_args=(stacked_abs, opt_abs, kbatch_abs),
+        in_shardings=(p_sh, o_sh, b_sh),
+        out_shardings=(p_sh, o_sh, scalar_sh),
+        donate_argnums=(0, 1))
+
+
+def _resolved_k_axes(rules: ShardingRules, K: int, topology: SyncTopology
+                     ) -> tuple[str, ...]:
+    """The mesh axes the rules actually shard the stacked K dim over,
+    checked against the topology's replica axes (ORDER included — the
+    two-level tree's 0-ULP composition needs pod-major, i.e. contiguous-
+    pod, sharding of the K dim). May be empty for a Flat topology whose
+    rules keep the stack device-local (K resident per device, no psum);
+    a TwoLevel topology REQUIRES the sharding — without it there are no
+    inner groups to reduce over."""
+    k_entry = rules.spec(("replica",), (K,))
+    k_axes = _norm_entry(k_entry[0] if len(k_entry) else None)
+    if k_axes and k_axes != topology.replica_axes:
+        raise ValueError(
+            f"rules shard the stacked K dim over {k_axes} but the sync "
+            f"topology expects {topology.replica_axes}; build the rules "
+            f"with make_tp_rules(mesh, replica_axis="
+            f"{topology.replica_axes!r})")
+    if not k_axes and isinstance(topology, TwoLevel):
+        raise ValueError(
+            "two-level sync needs the stacked K dim sharded over "
+            f"{topology.replica_axes}; build the rules with "
+            f"make_tp_rules(mesh, replica_axis={topology.replica_axes!r})")
+    return k_axes
+
+
+def _check_outer_every(hwa_cfg: HWAConfig, topology: SyncTopology) -> None:
+    """One source of truth for H₂: the driver schedules off
+    ``topology.is_outer`` while ``HWAConfig.outer_every`` rides along in
+    config records/checkpoints — refuse silently-disagreeing values."""
+    if isinstance(topology, TwoLevel):
+        if hwa_cfg.outer_every != topology.outer_every:
+            raise ValueError(
+                f"HWAConfig.outer_every={hwa_cfg.outer_every} disagrees "
+                f"with TwoLevel.outer_every={topology.outer_every}; set "
+                "both from the same value (the driver schedules off the "
+                "topology)")
+    elif hwa_cfg.outer_every != 1:
+        raise ValueError(
+            f"HWAConfig.outer_every={hwa_cfg.outer_every} would be "
+            "silently ignored: this sync path is flat (every sync is "
+            "outer). Use make_mesh_hwa_sync_step with a TwoLevel "
+            "topology for the H·H₂ hierarchy, or leave outer_every at 1")
+
+
+def make_hwa_sync_step(lm: LM, rules: ShardingRules, hwa_cfg: HWAConfig,
+                       ring_dtype=jnp.float32,
+                       mesh_resident: bool | None = None) -> StepBundle:
+    """Synchronization + window update: the once-per-H-steps collective.
+
+    outer = mean over the replica axis (one all-reduce across pods);
+    inner ← broadcast(outer); slide-window update on PACKED state: the
+    ring is one (I, P) buffer and the total one (P,) buffer over the whole
+    parameter set (``repro.common.packing``), held packed across the jit
+    boundary so the donation of ring/total is a true in-place update
+    step-to-step — no per-leaf launches, no per-call padding.
+
+    Unlike the mesh-native builders below, the stacked K dim here may be
+    LARGER than its mesh axis (several replicas resident per device);
+    the local partial sums use the canonical halving order
+    (``core.online.halving_sum_axis0``), which is what makes this flat
+    path bit-comparable to the two-level composition.
+
+    **pack_spec contract.** ``bundle.pack_spec`` is the layout the caller
+    MUST allocate the window buffers from — ``ring = zeros((I,
+    spec.padded), ring_dtype)``, ``total = zeros((spec.padded,), f32)`` —
+    and the layout W̿/checkpointed state are expressed in. It is not
+    always the default contiguous layout: the mesh-resident path below
+    chooses a shard-aware layout (``spec.shards > 1``) whose ``padded``
+    differs, so callers must never substitute their own
+    ``pack_spec(params)``. Leaf views come back via ``packing.unpack(buf,
+    bundle.pack_spec)``; checkpoints written through
+    ``checkpoint.save_window_state`` record the layout and repack on load
+    when it changed.
+
+    **Donation invariants.** args 0-2 (stacked inner, ring, total) are
+    donated: the caller's arrays are consumed every call and the returned
+    buffers must be threaded into the next call (the trainer's steady
+    state — this is what makes the ring update truly in place). Scalars
+    (count, next_idx) are not donated.
+
+    **Kernel gating / mesh residency.** On a single device the fused
+    Pallas path runs as-is. On a multi-device mesh a bare ``pallas_call``
+    is opaque to the GSPMD partitioner — XLA runs it per-shard with
+    GLOBAL-shape semantics and silently corrupts values — so multi-device
+    meshes default to the MESH-RESIDENT path: the whole sync runs inside
+    a fully-manual ``shard_map`` where each device assembles and updates
+    its local ``(I, P/shards)`` slice of a shard-aware packed layout
+    (zero assembly collectives; see ``packed._local_packed_sync``),
+    driving the Pallas kernel on true local shapes when ``use_kernels``
+    and the jnp reference otherwise. When the parameter tilings admit no
+    such layout (``_mesh_resident_layout`` → None, e.g. FSDP) the legacy
+    GSPMD fallback (``launch.sync.legacy``) runs instead, paying one
+    param-size assembly all-reduce per sync — and on multi-device CPU
+    meshes that fallback is a HARD ERROR (XLA 0.4.37's CPU partitioner
+    miscompiles it; ``REPRO_ALLOW_LEGACY_ASSEMBLY=1`` downgrades to a
+    warning for HLO-introspection-only callers). ``mesh_resident`` forces
+    the choice (True raises if the layout does not qualify); None picks
+    automatically.
+
+    Variants (EXPERIMENTS.md §Perf pair 3): exact f32 ring (paper),
+    bf16 ring (2× window memory saving), or hwa_cfg.window_kind ==
+    "streaming" (O(1) extra copies, windowed-running-mean approximation;
+    always the jnp path — it is a two-pass rescale, not ring-shaped).
+    """
+    from repro.common.packing import pack_spec
+
+    K = hwa_cfg.n_replicas
+    I = hwa_cfg.window
+    mesh = rules.mesh
+    # this stacked/vmap path is flat-only; refuse a silently-ignored H₂
+    _check_outer_every(hwa_cfg, Flat())
+    streaming = hwa_cfg.window_kind == "streaming"
+    use_kernel = hwa_cfg.use_kernels and mesh.size == 1
+    params_abs, param_dims = lm.abstract()
+    stacked_abs = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((K,) + s.shape, s.dtype), params_abs)
+    stacked_dims = _prefix_dims(param_dims, "replica")
+    scalar_i = jax.ShapeDtypeStruct((), jnp.int32)
+
+    pspec_tree = rules.tree_specs(params_abs, param_dims)
+    flat_specs = jax.tree.leaves(pspec_tree)
+    flat_shapes = [tuple(l.shape) for l in jax.tree.leaves(params_abs)]
+    k_entry = rules.spec(("replica",), (K,))
+    k_axes = _norm_entry(k_entry[0] if len(k_entry) else None)
+    axes, shard_dims = _mesh_resident_layout(mesh, flat_specs, flat_shapes,
+                                             exclude=k_axes)
+    if mesh_resident is None:
+        mesh_resident = (mesh.size > 1 and not streaming
+                         and axes is not None)
+    if mesh_resident and (axes is None or streaming):
+        raise ValueError("mesh-resident sync needs a ring window and "
+                         "leaf tilings that align with packed ranges "
+                         "(_mesh_resident_layout found none)")
+
+    if mesh_resident:
+        S = math.prod(mesh.shape[a] for a in axes) if axes else 1
+        spec = pack_spec(params_abs, shards=S, shard_dims=shard_dims,
+                         axes=axes)
+        ring_abs = jax.ShapeDtypeStruct((I, spec.padded), ring_dtype)
+        total_abs = jax.ShapeDtypeStruct((spec.padded,), jnp.float32)
+        stacked_pspecs = rules.tree_specs(stacked_abs, stacked_dims)
+        pax = _axes_entry(axes)
+        body = functools.partial(_local_packed_sync, hwa_cfg,
+                                 spec.local_spec(), K, (k_axes,),
+                                 hwa_cfg.use_kernels, False)
+
+        def local_step(inner, ring, total, count, next_idx):
+            return body(inner, ring, total, count, next_idx,
+                        jnp.zeros((), jnp.int32))[:6]
+
+        step = shard_map(
+            local_step, mesh,
+            in_specs=(stacked_pspecs, P(None, pax), P(pax), P(), P()),
+            out_specs=(stacked_pspecs, P(None, pax), P(pax), P(), P(),
+                       pspec_tree),
+            check_rep=False)
+        p_sh = rules.tree_shardings(stacked_abs, stacked_dims)
+        w_sh = rules.tree_shardings(params_abs, param_dims)
+        r_sh = _packed_sharding(mesh, spec.padded, lead_dims=1, axes=axes)
+        t_sh = _packed_sharding(mesh, spec.padded, axes=axes)
+        s_sh = NamedSharding(mesh, P())
+        return StepBundle(
+            fn=step,
+            abstract_args=(stacked_abs, ring_abs, total_abs, scalar_i,
+                           scalar_i),
+            in_shardings=(p_sh, r_sh, t_sh, s_sh, s_sh),
+            out_shardings=(p_sh, r_sh, t_sh, s_sh, s_sh, w_sh),
+            donate_argnums=(0, 1, 2), pack_spec=spec)
+
+    check_legacy_assembly(mesh)
+    return make_legacy_sync_step(lm, rules, hwa_cfg, ring_dtype, use_kernel)
+
+
+# ----------------------------------------------- mesh-native HWA (shard_map)
+#
+# Same storage layout as the vmap path — stacked (K, ...) state with the
+# leading dim sharded over the ``replica`` mesh axis (or jointly over the
+# ``(pod, replica)`` pair of a two-level topology) — but the step runs
+# under shard_map *manual* over those axes (data/model stay auto/GSPMD):
+# each replica block squeezes its (1, ...) slice and steps locally, so the
+# lowered inner-step HLO provably contains no collective crossing the
+# replica axes, and hwa_sync is the topology's psum composition. That
+# makes the paper's H-fold inter-replica communication amortization a
+# structural property of the program rather than a GSPMD-propagation
+# accident.
+
+
+def _squeeze0(tree):
+    return jax.tree.map(lambda x: x[0], tree)
+
+
+def _expand0(tree):
+    return jax.tree.map(lambda x: x[None], tree)
+
+
+def make_mesh_hwa_train_step(lm: LM, rules: ShardingRules, batch_specs,
+                             batch_dims, hwa_cfg: HWAConfig,
+                             optimizer: str = "adamw", lr: float = 3e-4,
+                             opt_rules: ShardingRules | None = None,
+                             replica_axis: str | tuple[str, ...] = "replica"
+                             ) -> StepBundle:
+    """Mesh-native inner HWA step.
+
+    Collective-free over ``replica_axis`` by construction (shard_map keeps
+    the replica blocks independent; the only collectives GSPMD may insert
+    live inside a block, over the data/model axes). ``replica_axis`` may
+    name several mesh axes jointly — a two-level topology's ``(pod,
+    replica)`` — in which case the step is collective-free over ALL of
+    them: the tree changes nothing about the inner step, only about the
+    sync. Returns per-replica losses as a (K,) array sharded over the
+    replica axes — averaging them to a replicated scalar would itself be
+    a replica collective, so the caller takes the mean after fetching.
+    """
+    from repro.launch.sync.topology import _norm_axes
+
+    opt = _mk_optimizer(optimizer)
+    K = hwa_cfg.n_replicas
+    mesh = rules.mesh
+    rep_axes = _norm_axes(replica_axis)
+    rep_entry = rep_axes[0] if len(rep_axes) == 1 else rep_axes
+    assert all(a in mesh.shape for a in rep_axes), (rep_axes, mesh.shape)
+    rep_size = math.prod(mesh.shape[a] for a in rep_axes)
+    assert K == rep_size, \
+        f"mesh-native path needs K == replica-axes size ({K} != " \
+        f"{rep_size} over {rep_axes}); use the vmap path otherwise"
+    auto = frozenset(a for a in mesh.axis_names if a not in rep_axes)
+    if not lm.cfg.scan_unroll:
+        # XLA (0.4.x) fatals on a while loop under manual-subgroup
+        # shardings; unrolling the layer scan keeps the body loop-free.
+        from repro.models.registry import build_model
+        lm = build_model(lm.cfg.with_(scan_unroll=True))
+    params_abs, param_dims = lm.abstract()
+    stacked_abs = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((K,) + s.shape, s.dtype), params_abs)
+    stacked_dims = _prefix_dims(param_dims, "replica")
+    opt_abs = jax.eval_shape(lambda p: jax.vmap(opt.init)(p), stacked_abs)
+    o_dims = opt_state_dims(opt_abs, stacked_dims)
+    if "count" in o_dims:
+        o_dims["count"] = ("replica",)
+    opt_rules = opt_rules or rules
+    kbatch_abs = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((K,) + s.shape, s.dtype), batch_specs)
+    kbatch_dims = _prefix_dims(batch_dims, "replica")
+
+    # The body runs the model's pure-jnp path (rules=None): the rules-aware
+    # path opens nested shard_maps (vocab-sharded gather, EP MoE) which 0.4.x
+    # cannot nest inside a partial-auto map. Layouts over the auto axes are
+    # still driven by the jit in/out shardings; constraints are hints only,
+    # so the math is unchanged.
+    def loss_fn(params, batch):
+        return lm.loss(params, batch, rules=None)
+
+    def local_step(inner, inner_opt, batch):
+        params, opt_state, loss, _ = hwa_local_inner_step(
+            _squeeze0(inner), _squeeze0(inner_opt), _squeeze0(batch),
+            loss_fn, opt, lr)
+        return _expand0(params), _expand0(opt_state), loss[None]
+
+    step = shard_map(
+        local_step, mesh,
+        in_specs=(stacked_replica_specs(stacked_abs, rep_entry),
+                  stacked_replica_specs(opt_abs, rep_entry),
+                  stacked_replica_specs(kbatch_abs, rep_entry)),
+        out_specs=(stacked_replica_specs(stacked_abs, rep_entry),
+                   stacked_replica_specs(opt_abs, rep_entry),
+                   P(rep_entry)),
+        check_rep=False, auto=auto)
+
+    p_sh = rules.tree_shardings(stacked_abs, stacked_dims)
+    o_sh = opt_rules.tree_shardings(opt_abs, o_dims)
+    b_sh = rules.tree_shardings(kbatch_abs, kbatch_dims)
+    losses_sh = NamedSharding(mesh, P(rep_entry))
+    return StepBundle(
+        fn=step, abstract_args=(stacked_abs, opt_abs, kbatch_abs),
+        in_shardings=(p_sh, o_sh, b_sh),
+        out_shardings=(p_sh, o_sh, losses_sh),
+        donate_argnums=(0, 1))
+
+
+def _mesh_resident_pack(lm, rules, topology):
+    """Shared prologue of the mesh-native sync builders: abstract trees,
+    the shard-aware packed layout (or None), and the sharding trees."""
+    from repro.common.packing import pack_spec
+
+    params_abs, param_dims = lm.abstract()
+    K = math.prod(rules.mesh.shape[a] for a in topology.replica_axes)
+    stacked_abs = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((K,) + s.shape, s.dtype), params_abs)
+    stacked_dims = _prefix_dims(param_dims, "replica")
+    pspec_tree = rules.tree_specs(params_abs, param_dims)
+    flat_specs = jax.tree.leaves(pspec_tree)
+    flat_shapes = [tuple(l.shape) for l in jax.tree.leaves(params_abs)]
+    axes, shard_dims = _mesh_resident_layout(
+        rules.mesh, flat_specs, flat_shapes, exclude=topology.replica_axes)
+    spec = None
+    if axes is not None:
+        S = math.prod(rules.mesh.shape[a] for a in axes) if axes else 1
+        spec = pack_spec(params_abs, shards=S, shard_dims=shard_dims,
+                         axes=axes)
+    return (params_abs, param_dims, stacked_abs, stacked_dims, pspec_tree,
+            axes, spec)
+
+
+def make_mesh_hwa_sync_step(lm: LM, rules: ShardingRules, hwa_cfg: HWAConfig,
+                            ring_dtype=jnp.float32,
+                            replica_axis: str = "replica",
+                            mesh_resident: bool | None = None,
+                            topology: SyncTopology | None = None
+                            ) -> StepBundle:
+    """Mesh-native synchronization: the once-per-H-steps collective(s).
+
+    **Mesh-resident path (default).** The ENTIRE sync — packed-W̄
+    assembly, the weight all-reduce(s), the slide-window push, the W̿
+    unpack — runs inside ONE fully-manual ``shard_map`` over every mesh
+    axis (``packed._local_packed_sync``). The window state lives in a
+    shard-aware packed layout (``packed._mesh_resident_layout`` aligns
+    each leaf's tiling with its packed range), so each device assembles
+    its own ``(I, P/shards)`` ring slice from its local leaf shards,
+    psums the pre-scaled partial mean over the topology's replica axes,
+    and runs the window push locally: with ``use_kernels`` that is the
+    Pallas kernel on true local shapes, which GSPMD could never be
+    trusted with (it runs opaque custom calls per-shard with global-shape
+    semantics). tests/mesh_hwa_check.py asserts the structure on the
+    lowered HLO via ``launch.hlo.sync_collective_audit``.
+
+    **Topology.** ``topology`` selects WHERE the mean reduces
+    (``launch.sync.topology``): ``Flat`` (default; one all-reduce over
+    ``replica_axis``) or ``TwoLevel(inner_axis, outer_axis,
+    outer_every)``. For ``TwoLevel`` this builder returns the OUTER sync
+    bundle — the grouped psum composition (per-pod psum, then the
+    cross-pod all-reduce) + window push, bit-identical (0 ULP) to the
+    flat K-replica mean for power-of-two pod/member counts — and
+    :func:`make_mesh_hwa_inner_sync_step` builds the cheap pod-internal
+    restart that runs on the other ``outer_every - 1`` of every
+    ``outer_every`` syncs. Audit contract per level: the inner sync's
+    single all-reduce crosses ONLY the inner groups; the outer sync adds
+    exactly one cross-pod all-reduce on top.
+
+    Going fully manual also sidesteps the XLA 0.4.x partial-auto caveat
+    that previously forced the window push OUTSIDE the manual region:
+    partial-auto manual subgroups miscompile packed-buffer assembly from
+    auto-sharded leaves (a spurious replica-axis reduction doubles the
+    values — the same IsManualSubgroup bug class as the scan_unroll item;
+    see ROADMAP "partial-auto on new JAX"/"scan under manual subgroups").
+    With no auto axes in the sync map there is no subgroup to miscompile.
+
+    **Fallback.** When the parameter tilings admit no aligned layout
+    (``_mesh_resident_layout`` → None, e.g. FSDP's mixed tilings), the
+    legacy split (``launch.sync.legacy``) runs instead: pmean inside a
+    partial-auto shard_map, window push outside in GSPMD-land — Flat
+    only, one param-size masked all-reduce per sync, and a HARD ERROR on
+    multi-device CPU meshes where XLA 0.4.37 miscompiles the assembly
+    (``REPRO_ALLOW_LEGACY_ASSEMBLY=1`` downgrades to a warning).
+    ``mesh_resident`` forces the choice (True raises if the layout does
+    not qualify); None picks automatically.
+
+    **pack_spec contract.** Callers allocate the window buffers from
+    ``bundle.pack_spec`` — ``ring = zeros((I, spec.padded), ring_dtype)``,
+    ``total = zeros((spec.padded,), f32)`` — and read leaf views with
+    ``packing.unpack(buf, bundle.pack_spec)``. The mesh-resident layout's
+    ``padded`` includes per-segment alignment and replicated-leaf
+    duplicates, so it is NOT interchangeable with ``pack_spec(params)``;
+    checkpoints written via ``checkpoint.save_window_state`` record the
+    layout and repack bit-exactly on load under a different mesh.
+
+    **Donation invariants.** args 0-2 (stacked inner, ring, total) are
+    donated — thread the returned buffers into the next call; the scalar
+    counters (count, next_idx, cycle) are returned fresh, not donated.
+    """
+    K = hwa_cfg.n_replicas
+    I = hwa_cfg.window
+    mesh = rules.mesh
+    topology = topology if topology is not None else Flat(replica_axis)
+    topology.validate(mesh, K)
+    _check_outer_every(hwa_cfg, topology)
+    k_axes = _resolved_k_axes(rules, K, topology)
+    # Flat keeps the original contract: psum over whatever axes the rules
+    # shard the stack over (none → K device-local, collective-free sync).
+    # TwoLevel reduces by the topology's inner-then-outer composition.
+    psum_groups = (topology.psum_groups()
+                   if isinstance(topology, TwoLevel) else (k_axes,))
+    scalar_i = jax.ShapeDtypeStruct((), jnp.int32)
+    (params_abs, param_dims, stacked_abs, stacked_dims, pspec_tree, axes,
+     spec) = _mesh_resident_pack(lm, rules, topology)
+    p_sh = rules.tree_shardings(stacked_abs, stacked_dims)
+    w_sh = rules.tree_shardings(params_abs, param_dims)
+    s_sh = NamedSharding(mesh, P())
+
+    if mesh_resident is None:
+        mesh_resident = axes is not None
+    elif mesh_resident and axes is None:
+        raise ValueError("mesh-resident sync: leaf tilings do not align "
+                         "with any packed super-axis")
+    if not mesh_resident and isinstance(topology, TwoLevel):
+        raise ValueError("the two-level sync tree requires the "
+                         "mesh-resident packed path (no legacy GSPMD "
+                         "formulation of grouped psums exists)")
+
+    if mesh_resident:
+        stacked_pspecs = rules.tree_specs(stacked_abs, stacked_dims)
+        ring_abs = jax.ShapeDtypeStruct((I, spec.padded), ring_dtype)
+        total_abs = jax.ShapeDtypeStruct((spec.padded,), jnp.float32)
+        pax = _axes_entry(axes)
+        step = shard_map(
+            functools.partial(_local_packed_sync, hwa_cfg,
+                              spec.local_spec(), K, psum_groups,
+                              hwa_cfg.use_kernels, True),
+            mesh,
+            in_specs=(stacked_pspecs, P(None, pax), P(pax), P(), P(), P()),
+            out_specs=(stacked_pspecs, P(None, pax), P(pax), P(), P(),
+                       pspec_tree, P()),
+            check_rep=False)
+        r_sh = _packed_sharding(mesh, spec.padded, lead_dims=1, axes=axes)
+        t_sh = _packed_sharding(mesh, spec.padded, axes=axes)
+        return StepBundle(
+            fn=step,
+            abstract_args=(stacked_abs, ring_abs, total_abs, scalar_i,
+                           scalar_i, scalar_i),
+            in_shardings=(p_sh, r_sh, t_sh, s_sh, s_sh, s_sh),
+            out_shardings=(p_sh, r_sh, t_sh, s_sh, s_sh, w_sh, s_sh),
+            donate_argnums=(0, 1, 2), pack_spec=spec)
+
+    # ------- legacy fallback: partial-auto pmean + GSPMD-land window push
+    if len(topology.replica_axes) != 1:
+        raise ValueError("the legacy GSPMD fallback handles a single "
+                         f"replica axis only, got {topology.replica_axes}")
+    check_legacy_assembly(mesh)
+    return make_legacy_mesh_sync_step(lm, rules, hwa_cfg, ring_dtype,
+                                      topology.replica_axes[0])
+
+
+def make_mesh_hwa_inner_sync_step(lm: LM, rules: ShardingRules,
+                                  hwa_cfg: HWAConfig,
+                                  topology: TwoLevel) -> StepBundle:
+    """The two-level tree's INNER sync: pod-internal averaging + restart.
+
+    Runs on the ``outer_every - 1`` of every ``outer_every`` syncs that
+    are NOT outer (``topology.is_outer``). Each pod pmeans over its OWN
+    members — one all-reduce whose explicit ``replica_groups`` pair only
+    same-pod devices, zero cross-pod traffic, zero window-state traffic
+    (the slide window collects global W̄ only, so ring/total/counters are
+    untouched and are not even arguments here). Signature is simply
+    stacked-inner → stacked-inner, with the input donated.
+
+    Mesh-resident only: the pod mean is assembled/unpacked through the
+    same shard-aware packed layout as the outer sync (one collective
+    total); tilings that do not align raise, like the forced
+    mesh-resident outer path.
+    """
+    K = hwa_cfg.n_replicas
+    mesh = rules.mesh
+    if not isinstance(topology, TwoLevel):
+        raise ValueError("inner-only sync exists only for the TwoLevel "
+                         f"topology, got {topology!r}")
+    topology.validate(mesh, K)
+    _check_outer_every(hwa_cfg, topology)
+    _resolved_k_axes(rules, K, topology)
+    (params_abs, param_dims, stacked_abs, stacked_dims, pspec_tree, axes,
+     spec) = _mesh_resident_pack(lm, rules, topology)
+    if axes is None:
+        raise ValueError("inner sync: leaf tilings do not align with any "
+                         "packed super-axis (mesh-resident only)")
+    stacked_pspecs = rules.tree_specs(stacked_abs, stacked_dims)
+    pod_size = K // topology.pods(mesh)
+    step = shard_map(
+        functools.partial(_local_inner_sync, spec.local_spec(), pod_size,
+                          topology.inner_groups()),
+        mesh,
+        in_specs=(stacked_pspecs,),
+        out_specs=stacked_pspecs,
+        check_rep=False)
+    p_sh = rules.tree_shardings(stacked_abs, stacked_dims)
+    return StepBundle(
+        fn=step, abstract_args=(stacked_abs,),
+        in_shardings=(p_sh,), out_shardings=p_sh,
+        donate_argnums=(0,), pack_spec=spec)

@@ -1,0 +1,217 @@
+"""Legacy GSPMD sync fallback: the non-mesh-resident packed sync paths.
+
+These run when the parameter tilings admit no aligned packed layout
+(``packed._mesh_resident_layout`` → None, e.g. FSDP's mixed data/model
+tilings) or on a single device. Packing W̄ from per-leaf (data/model)-
+tiled shards into the contiguous buffer is then a real layout
+redistribution that GSPMD lowers as masked contributions + ONE
+param-size all-reduce spanning the whole mesh, once per sync.
+
+**Hard error on CPU meshes.** XLA 0.4.37's CPU SPMD partitioner
+MISCOMPILES that assembly pattern — replicated shards get overcounted
+(~4× on the (2,2,2) test mesh), silently corrupting W̿ (it corrupted the
+PR-2 mesh sync, masked by an oracle computed through the same path).
+Non-CPU backends lower the same pattern correctly, so
+:func:`check_legacy_assembly` raises ONLY for multi-device CPU meshes;
+``REPRO_ALLOW_LEGACY_ASSEMBLY=1`` downgrades the raise to the old loud
+warning for callers that only introspect the lowered HLO and never trust
+the values (dry-run, the structural legs of mesh_hwa_check and
+``make bench-kernels``).
+"""
+from __future__ import annotations
+
+import os
+import warnings
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.common.compat import shard_map
+from repro.core.hwa import HWAConfig, window_push_packed
+from repro.launch.sync.packed import _packed_sharding
+from repro.models.registry import LM
+from repro.sharding.rules import (ShardingRules, replicated_specs,
+                                  stacked_replica_specs)
+
+ALLOW_ENV = "REPRO_ALLOW_LEGACY_ASSEMBLY"
+
+_MISCOMPILE_MSG = (
+    "HWA sync: the legacy GSPMD packed-W̄ assembly on a multi-device CPU "
+    "mesh is MISCOMPILED by XLA 0.4.37's CPU SPMD partitioner "
+    "(replicated shards overcounted ~4× on the (2,2,2) test mesh) and "
+    "silently corrupts W̿. Use tilings that _mesh_resident_layout can "
+    "align (see docs/ARCHITECTURE.md §1), or set "
+    f"{ALLOW_ENV}=1 if you only introspect the lowered HLO and never "
+    "trust the computed values.")
+
+
+def check_legacy_assembly(mesh: Mesh) -> None:
+    """Refuse the legacy assembly where it is known to miscompile.
+
+    Raises ``RuntimeError`` for multi-device CPU meshes unless
+    ``REPRO_ALLOW_LEGACY_ASSEMBLY=1`` is set (escape hatch for
+    HLO-introspection-only callers), in which case the PR-3 warning is
+    kept. A no-op on single devices and non-CPU backends, where the
+    pattern lowers correctly.
+    """
+    if mesh.size > 1 and jax.default_backend() == "cpu":
+        if os.environ.get(ALLOW_ENV) == "1":
+            warnings.warn(_MISCOMPILE_MSG, RuntimeWarning, stacklevel=3)
+            return
+        raise RuntimeError(_MISCOMPILE_MSG)
+
+
+def make_legacy_sync_step(lm: LM, rules: ShardingRules, hwa_cfg: HWAConfig,
+                          ring_dtype, use_kernel: bool):
+    """The stacked-input sync WITHOUT mesh residency: packed mean +
+    window push in GSPMD-land (single device, streaming windows, or the
+    non-qualifying-layout fallback). Returns a StepBundle; see
+    ``bundles.make_hwa_sync_step`` for the pack_spec/donation contract.
+    """
+    from repro.common.packing import pack, pack_spec, pack_stacked, unpack
+    from repro.core.offline import WindowState, window_update_packed
+    from repro.core.online import broadcast_to_replicas, online_average
+    from repro.launch.sync.bundles import StepBundle, _prefix_dims
+
+    K = hwa_cfg.n_replicas
+    I = hwa_cfg.window
+    streaming = hwa_cfg.window_kind == "streaming"
+    params_abs, param_dims = lm.abstract()
+    stacked_abs = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((K,) + s.shape, s.dtype), params_abs)
+    stacked_dims = _prefix_dims(param_dims, "replica")
+    scalar_i = jax.ShapeDtypeStruct((), jnp.int32)
+    spec = pack_spec(params_abs)
+    ring_abs = jax.ShapeDtypeStruct((I, spec.padded), ring_dtype)
+    total_abs = jax.ShapeDtypeStruct((spec.padded,), jnp.float32)
+    r_sh = _packed_sharding(rules.mesh, spec.padded, lead_dims=1)
+    t_sh = _packed_sharding(rules.mesh, spec.padded)
+
+    def mean_and_buf(inner):
+        """(W̄ leaf views, packed W̄) without a pack/unpack round-trip.
+
+        The sharding constraint pins the packed buffer to the window
+        state's own sharding so the elementwise push stays shard-local
+        (GSPMD otherwise computes it as distributed partial sums + a
+        full-buffer all-reduce crossing every mesh axis).
+        """
+        if use_kernel:
+            from repro.kernels import ops as kops
+            buf = kops.online_mean_packed(pack_stacked(inner, spec))
+            outer = unpack(buf, spec)
+        else:
+            outer = online_average(inner)
+            buf = pack(outer, spec)
+        return outer, jax.lax.with_sharding_constraint(buf, t_sh)
+
+    def step_ring(inner, ring, total, count, next_idx):
+        outer, buf = mean_and_buf(inner)
+        new_inner = broadcast_to_replicas(outer, K)
+        ws = WindowState(ring=ring, total=total, count=count,
+                         next_idx=next_idx, window=I, kind="ring", spec=spec)
+        ws2, avg = window_update_packed(ws, buf, use_kernel=use_kernel)
+        wa = unpack(avg, spec)      # leaf views of W̿ (slices, no copy)
+        return new_inner, ws2.ring, ws2.total, ws2.count, ws2.next_idx, wa
+
+    def step_streaming(inner, total, count):
+        outer, buf = mean_and_buf(inner)
+        new_inner = broadcast_to_replicas(outer, K)
+        ws = WindowState(ring=None, total=total, count=count,
+                         next_idx=jnp.zeros((), jnp.int32), window=I,
+                         kind="streaming", spec=spec)
+        ws2, avg = window_update_packed(ws, buf)
+        return new_inner, ws2.total, ws2.count, unpack(avg, spec)
+
+    p_sh = rules.tree_shardings(stacked_abs, stacked_dims)
+    w_sh = rules.tree_shardings(params_abs, param_dims)
+    s_sh = NamedSharding(rules.mesh, P())
+    if streaming:
+        return StepBundle(
+            fn=step_streaming,
+            abstract_args=(stacked_abs, total_abs, scalar_i),
+            in_shardings=(p_sh, t_sh, s_sh),
+            out_shardings=(p_sh, t_sh, s_sh, w_sh),
+            donate_argnums=(0, 1), pack_spec=spec)
+    return StepBundle(
+        fn=step_ring,
+        abstract_args=(stacked_abs, ring_abs, total_abs, scalar_i, scalar_i),
+        in_shardings=(p_sh, r_sh, t_sh, s_sh, s_sh),
+        out_shardings=(p_sh, r_sh, t_sh, s_sh, s_sh, w_sh),
+        donate_argnums=(0, 1, 2), pack_spec=spec)
+
+
+def make_legacy_mesh_sync_step(lm: LM, rules: ShardingRules,
+                               hwa_cfg: HWAConfig, ring_dtype,
+                               replica_axis: str):
+    """Mesh-native sync fallback: pmean inside a partial-auto shard_map,
+    window push outside in GSPMD-land — correct on non-CPU backends, but
+    the packed-W̄ assembly costs ONE param-size masked all-reduce per
+    sync (the cost the mesh-resident aligned layout removes)."""
+    from repro.common.packing import pack, pack_spec, unpack
+    from repro.core.offline import WindowState
+    from repro.core.online import broadcast_to_replicas, online_average_named
+    from repro.launch.sync.bundles import (StepBundle, _prefix_dims,
+                                           _squeeze0)
+
+    K = hwa_cfg.n_replicas
+    I = hwa_cfg.window
+    mesh = rules.mesh
+    params_abs, param_dims = lm.abstract()
+    stacked_abs = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((K,) + s.shape, s.dtype), params_abs)
+    stacked_dims = _prefix_dims(param_dims, "replica")
+    scalar_i = jax.ShapeDtypeStruct((), jnp.int32)
+    auto = frozenset(a for a in mesh.axis_names if a != replica_axis)
+    spec = pack_spec(params_abs)
+    ring_abs = jax.ShapeDtypeStruct((I, spec.padded), ring_dtype)
+    total_abs = jax.ShapeDtypeStruct((spec.padded,), jnp.float32)
+
+    def local_mean(inner):
+        """The one inter-replica collective: W̄ = pmean(W^k)."""
+        return online_average_named(_squeeze0(inner), replica_axis)
+
+    mean_fn = shard_map(
+        local_mean, mesh,
+        in_specs=(stacked_replica_specs(stacked_abs, replica_axis),),
+        out_specs=replicated_specs(params_abs),
+        check_rep=False, auto=auto)
+
+    r_sh = _packed_sharding(mesh, spec.padded, lead_dims=1)
+    t_sh = _packed_sharding(mesh, spec.padded)
+
+    def step(inner, ring, total, count, next_idx, cycle):
+        outer = mean_fn(inner)
+        new_inner = broadcast_to_replicas(outer, K)
+        # Packing W̄ from per-leaf (data/model)-tiled shards into the
+        # contiguous buffer is a real layout redistribution: GSPMD
+        # materializes the concat as masked contributions + ONE
+        # param-size all-reduce spanning the whole mesh, once per sync
+        # (amortized by H; absent entirely on a single device, and
+        # absent from the mesh-resident path). The constraint pins the
+        # buffer to the window state's sharding so the push itself
+        # stays shard-local; W̿ leaf views then slice from the
+        # already-assembled buffer for free.
+        buf = jax.lax.with_sharding_constraint(pack(outer, spec), t_sh)
+        ws = WindowState(ring=ring, total=total, count=count,
+                         next_idx=next_idx, window=I, kind="ring", spec=spec)
+        # bare kernels only on a single device (Pallas is opaque to GSPMD
+        # — per-shard execution with global-shape semantics corrupts
+        # values); on meshes kernels require the mesh-resident path
+        ws2, avg, new_cycle = window_push_packed(
+            hwa_cfg, buf, ws, cycle,
+            use_kernel=hwa_cfg.use_kernels and mesh.size == 1)
+        wa = unpack(avg, spec)
+        return (new_inner, ws2.ring, ws2.total, ws2.count, ws2.next_idx,
+                wa, new_cycle)
+
+    p_sh = rules.tree_shardings(stacked_abs, stacked_dims)
+    w_sh = rules.tree_shardings(params_abs, param_dims)
+    s_sh = NamedSharding(mesh, P())
+    return StepBundle(
+        fn=step,
+        abstract_args=(stacked_abs, ring_abs, total_abs, scalar_i, scalar_i,
+                       scalar_i),
+        in_shardings=(p_sh, r_sh, t_sh, s_sh, s_sh, s_sh),
+        out_shardings=(p_sh, r_sh, t_sh, s_sh, s_sh, w_sh, s_sh),
+        donate_argnums=(0, 1, 2), pack_spec=spec)

@@ -1,0 +1,227 @@
+"""Mesh-resident packed sync: the shard-aware layout chooser and the
+per-device bodies that run under a FULLY-MANUAL shard_map.
+
+Moved out of the ``launch/steps.py`` monolith (PR 4). Everything here is
+mesh-mechanics: which packed super-axis the window buffers shard over
+(:func:`_mesh_resident_layout`), how they are sharded
+(:func:`_packed_sharding`), and the local sync bodies
+(:func:`_local_packed_sync` for full syncs — flat OR the two-level outer
+composition — and :func:`_local_inner_sync` for the tree's pod-internal
+restarts). The StepBundle assembly lives in ``launch.sync.bundles``; the
+GSPMD fallback in ``launch.sync.legacy``.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.hwa import HWAConfig
+
+
+def _norm_entry(entry) -> tuple[str, ...]:
+    """A PartitionSpec entry as a tuple of mesh-axis names."""
+    if entry is None:
+        return ()
+    return tuple(entry) if isinstance(entry, (tuple, list)) else (entry,)
+
+
+def _axes_entry(axes: tuple[str, ...]):
+    """A packed super-axis as a PartitionSpec entry (None/str/tuple)."""
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else tuple(axes)
+
+
+def _packed_sharding(mesh: Mesh, padded: int, lead_dims: int = 0,
+                     axes: tuple[str, ...] | None = None) -> NamedSharding:
+    """Sharding for a packed WA buffer.
+
+    ``axes`` is the packed super-axis of a shard-aware ``PackSpec``
+    (``spec.axes``) — the packed dim is split over exactly those mesh
+    axes, jointly. ``axes=None`` keeps the legacy heuristic used by the
+    non-mesh-resident fallback: split over ``model`` when it divides
+    (it always does — ``padded`` is an ALIGN multiple), else replicate.
+    """
+    if axes is None:
+        ax = "model" if ("model" in mesh.shape
+                         and padded % mesh.shape["model"] == 0) else None
+    else:
+        ax = _axes_entry(axes)
+    return NamedSharding(mesh, P(*([None] * lead_dims + [ax])))
+
+
+def _mesh_resident_layout(mesh: Mesh, flat_specs, flat_shapes,
+                          exclude: tuple[str, ...] = ()):
+    """Choose a packed super-axis aligning leaf tilings with packed ranges.
+
+    Returns ``(axes, shard_dims)`` such that ``pack_spec(params,
+    shards=prod(axes), shard_dims=..., axes=axes)`` makes packed-W̄
+    assembly and W̿ unpacking shard-local (zero collectives): every leaf
+    either has exactly ONE dim sharded over exactly ``axes`` (jointly, in
+    order) — that dim becomes its ``shard_dim`` — or is replicated over
+    the non-``exclude`` mesh axes and gets duplicated per segment.
+
+    Candidates are the distinct PartitionSpec entries the leaves actually
+    use (arbitrary mesh-axis sets, not just the single ``model`` axis),
+    tried largest-device-count first; ``((), all-None)`` is returned for
+    fully-replicated trees, and ``(None, None)`` when no super-axis covers
+    every leaf (e.g. FSDP's mixed data/model tilings) — callers then fall
+    back to the legacy redistribute-and-all-reduce assembly.
+    """
+    cands: list[tuple[str, ...]] = []
+    for sp in flat_specs:
+        for e in sp:
+            t = _norm_entry(e)
+            if (t and not (set(t) & set(exclude)) and t not in cands
+                    and math.prod(mesh.shape[a] for a in t) > 1):
+                cands.append(t)
+    cands.sort(key=lambda t: -math.prod(mesh.shape[a] for a in t))
+    cands.append(())
+    for cand in cands:
+        S = math.prod(mesh.shape[a] for a in cand) if cand else 1
+        dims: list[int | None] = []
+        ok = True
+        for sp, shape in zip(flat_specs, flat_shapes):
+            hot = []
+            for i, e in enumerate(sp):
+                t = _norm_entry(e)
+                if not t or math.prod(mesh.shape[a] for a in t) == 1:
+                    continue                      # effectively replicated
+                if t == cand:
+                    hot.append(i)
+                else:
+                    ok = False                    # sharded over another set
+                    break
+            if not ok or len(hot) > 1:
+                ok = False
+                break
+            if not hot:
+                dims.append(None)
+            elif shape[hot[0]] % S == 0 and all(d > 0 for d in shape):
+                dims.append(hot[0])
+            else:
+                ok = False
+                break
+        if ok:
+            return (cand, dims) if S > 1 else ((), [None] * len(flat_specs))
+    return None, None
+
+
+def _psum_composition(part, psum_axes):
+    """psum ``part`` over each axis group in sequence — the grouped
+    composition of the sync topology (one group for Flat, inner-then-
+    outer for TwoLevel). Empty groups are skipped (K device-local)."""
+    for axes in psum_axes:
+        if axes:
+            part = jax.lax.psum(part, axes)
+    return part
+
+
+def _local_packed_sync(hwa_cfg: HWAConfig, lspec, K: int,
+                       psum_axes: tuple[tuple[str, ...], ...],
+                       use_kernel: bool, with_stride: bool, inner, ring,
+                       total, count, next_idx, cycle):
+    """Per-device body of the mesh-resident packed sync.
+
+    Runs under a FULLY-MANUAL shard_map (every mesh axis manual), so the
+    Pallas kernels see true local shapes — the per-shard (I, P/shards)
+    ring slice — instead of GSPMD's global-shape view that made them
+    unusable on meshes. ``lspec`` is ``pack_spec.local_spec()``: the
+    device's segment of the shard-aware layout, assembled here from the
+    local leaf shards alone (zero collectives by construction).
+
+    ``psum_axes`` is the topology's grouped reduction composition
+    (``SyncTopology.psum_groups()``): one group — the flat weight
+    all-reduce — or inner-then-outer for the two-level tree, where the
+    per-pod psum and the cross-pod psum are separate collectives with
+    their own ``replica_groups``. Partial sums are pre-scaled by 1/K and
+    the local stacked sum uses the canonical contiguous-pairing halving
+    order, so for power-of-two replica counts the composition is
+    bit-identical to the flat mean (``core.online.halving_sum_axis0``).
+    With K resident on a single device (all groups empty) even the psum
+    disappears and the whole sync fuses into one kernel launch.
+    """
+    from repro.common.packing import pack_stacked, unpack
+    from repro.core.hwa import window_push_packed
+    from repro.core.offline import WindowState, window_update_packed
+    from repro.core.online import broadcast_to_replicas, halving_sum_axis0
+
+    I = hwa_cfg.window
+    sbuf = pack_stacked(inner, lspec)            # (K_local, seg_len) f32
+    k_local = sbuf.shape[0]
+    collective = any(psum_axes)
+    fused = (use_kernel and not collective and ring.dtype == jnp.float32
+             and (not with_stride or hwa_cfg.window_stride == 1))
+    if fused:
+        # whole sync in ONE launch on the local slice: K-mean + window
+        # push, (K+2) reads + 3 writes, W̄ read back from the ring slot
+        from repro.kernels import ops as kops
+        idx = next_idx
+        full = (count >= I).astype(jnp.float32)
+        new_count = jnp.minimum(count + 1, I)
+        ring2, total2, avg = kops.hwa_sync_packed(
+            sbuf, ring, total, idx, full,
+            1.0 / new_count.astype(jnp.float32))
+        mean = jax.lax.dynamic_index_in_dim(ring2, idx, keepdims=False)
+        ws2 = WindowState(ring=ring2, total=total2, count=new_count,
+                          next_idx=jnp.mod(idx + 1, I), window=I,
+                          kind="ring", spec=lspec)
+        new_cycle = cycle + 1
+    else:
+        if use_kernel and k_local == 2:
+            # the kernel's row reduction is jnp.sum order — a single IEEE
+            # add for 2 rows, so it keeps the halving/composition bits;
+            # for k_local > 2 it would NOT (XLA's order is neither
+            # sequential nor pairwise, measured), so the canonical
+            # halving sum below takes over to preserve the 0-ULP
+            # flat↔tree parity contract (docs/ARCHITECTURE.md §4)
+            from repro.kernels import ops as kops
+            part = kops.online_mean_packed(sbuf, inv_k=1.0 / K)
+        else:
+            part = halving_sum_axis0(sbuf) * (1.0 / K)
+        # THE weight all-reduce(s): pre-scaled partial sums keep the
+        # result bit-identical to the fused kernel's sum×(1/K) for
+        # power-of-two K, flat psum and grouped composition alike
+        mean = _psum_composition(part, psum_axes)
+        ws = WindowState(ring=ring, total=total, count=count,
+                         next_idx=next_idx, window=I, kind="ring",
+                         spec=lspec)
+        if with_stride:
+            ws2, avg, new_cycle = window_push_packed(
+                hwa_cfg, mean, ws, cycle, use_kernel=use_kernel)
+        else:
+            ws2, avg = window_update_packed(ws, mean, use_kernel=use_kernel)
+            new_cycle = cycle + 1
+    outer = unpack(mean, lspec)                  # local leaf views, free
+    wa = unpack(avg, lspec)
+    new_inner = broadcast_to_replicas(outer, k_local)
+    return (new_inner, ws2.ring, ws2.total, ws2.count, ws2.next_idx, wa,
+            new_cycle)
+
+
+def _local_inner_sync(lspec, pod_size: int,
+                      psum_axes: tuple[tuple[str, ...], ...], inner):
+    """Per-device body of the two-level tree's INNER (pod-local) sync.
+
+    Same fully-manual setting as :func:`_local_packed_sync`, but the
+    reduction stops at the pod boundary: one psum whose
+    ``replica_groups`` pair only same-pod devices, so the lowered HLO
+    crosses NOTHING but the inner axis (audited per level by
+    ``launch.hlo.sync_collective_audit``). No window state is touched —
+    the slide window collects GLOBAL outer weights only, so pod-internal
+    restarts leave ring/total/counters alone. Touches no Pallas kernel
+    either: the body is one add tree + one psum + layout views, which
+    XLA fuses fine without a custom call.
+    """
+    from repro.common.packing import pack_stacked, unpack
+    from repro.core.online import broadcast_to_replicas, halving_sum_axis0
+
+    sbuf = pack_stacked(inner, lspec)            # (K_local, seg_len) f32
+    k_local = sbuf.shape[0]
+    part = halving_sum_axis0(sbuf) * (1.0 / pod_size)
+    pod_mean = _psum_composition(part, psum_axes)
+    outer = unpack(pod_mean, lspec)
+    return broadcast_to_replicas(outer, k_local)

@@ -1,0 +1,155 @@
+"""Sync topologies: WHICH mesh axes the replica mean crosses, and WHEN.
+
+The paper's namesake hierarchy (and SWAP's / Ajroldi et al.'s when-where
+analysis) is about *where* the once-per-H-steps weight average reduces:
+
+- :class:`Flat` — every sync is one global all-reduce over the whole
+  replica axis set (one psum; the PR-1..3 behavior).
+- :class:`TwoLevel` — replicas are carved into pods (the ``outer_axis``)
+  of ``inner_axis``-many members each. Every H steps each pod pmeans over
+  its OWN members only (explicit per-pod ``replica_groups``, no cross-pod
+  traffic); only every H·``outer_every`` steps does the outer cross-pod
+  all-reduce + slide-window push run. Cross-pod bytes per step drop by
+  another ``outer_every``× on top of the paper's H× (measured:
+  ``make bench-sync`` → BENCH_kernels.json ``sync/tree``).
+
+A topology is pure structure: it owns no tensors and never touches
+devices. The sync bundles (``launch.sync.bundles``) consume it through
+the small API below; ``sync_collective_audit`` (``launch.hlo``) checks
+the lowered HLO against the same structure per level.
+
+**Bit-parity contract.** The two-level OUTER mean is the composition
+``psum(psum(w·1/K, inner), outer)`` over CONTIGUOUS pods. With
+power-of-two pod/member counts this performs exactly the additions of
+the canonical contiguous-pairing halving tree
+(``core.online.halving_sum_axis0``), so it is bit-identical — 0 ULP —
+to the flat path's local-sum + psum and to the host reference
+``core.online.online_average_grouped`` (asserted in
+tests/mesh_hwa_check.py and, property-based, in
+tests/test_sync_topology.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+def _norm_axes(axis) -> tuple[str, ...]:
+    """An axis argument (None | str | sequence of str) as a tuple."""
+    if axis is None:
+        return ()
+    return (axis,) if isinstance(axis, str) else tuple(axis)
+
+
+@dataclasses.dataclass(frozen=True)
+class Flat:
+    """Single-level sync: one global all-reduce over ``axis`` per sync.
+
+    ``axis`` may name several mesh axes jointly (e.g. ``("pod",
+    "replica")`` to run FLAT sync on a pod-carved mesh — the baseline
+    ``benchmarks/sync_tree.py`` compares the tree against).
+    """
+    axis: str | tuple[str, ...] = "replica"
+
+    @property
+    def replica_axes(self) -> tuple[str, ...]:
+        """Mesh axes the stacked K dim is sharded over."""
+        return _norm_axes(self.axis)
+
+    @property
+    def levels(self) -> int:
+        return 1
+
+    def n_replicas(self, mesh) -> int:
+        return math.prod(mesh.shape[a] for a in self.replica_axes)
+
+    def psum_groups(self) -> tuple[tuple[str, ...], ...]:
+        """Axis groups the sync psums over, in order (here: one joint)."""
+        return (self.replica_axes,)
+
+    def is_outer(self, sync_idx) -> bool:
+        """Every flat sync is global (window push + full all-reduce)."""
+        return True
+
+    def validate(self, mesh, n_replicas: int) -> None:
+        missing = [a for a in self.replica_axes if a not in mesh.shape]
+        if missing:
+            raise ValueError(f"Flat sync axes {missing} not in mesh "
+                             f"{dict(mesh.shape)}")
+        if n_replicas != self.n_replicas(mesh):
+            raise ValueError(
+                f"mesh-native flat sync needs K == replica-axis size "
+                f"({n_replicas} != {self.n_replicas(mesh)} over "
+                f"{self.replica_axes})")
+
+
+@dataclasses.dataclass(frozen=True)
+class TwoLevel:
+    """Two-level (pod-inner / pod-outer) sync tree for K > 8.
+
+    ``inner_axis`` shards a pod's members, ``outer_axis`` the pods; the
+    stacked K dim is sharded over ``(outer_axis, inner_axis)`` jointly so
+    pods are CONTIGUOUS replica blocks (load-bearing for the 0-ULP
+    composition — see module docstring). ``outer_every`` is H₂: sync
+    index s (0-based) runs the outer level iff ``(s + 1) % outer_every
+    == 0``; all other syncs are pod-internal restarts with zero cross-pod
+    traffic.
+    """
+    inner_axis: str = "replica"
+    outer_axis: str = "pod"
+    outer_every: int = 1
+
+    @property
+    def replica_axes(self) -> tuple[str, ...]:
+        # outer first: pod-major sharding keeps pods contiguous in K.
+        return (self.outer_axis, self.inner_axis)
+
+    @property
+    def levels(self) -> int:
+        return 2
+
+    def n_replicas(self, mesh) -> int:
+        return math.prod(mesh.shape[a] for a in self.replica_axes)
+
+    def pods(self, mesh) -> int:
+        return mesh.shape[self.outer_axis]
+
+    def pod_size(self, mesh) -> int:
+        """Replicas per pod (inner-axis extent)."""
+        return mesh.shape[self.inner_axis]
+
+    def psum_groups(self) -> tuple[tuple[str, ...], ...]:
+        """The grouped psum composition: inner (per-pod) first, then the
+        outer cross-pod all-reduce."""
+        return ((self.inner_axis,), (self.outer_axis,))
+
+    def inner_groups(self) -> tuple[tuple[str, ...], ...]:
+        """The inner-only sync's reduction: one per-pod psum."""
+        return ((self.inner_axis,),)
+
+    def is_outer(self, sync_idx) -> bool:
+        """True iff 0-based sync ``sync_idx`` runs the outer level (the
+        H₂-th, 2·H₂-th, ... syncs). Works on ints and traced int32."""
+        if self.outer_every <= 1:
+            return True
+        return (sync_idx + 1) % self.outer_every == 0
+
+    def validate(self, mesh, n_replicas: int) -> None:
+        if self.inner_axis == self.outer_axis:
+            raise ValueError("TwoLevel inner and outer axes must differ, "
+                             f"both are {self.inner_axis!r}")
+        missing = [a for a in self.replica_axes if a not in mesh.shape]
+        if missing:
+            raise ValueError(f"TwoLevel sync axes {missing} not in mesh "
+                             f"{dict(mesh.shape)}")
+        if self.outer_every < 1:
+            raise ValueError(f"outer_every must be >= 1, got "
+                             f"{self.outer_every}")
+        if n_replicas != self.n_replicas(mesh):
+            raise ValueError(
+                f"two-level sync needs K == pods × pod_size "
+                f"({n_replicas} != {self.pods(mesh)} × "
+                f"{self.pod_size(mesh)})")
+
+
+SyncTopology = Flat | TwoLevel

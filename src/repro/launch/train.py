@@ -14,6 +14,10 @@ devices first):
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
       python -m repro.launch.train --mesh-native --steps 16 --sync-period 4
+
+Add ``--sync-tree two-level --k 4 --outer-every 2`` for the hierarchical
+sync tree: K replicas carved into pods, pod-internal averaging every H
+steps, the cross-pod all-reduce + window push only every H·H₂ steps.
 """
 from __future__ import annotations
 
@@ -30,18 +34,24 @@ from repro.train.trainer import TrainConfig, Trainer, lm_task
 
 def run_mesh_native(args) -> dict:
     """Train with the shard_map HWA steps on a (replica=K, data, model=1)
-    mesh built from whatever devices are available.
+    mesh built from whatever devices are available — or, with
+    ``--sync-tree two-level``, on a pod-carved (pod, replica, data,
+    model=1) mesh where only every ``--outer-every``-th sync crosses
+    pods (the rest are pod-internal restarts with zero cross-pod bytes).
 
-    Inter-replica traffic happens only inside the sync step — the paper's
-    H-fold communication amortization, executed for real (one process,
-    SPMD across the local devices).
+    Inter-replica traffic happens only inside the sync steps — the
+    paper's H-fold communication amortization (×H₂ more for cross-pod
+    links under the tree), executed for real (one process, SPMD across
+    the local devices).
     """
     import jax
     import jax.numpy as jnp
 
     from repro.common.compat import make_mesh, use_mesh
     from repro.launch.specs import input_specs
-    from repro.launch.steps import (make_mesh_hwa_sync_step,
+    from repro.launch.steps import (TwoLevel,
+                                    make_mesh_hwa_inner_sync_step,
+                                    make_mesh_hwa_sync_step,
                                     make_mesh_hwa_train_step)
     from repro.models.types import InputShape
     from repro.sharding.rules import make_tp_rules
@@ -53,20 +63,37 @@ def run_mesh_native(args) -> dict:
             f"--mesh-native needs a device count divisible by K={K} "
             f"(have {n_dev}; set XLA_FLAGS="
             "--xla_force_host_platform_device_count=<n>)")
-    mesh = make_mesh((K, n_dev // K, 1), ("replica", "data", "model"))
-    rules = make_tp_rules(mesh, replica_axis="replica")
+    tree = args.sync_tree == "two-level"
+    if tree:
+        pods = args.pods or 2
+        if K % pods or K // pods < 1:
+            raise SystemExit(f"--sync-tree two-level needs K divisible by "
+                             f"--pods (K={K}, pods={pods})")
+        mesh = make_mesh((pods, K // pods, n_dev // K, 1),
+                         ("pod", "replica", "data", "model"))
+        replica_axis = ("pod", "replica")
+        topo = TwoLevel("replica", "pod", outer_every=args.outer_every)
+    else:
+        mesh = make_mesh((K, n_dev // K, 1), ("replica", "data", "model"))
+        replica_axis = "replica"
+        topo = None
+    rules = make_tp_rules(mesh, replica_axis=replica_axis)
     cfg = get_smoke_config(args.arch)
     if cfg.family in ("vlm", "audio"):
         raise SystemExit(f"{args.arch}: mesh-native driver supports LM "
                          "families only")
     lm = build_model(cfg)
-    hwa_cfg = HWAConfig(n_replicas=K, window=args.window)
+    hwa_cfg = HWAConfig(n_replicas=K, window=args.window,
+                        outer_every=args.outer_every if tree else 1)
     shape = InputShape("mesh_native", seq_len=args.seq_len,
                        global_batch=args.batch_size, kind="train")
     specs, dims = input_specs(cfg, shape)
     train = make_mesh_hwa_train_step(lm, rules, specs, dims, hwa_cfg,
-                                     optimizer="sgd", lr=args.lr)
-    sync = make_mesh_hwa_sync_step(lm, rules, hwa_cfg)
+                                     optimizer="sgd", lr=args.lr,
+                                     replica_axis=replica_axis)
+    sync = make_mesh_hwa_sync_step(lm, rules, hwa_cfg, topology=topo)
+    inner_sync = (make_mesh_hwa_inner_sync_step(lm, rules, hwa_cfg, topo)
+                  if tree else None)
     H = args.sync_period or 8
 
     params = lm.init(jax.random.key(args.seed))
@@ -82,9 +109,11 @@ def run_mesh_native(args) -> dict:
 
     train_c = train.lower(mesh).compile()
     sync_c = sync.lower(mesh).compile()
+    inner_sync_c = inner_sync.lower(mesh).compile() if inner_sync else None
     wa = params
     loss = float("nan")
     history = []
+    sync_idx = 0
     with use_mesh(mesh):
         for step in range(args.steps):
             ks = jax.random.split(jax.random.key(1000 + step), 2)
@@ -99,16 +128,28 @@ def run_mesh_native(args) -> dict:
             inner, inner_opt, losses = train_c(inner, inner_opt, batch)
             loss = float(jnp.mean(losses))
             if (step + 1) % H == 0:
-                inner, ring, total, count, nidx, wa, cycle = sync_c(
-                    inner, ring, total, count, nidx, cycle)
-                history.append({"step": step + 1, "loss": loss,
-                                "cycle": int(cycle)})
-                print(f"[mesh-native] step {step + 1} loss {loss:.4f} "
-                      f"cycle {int(cycle)} (K={K}, mesh={dict(mesh.shape)})")
-    out = {"final_loss": loss, "cycles": int(cycle), "history": history,
+                if inner_sync_c is not None and not topo.is_outer(sync_idx):
+                    # pod-internal restart: zero cross-pod traffic, no
+                    # window push (the window collects global W̄ only)
+                    inner = inner_sync_c(inner)
+                    history.append({"step": step + 1, "loss": loss,
+                                    "sync": "inner"})
+                    print(f"[mesh-native] step {step + 1} loss {loss:.4f} "
+                          f"inner sync (pods avg internally)")
+                else:
+                    inner, ring, total, count, nidx, wa, cycle = sync_c(
+                        inner, ring, total, count, nidx, cycle)
+                    history.append({"step": step + 1, "loss": loss,
+                                    "sync": "outer", "cycle": int(cycle)})
+                    print(f"[mesh-native] step {step + 1} loss {loss:.4f} "
+                          f"cycle {int(cycle)} (K={K}, "
+                          f"mesh={dict(mesh.shape)})")
+                sync_idx += 1
+    out = {"final_loss": loss, "cycles": int(cycle), "syncs": sync_idx,
+           "history": history, "sync_tree": args.sync_tree,
            "mesh": {k: int(v) for k, v in mesh.shape.items()}}
-    print(f"[mesh-native] done: {out['cycles']} sync cycles, "
-          f"final loss {out['final_loss']:.4f}")
+    print(f"[mesh-native] done: {out['cycles']} outer cycles / "
+          f"{sync_idx} syncs, final loss {out['final_loss']:.4f}")
     return out
 
 
@@ -130,6 +171,19 @@ def main():
     ap.add_argument("--mesh-native", action="store_true",
                     help="run the shard_map SPMD HWA path on the local "
                          "devices (replica axis = K)")
+    ap.add_argument("--sync-tree", default="flat",
+                    choices=["flat", "two-level"],
+                    help="sync topology (mesh-native only): flat = one "
+                         "global all-reduce per sync; two-level = pods "
+                         "average internally every sync, cross-pod "
+                         "all-reduce + window push every --outer-every "
+                         "syncs")
+    ap.add_argument("--outer-every", type=int, default=2,
+                    help="H₂: outer (cross-pod) sync period of the "
+                         "two-level tree, in syncs")
+    ap.add_argument("--pods", type=int, default=0,
+                    help="pod count for --sync-tree two-level "
+                         "(0 = auto: 2)")
     args = ap.parse_args()
 
     if args.mesh_native:

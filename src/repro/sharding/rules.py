@@ -99,7 +99,7 @@ def replicated_specs(tree: Any) -> Any:
 
 
 def make_tp_rules(mesh: Mesh, *, expert_parallel: bool = False,
-                  replica_axis: str | None = None,
+                  replica_axis: str | tuple[str, ...] | None = None,
                   fsdp: bool = False,
                   sequence_parallel: bool = False) -> ShardingRules:
     """Default data+tensor-parallel rule table.
@@ -119,10 +119,16 @@ def make_tp_rules(mesh: Mesh, *, expert_parallel: bool = False,
     - experts over "model" only when expert_parallel (otherwise experts
       stay replicated/looped and their d_ff dim is sharded);
     - "replica" marks the stacked-K axis of HWA state (maps to the pod
-      axis on the multi-pod mesh).
+      axis on the multi-pod mesh). It may name SEVERAL mesh axes jointly
+      — the two-level sync tree's pod-carved ``("pod", "replica")`` pair
+      (launch/sync/topology.py), pod-major so pods are contiguous
+      replica blocks; those axes are then withheld from data
+      parallelism.
     """
+    replica_axes = ((replica_axis,) if isinstance(replica_axis, str)
+                    else tuple(replica_axis or ()))
     data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape
-                      and a != replica_axis)
+                      and a not in replica_axes)
     rules: LogicalRules = {
         "batch": data_axes,
         "vocab": ("model",),
@@ -139,6 +145,6 @@ def make_tp_rules(mesh: Mesh, *, expert_parallel: bool = False,
     }
     if expert_parallel:
         rules["experts"] = ("model",)
-    if replica_axis is not None:
-        rules["replica"] = (replica_axis,)
+    if replica_axes:
+        rules["replica"] = replica_axes
     return ShardingRules(mesh=mesh, rules=rules)

@@ -16,7 +16,15 @@ Verifies the tentpole properties of mesh-native HWA on a (2,2,2)
      AND to the per-leaf reference, compiles to exactly ONE Pallas launch
      per sync, and its HLO contains exactly one replica-axis all-reduce
      and ZERO collectives crossing any other axis (collective-free
-     packed-W̄ assembly).
+     packed-W̄ assembly);
+  5. the TWO-LEVEL sync tree (pod-carved (pod=2, replica=2, model=2)
+     mesh, K=4) is bit-identical — 0 ULP — to the flat path and to the
+     per-leaf grouped reference; its lowered HLO passes the per-level
+     sync_collective_audit (inner sync: one per-pod all-reduce, zero
+     cross-pod; outer sync: exactly one cross-pod all-reduce on top);
+     the tuple-axis train step is collective-free over pod AND replica;
+     and the legacy GSPMD fallback is a hard error on this CPU mesh
+     unless REPRO_ALLOW_LEGACY_ASSEMBLY=1.
 
 All oracles are computed on HOST-materialized copies: eagerly packing
 DISTRIBUTED leaves (a concat across differently-sharded operands) is
@@ -237,15 +245,34 @@ for label, compiled in [("sync", sync_c), ("kernel sync", sync_kc)]:
     check(f"{label} step: packed-W̄ assembly is collective-free "
           f"(non-replica crossings: {n_other})", audit["assembly_free"])
 
-# the legacy (non-mesh-resident) fallback still compiles; structurally it
-# pays the assembly redistribution — the cost the aligned layout removes
-sync_legacy = make_mesh_hwa_sync_step(lm, rules, hwa_cfg,
-                                      mesh_resident=False)
-legacy_audit = sync_collective_audit(
-    sync_legacy.lower(mesh).compile().as_text(), mesh)
-n_legacy = sum(len(h) for h in legacy_audit["other"].values())
-check(f"legacy fallback: compiles, assembly pays non-replica collectives "
-      f"(found {n_legacy})", n_legacy >= 1)
+# the legacy (non-mesh-resident) fallback is a HARD ERROR on multi-device
+# CPU meshes (XLA 0.4.37 miscompiles its packed-W̄ assembly — see
+# launch/sync/legacy.py); REPRO_ALLOW_LEGACY_ASSEMBLY=1 is the escape
+# hatch for HLO-introspection-only callers, under which it still compiles
+# and structurally pays the assembly redistribution the aligned layout
+# removes
+_prior_hatch = os.environ.pop("REPRO_ALLOW_LEGACY_ASSEMBLY", None)
+try:
+    legacy_raised = False
+    try:
+        make_mesh_hwa_sync_step(lm, rules, hwa_cfg, mesh_resident=False)
+    except RuntimeError:
+        legacy_raised = True
+    check("legacy fallback: hard error on the multi-device CPU mesh",
+          legacy_raised)
+    os.environ["REPRO_ALLOW_LEGACY_ASSEMBLY"] = "1"
+    sync_legacy = make_mesh_hwa_sync_step(lm, rules, hwa_cfg,
+                                          mesh_resident=False)
+    legacy_audit = sync_collective_audit(
+        sync_legacy.lower(mesh).compile().as_text(), mesh)
+    n_legacy = sum(len(h) for h in legacy_audit["other"].values())
+    check(f"legacy fallback (escape hatch): compiles, assembly pays "
+          f"non-replica collectives (found {n_legacy})", n_legacy >= 1)
+finally:
+    if _prior_hatch is None:
+        os.environ.pop("REPRO_ALLOW_LEGACY_ASSEMBLY", None)
+    else:
+        os.environ["REPRO_ALLOW_LEGACY_ASSEMBLY"] = _prior_hatch
 
 # vmap-path train step, for contrast, is *allowed* replica traffic (GSPMD
 # may or may not insert it) — we only report it, the guarantee is the
@@ -254,6 +281,159 @@ cross_vmap = collectives_crossing_axis(vmap_train_c.as_text(), mesh,
                                        "replica")
 print(f"INFO vmap-path train step replica-crossing collectives: "
       f"{len(cross_vmap)}")
+
+# ---- two-level sync tree: flat ↔ tree ↔ per-leaf bit-parity ---------------
+# K = 4 replicas as 2 pods × 2 members on the pod-carved (2,2,2) mesh.
+# The tree's outer sync computes the mean as the grouped psum composition
+# (per-pod psum of 1/K-pre-scaled partials, then the cross-pod psum over
+# CONTIGUOUS pods); with power-of-two counts every collective is a
+# 2-member all-reduce (one commutative IEEE add) and every local sum uses
+# the canonical halving order, so the composition is bit-identical —
+# 0 ULP — to (a) the FLAT path (make_hwa_sync_step with two replicas
+# resident per device on the plain mesh: local sum + one 2-member psum)
+# and (b) the per-leaf host reference online_average_grouped
+# (docs/ARCHITECTURE.md §4).
+from repro.core.online import online_average_grouped, pod_mean_grouped
+from repro.launch.mesh import make_tree_test_mesh
+from repro.launch.steps import (TwoLevel, make_hwa_sync_step,
+                                make_mesh_hwa_inner_sync_step)
+
+K4 = 4
+mesh_t = make_tree_test_mesh()          # (pod=2, replica=2, model=2)
+rules_t = make_tp_rules(mesh_t, replica_axis=("pod", "replica"))
+hwa4 = HWAConfig(n_replicas=K4, window=3, use_kernels=True, outer_every=2)
+topo = TwoLevel("replica", "pod", outer_every=2)
+
+# tuple-axis train step: collective-free over BOTH replica-population axes
+tree_train = make_mesh_hwa_train_step(lm, rules_t, specs, dims, hwa4,
+                                      optimizer="sgd", lr=LR,
+                                      replica_axis=("pod", "replica"))
+tree_train_c = tree_train.lower(mesh_t).compile()
+
+
+def batches4(step):
+    ks = jax.random.split(jax.random.key(300 + step), 2)
+    return {"tokens": jax.random.randint(ks[0], (K4, B, S), 0,
+                                         cfg.vocab_size),
+            "targets": jax.random.randint(ks[1], (K4, B, S), 0,
+                                          cfg.vocab_size)}
+
+
+stack4 = lambda t: jax.tree.map(lambda x: jnp.stack([x] * K4), t)
+t_inner0, t_opt0 = stack4(params), jax.vmap(opt.init)(stack4(params))
+with use_mesh(mesh_t):
+    t_inner0, t_opt0, t_losses = tree_train_c(t_inner0, t_opt0, batches4(0))
+check("tree train step: finite per-replica losses",
+      bool(jnp.all(jnp.isfinite(t_losses))))
+tree_train_hlo = tree_train_c.as_text()
+for ax in ("pod", "replica"):
+    hits = collectives_crossing_axis(tree_train_hlo, mesh_t, ax)
+    check(f"tree train step: zero {ax}-crossing collectives "
+          f"(found {len(hits)})", len(hits) == 0)
+
+# diverged 4-replica state (host-materialized; oracles below need it)
+div4 = jax.tree.map(
+    lambda x: x[None] + 0.1 * jax.random.normal(jax.random.key(11),
+                                                (K4,) + x.shape), params)
+div4_host = to_host(div4)
+zero = jnp.zeros((), jnp.int32)
+
+
+def run_sync(bundle, run_mesh, state, with_cycle):
+    spec_ = bundle.pack_spec
+    ring_ = jnp.zeros((hwa4.window, spec_.padded), jnp.float32)
+    total_ = jnp.zeros((spec_.padded,), jnp.float32)
+    c = bundle.lower(run_mesh).compile()
+    extra = (zero,) if with_cycle else ()
+    with use_mesh(run_mesh):
+        return c(state, ring_, total_, zero, zero, *extra), c
+
+
+# leg T: two-level OUTER sync (inner psum + cross-pod psum + window push)
+outer_b = make_mesh_hwa_sync_step(lm, rules_t, hwa4, topology=topo)
+(t_out, outer_c) = run_sync(outer_b, mesh_t,
+                            jax.tree.map(jnp.array, div4_host), True)
+t_inner, _, _, t_count, _, t_wa, t_cycle = t_out
+# leg F: FLAT path, K=4 with two replicas resident per device on the
+# plain (replica=2, data=2, model=2) mesh (flat cfg: the flat builder
+# refuses a silently-ignored outer_every; the sync math is identical)
+import dataclasses
+flat_b = make_hwa_sync_step(lm, rules,
+                            dataclasses.replace(hwa4, outer_every=1))
+(f_out, _) = run_sync(flat_b, mesh,
+                      jax.tree.map(jnp.array, div4_host), False)
+f_inner, _, _, _, _, f_wa = f_out
+# leg R: per-leaf host reference (canonical grouped mean; the first
+# window push leaves W̿ == W̄ exactly, so it doubles as the W̿ oracle)
+r_mean = online_average_grouped(div4_host, topo.pods(mesh_t))
+
+check("two-level: all replicas restart equal",
+      all(tree_equal(jax.tree.map(lambda x: x[0], t_inner),
+                     jax.tree.map(lambda x, i=i: x[i], t_inner))
+          for i in range(1, K4)))
+check("two-level restart bit-equal to FLAT restart",
+      tree_equal(jax.tree.map(lambda x: x[0], t_inner),
+                 jax.tree.map(lambda x: x[0], f_inner)))
+check("two-level W̿ bit-equal to FLAT W̿", tree_equal(t_wa, f_wa))
+check("two-level restart bit-equal to per-leaf grouped reference",
+      tree_equal(jax.tree.map(lambda x: x[0], t_inner), r_mean))
+check("two-level W̿ bit-equal to per-leaf grouped reference",
+      tree_equal(t_wa, r_mean))
+check("two-level: window advanced on the outer sync",
+      int(t_count) == 1 and int(t_cycle) == 1)
+
+# the extended audit, per level: the outer sync is one inner-only + one
+# outer-only all-reduce (no mixed groups, assembly-free) ...
+audit_outer = sync_collective_audit(outer_c.as_text(), mesh_t,
+                                    replica_axis="replica",
+                                    outer_axis="pod")
+check("two-level outer sync: audit outer_sync_ok "
+      f"(inner={len(audit_outer['replica'])}, "
+      f"outer={len(audit_outer['outer'])}, "
+      f"mixed={len(audit_outer['mixed'])})", audit_outer["outer_sync_ok"])
+
+# ... and the INNER sync crosses ONLY the inner (per-pod) groups
+inner_b = make_mesh_hwa_inner_sync_step(lm, rules_t, hwa4, topo)
+inner_c = inner_b.lower(mesh_t).compile()
+with use_mesh(mesh_t):
+    i_inner = inner_c(jax.tree.map(jnp.array, div4_host))
+audit_inner = sync_collective_audit(inner_c.as_text(), mesh_t,
+                                    replica_axis="replica",
+                                    outer_axis="pod")
+check("two-level inner sync: audit inner_sync_ok (zero cross-pod "
+      f"collectives, found {len(audit_inner['outer'])})",
+      audit_inner["inner_sync_ok"])
+pm = pod_mean_grouped(div4_host, topo.pods(mesh_t))
+pm_expanded = jax.tree.map(
+    lambda m: jnp.concatenate([m[0:1], m[0:1], m[1:2], m[1:2]]), pm)
+check("inner sync: restart bit-equal to per-pod means",
+      tree_equal(i_inner, pm_expanded))
+check("inner sync: pods stay diverged (no cross-pod averaging)",
+      not tree_equal(jax.tree.map(lambda x: x[0], i_inner),
+                     jax.tree.map(lambda x: x[2], i_inner)))
+
+# k_local > 2 regression: with 4 replicas RESIDENT per device the kernel
+# partial mean must yield to the canonical halving sum (the kernel's row
+# reduction order is an XLA detail beyond 2 rows — packed.py gates it),
+# keeping the flat kernel path bit-equal to the canonical/grouped means
+from repro.core.online import online_average_canonical
+
+K8 = 8
+div8_host = to_host(jax.tree.map(
+    lambda x: x[None] + 0.1 * jax.random.normal(jax.random.key(13),
+                                                (K8,) + x.shape), params))
+hwa8 = HWAConfig(n_replicas=K8, window=3, use_kernels=True)
+flat8 = make_hwa_sync_step(lm, rules, hwa8)     # replica=2 -> k_local=4
+spec8 = flat8.pack_spec
+flat8_c = flat8.lower(mesh).compile()
+with use_mesh(mesh):
+    out8 = flat8_c(jax.tree.map(jnp.array, div8_host),
+                   jnp.zeros((hwa8.window, spec8.padded), jnp.float32),
+                   jnp.zeros((spec8.padded,), jnp.float32), zero, zero)
+check("flat kernel sync, k_local=4: restart bit-equal to canonical "
+      "halving mean",
+      tree_equal(jax.tree.map(lambda x: x[0], out8[0]),
+                 online_average_canonical(div8_host)))
 
 print("ALL_OK" if ok else "SOME_FAILED")
 raise SystemExit(0 if ok else 1)

@@ -1,0 +1,263 @@
+"""Sync-topology subsystem unit tests (no forced devices needed).
+
+Covers the pieces of ``launch/sync/`` that are pure structure or pure
+math: topology validation/scheduling, the 0-ULP grouped-mean property
+(hypothesis, every factorization of a power-of-two K), the extended
+``sync_collective_audit`` per-level verdicts — including rejection of a
+deliberately-miswired grouping — and the legacy-assembly hard error +
+escape hatch. The mesh-executed counterparts run in the subprocess suite
+(tests/mesh_hwa_check.py).
+"""
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.online import (halving_sum_axis0, online_average,
+                               online_average_canonical,
+                               online_average_grouped, pod_mean_grouped)
+from repro.launch.hlo import sync_collective_audit
+from repro.launch.sync.legacy import ALLOW_ENV, check_legacy_assembly
+from repro.launch.sync.topology import Flat, TwoLevel
+
+
+# --------------------------------------------------------------- topology
+
+
+def _fake_mesh(shape: dict):
+    dims = tuple(shape.values())
+    return types.SimpleNamespace(shape=shape, axis_names=tuple(shape),
+                                 devices=np.empty(dims),
+                                 size=int(np.prod(dims)))
+
+
+def test_flat_topology_axes_and_validation():
+    mesh = _fake_mesh({"replica": 2, "data": 2, "model": 2})
+    flat = Flat("replica")
+    assert flat.replica_axes == ("replica",)
+    assert flat.n_replicas(mesh) == 2
+    assert flat.psum_groups() == (("replica",),)
+    assert flat.is_outer(0) and flat.is_outer(7)
+    flat.validate(mesh, 2)
+    with pytest.raises(ValueError, match="K == replica-axis size"):
+        flat.validate(mesh, 4)
+    with pytest.raises(ValueError, match="not in mesh"):
+        Flat("pod").validate(mesh, 2)
+    joint = Flat(("replica", "data"))
+    assert joint.n_replicas(mesh) == 4
+    joint.validate(mesh, 4)
+
+
+def test_two_level_topology_structure():
+    mesh = _fake_mesh({"pod": 2, "replica": 4, "model": 2})
+    topo = TwoLevel("replica", "pod", outer_every=3)
+    assert topo.replica_axes == ("pod", "replica")   # pod-major
+    assert topo.n_replicas(mesh) == 8
+    assert topo.pods(mesh) == 2 and topo.pod_size(mesh) == 4
+    assert topo.psum_groups() == (("replica",), ("pod",))
+    assert topo.inner_groups() == (("replica",),)
+    topo.validate(mesh, 8)
+    with pytest.raises(ValueError, match="pods × pod_size"):
+        topo.validate(mesh, 4)
+    with pytest.raises(ValueError, match="must differ"):
+        TwoLevel("replica", "replica").validate(mesh, 8)
+    with pytest.raises(ValueError, match="outer_every"):
+        TwoLevel("replica", "pod", outer_every=0).validate(mesh, 8)
+
+
+def test_two_level_outer_schedule():
+    topo = TwoLevel("replica", "pod", outer_every=3)
+    # the H₂-th, 2·H₂-th, ... syncs are outer (0-based index)
+    assert [topo.is_outer(i) for i in range(7)] == \
+        [False, False, True, False, False, True, False]
+    assert all(TwoLevel("replica", "pod", outer_every=1).is_outer(i)
+               for i in range(4))
+    # traced index works too (the driver may carry it as an int32)
+    assert bool(topo.is_outer(jnp.asarray(2, jnp.int32)))
+    assert not bool(topo.is_outer(jnp.asarray(3, jnp.int32)))
+
+
+# ------------------------------------------------- grouped means (0 ULP)
+
+
+def _tree(seed, k):
+    ks = jax.random.split(jax.random.key(seed), 2)
+    return {"w": jax.random.normal(ks[0], (k, 3, 5)),
+            "b": jax.random.normal(ks[1], (k, 7))}
+
+
+def test_halving_sum_matches_sum():
+    for n in (1, 2, 3, 5, 8):
+        x = jax.random.normal(jax.random.key(n), (n, 4))
+        np.testing.assert_allclose(np.asarray(halving_sum_axis0(x)),
+                                   np.asarray(x).sum(0), rtol=1e-6,
+                                   atol=1e-6)
+
+
+def test_grouped_mean_rejects_bad_factorization():
+    t = _tree(0, 6)
+    with pytest.raises(ValueError, match="do not divide"):
+        online_average_grouped(t, 4)
+    with pytest.raises(ValueError, match="do not divide"):
+        pod_mean_grouped(t, 5)
+
+
+def test_pod_mean_grouped_shape_and_values():
+    t = _tree(3, 4)
+    pm = pod_mean_grouped(t, 2)
+    assert pm["w"].shape == (2, 3, 5)
+    np.testing.assert_allclose(np.asarray(pm["w"][0]),
+                               np.asarray(t["w"][:2]).mean(0), rtol=1e-6)
+
+
+def _assert_grouped_matches_flat(k, seed, pods_list=None):
+    t = _tree(seed, k)
+    flat = online_average_canonical(t)
+    pods_list = pods_list or [d for d in range(1, k + 1) if k % d == 0]
+    for pods in pods_list:
+        grouped = online_average_grouped(t, pods)
+        for a, b in zip(jax.tree.leaves(grouped), jax.tree.leaves(flat)):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), \
+                f"K={k} pods={pods}: grouped mean differs from flat"
+
+
+@pytest.mark.parametrize("k", [2, 4, 8, 16])
+@pytest.mark.parametrize("seed", [0, 7, 123])
+def test_two_level_grouped_mean_is_flat_mean_0ulp(k, seed):
+    """TwoLevel grouped averaging matches the flat K-replica mean
+    BIT-EXACTLY for every valid (pods × per-pod) factorization of K. For
+    power-of-two K every divisor qualifies (each factorization has
+    power-of-two group sizes, so the grouped halving sums compose into
+    exactly the flat halving tree). Deterministic leg of the property;
+    the hypothesis leg below widens the seed space when available."""
+    _assert_grouped_matches_flat(k, seed)
+
+
+@pytest.mark.parametrize("pods,per", [(3, 4), (5, 2), (6, 8)])
+def test_grouped_mean_0ulp_for_pow2_pods_of_any_count(pods, per):
+    """The composition property needs only the GROUP SIZE to be a power
+    of two — the pod count may be odd (the halving tree peels the odd
+    trailing partial identically on both sides)."""
+    _assert_grouped_matches_flat(pods * per, seed=42, pods_list=[pods])
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                       # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @given(st.sampled_from([2, 4, 8, 16]), st.integers(0, 1000))
+    @settings(max_examples=25, deadline=None)
+    def test_two_level_grouped_mean_property(k, seed):
+        """Hypothesis-widened version of the 0-ULP property over random
+        replica populations, every factorization of K."""
+        _assert_grouped_matches_flat(k, seed)
+
+
+def test_canonical_mean_close_to_plain_mean():
+    t = _tree(9, 8)
+    a = online_average_canonical(t)
+    b = online_average(t)
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------- per-level audit on synthetic HLO
+#
+# A (2,2,2) (pod, replica, model) mesh: logical device index =
+# pod·4 + replica·2 + model. Inner (per-pod) groups pair devices
+# differing only in the replica coordinate; outer (cross-pod) groups
+# differ only in pod; a MISWIRED joint grouping spans both.
+
+_MESH = _fake_mesh({"pod": 2, "replica": 2, "model": 2})
+_INNER_AR = ('  %ar.0 = f32[1024]{0} all-reduce(f32[1024]{0} %p0), '
+             'replica_groups={{0,2},{1,3},{4,6},{5,7}}, to_apply=%add')
+_OUTER_AR = ('  %ar.1 = f32[1024]{0} all-reduce(f32[1024]{0} %ar.0), '
+             'replica_groups={{0,4},{1,5},{2,6},{3,7}}, to_apply=%add')
+_JOINT_AR = ('  %ar.2 = f32[1024]{0} all-reduce(f32[1024]{0} %p0), '
+             'replica_groups={{0,2,4,6},{1,3,5,7}}, to_apply=%add')
+_MODEL_AR = ('  %ar.3 = f32[1024]{0} all-reduce(f32[1024]{0} %p0), '
+             'replica_groups={{0,1},{2,3},{4,5},{6,7}}, to_apply=%add')
+
+
+def _audit(*lines):
+    return sync_collective_audit("\n".join(lines), _MESH,
+                                 replica_axis="replica", outer_axis="pod")
+
+
+def test_audit_accepts_inner_only_sync():
+    a = _audit(_INNER_AR)
+    assert a["inner_sync_ok"] and not a["outer_sync_ok"]
+    assert len(a["replica"]) == 1 and not a["outer"] and not a["mixed"]
+    assert a["assembly_free"]
+
+
+def test_audit_accepts_outer_sync_composition():
+    a = _audit(_INNER_AR, _OUTER_AR)
+    assert a["outer_sync_ok"] and not a["inner_sync_ok"]
+    assert len(a["outer"]) == 1 and not a["mixed"]
+
+
+def test_audit_rejects_miswired_joint_grouping():
+    """A joint all-reduce whose groups span pods AND pod members is not
+    a valid realization of either tree level."""
+    a = _audit(_JOINT_AR)
+    assert a["mixed"] and not a["inner_sync_ok"] and not a["outer_sync_ok"]
+    # ... nor does sneaking it in next to the proper composition help
+    b = _audit(_INNER_AR, _OUTER_AR, _JOINT_AR)
+    assert not b["inner_sync_ok"] and not b["outer_sync_ok"]
+
+
+def test_audit_flags_assembly_traffic():
+    a = _audit(_INNER_AR, _MODEL_AR)
+    assert not a["assembly_free"]
+    assert not a["inner_sync_ok"] and not a["outer_sync_ok"]
+
+
+def test_audit_flat_compat_keys():
+    """Pre-split callers use replica_allreduce_only/assembly_free with no
+    outer axis; the extended audit must keep those semantics."""
+    a = sync_collective_audit(_INNER_AR, _MESH, replica_axis="replica")
+    assert a["replica_allreduce_only"] and a["assembly_free"]
+    assert a["outer"] == [] and a["mixed"] == []
+
+
+def test_check_outer_every_refuses_disagreement():
+    """H₂ has one source of truth: a config that disagrees with the
+    topology (or would be silently ignored by a flat builder) raises."""
+    from repro.core.hwa import HWAConfig
+    from repro.launch.sync.bundles import _check_outer_every
+
+    topo = TwoLevel("replica", "pod", outer_every=2)
+    _check_outer_every(HWAConfig(outer_every=2), topo)
+    _check_outer_every(HWAConfig(), Flat())
+    with pytest.raises(ValueError, match="disagrees"):
+        _check_outer_every(HWAConfig(outer_every=3), topo)
+    with pytest.raises(ValueError, match="silently ignored"):
+        _check_outer_every(HWAConfig(outer_every=2), Flat())
+
+
+# ------------------------------------------- legacy-assembly hard error
+
+
+def test_legacy_assembly_hard_error_and_escape_hatch(monkeypatch):
+    mesh = _fake_mesh({"replica": 2, "data": 2, "model": 2})
+    monkeypatch.delenv(ALLOW_ENV, raising=False)
+    # this suite runs on the CPU backend — the dangerous configuration
+    with pytest.raises(RuntimeError, match="MISCOMPILED"):
+        check_legacy_assembly(mesh)
+    # escape hatch downgrades to the loud PR-3 warning
+    monkeypatch.setenv(ALLOW_ENV, "1")
+    with pytest.warns(RuntimeWarning, match="MISCOMPILED"):
+        check_legacy_assembly(mesh)
+    # single device: never dangerous
+    monkeypatch.delenv(ALLOW_ENV, raising=False)
+    check_legacy_assembly(_fake_mesh({"data": 1}))
+    # non-CPU backends lower the pattern correctly: no raise
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    check_legacy_assembly(mesh)
