@@ -3,13 +3,22 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test spmd mesh-hwa bench bench-kernels bench-sync train-smoke \
-	docs-check
+# extra pytest flags for the tier-1 lane, e.g. the CI PR lane's
+# PYTEST_ARGS='-m "not slow"' (nightly CI runs the full lane)
+PYTEST_ARGS ?=
+
+.PHONY: test test-fast spmd mesh-hwa mesh-hwa-fsdp bench bench-kernels \
+	bench-sync bench-check train-smoke docs-check
 
 # tier-1: docs sanity + the full CPU suite (SPMD checks run in their own
 # subprocesses)
 test: docs-check
-	$(PY) -m pytest -x -q
+	$(PY) -m pytest -x -q $(PYTEST_ARGS)
+
+# tier-1 minus the `slow` lane (hypothesis-heavy property tests) — what
+# the CI tier1 job runs on PRs to stay under ~10 minutes
+test-fast:
+	$(MAKE) test PYTEST_ARGS='-m "not slow"'
 
 # README quickstart targets in dry-run mode + intra-repo doc link check
 docs-check:
@@ -25,6 +34,14 @@ mesh-hwa:
 	$(PY) -m repro.launch.train --mesh-native --steps 8 --sync-period 4 \
 	    --batch-size 8 --seq-len 16 --k 2
 
+# same smoke with FSDP rules + a real model axis: mixed data×model
+# tilings sync through the GROUPED mesh-resident packed layout (this
+# used to hard-error into the legacy GSPMD assembly)
+mesh-hwa-fsdp:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+	$(PY) -m repro.launch.train --mesh-native --steps 8 --sync-period 4 \
+	    --batch-size 8 --seq-len 16 --k 2 --fsdp --tp 2
+
 # communication-amortization numbers from real lowered HLO
 bench:
 	$(PY) -m benchmarks.run --only mesh_comm
@@ -38,3 +55,9 @@ bench-kernels:
 # appends the sync/tree block to BENCH_kernels.json
 bench-sync:
 	$(PY) -m benchmarks.run --only sync_tree
+
+# regression-guard BENCH_kernels.json against the committed structural
+# thresholds (launch counts, collective counts, padding waste) — wall
+# times are machine-dependent and deliberately unchecked
+bench-check:
+	$(PY) tools/bench_check.py

@@ -23,11 +23,18 @@ layout removes. ``benchmarks.run`` tees the returned dict into
 BENCH_kernels.json at the repo root for cross-PR tracking.
 """
 import json
+import os
 import sys
 import time
 
 import jax
 import jax.numpy as jnp
+
+# CI bench-smoke lane: shrink the buffers/tree/attention so the suite
+# runs in seconds while every STRUCTURAL metric (launch counts,
+# collective counts, padding-waste order) keeps the same contract —
+# tools/bench_check.py guards exactly those, never wall times.
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
 
 from repro.common.packing import ALIGN, pack, pack_spec, pack_stacked
 from repro.kernels import ops as kops
@@ -46,14 +53,17 @@ def _time(fn, *args, iters=20):
 
 def transformer_like_tree(key=0):
     """≥100 leaves with a transformer's size mix: a few 1M-element
-    matrices, mid-size projections, and many 128-element biases."""
+    matrices, mid-size projections, and many 128-element biases (the
+    SMOKE lane keeps the mix but shrinks every class)."""
     ks = iter(jax.random.split(jax.random.key(key), 128))
+    n_embed, embed_shape, n_proj, n_bias = \
+        (2, (256, 512), 10, 20) if SMOKE else (2, (1024, 1024), 30, 70)
     tree = {}
-    for i in range(2):
-        tree[f"embed_{i}"] = jax.random.normal(next(ks), (1024, 1024))
-    for i in range(30):
+    for i in range(n_embed):
+        tree[f"embed_{i}"] = jax.random.normal(next(ks), embed_shape)
+    for i in range(n_proj):
         tree[f"proj_{i}"] = jax.random.normal(next(ks), (128, 512))
-    for i in range(70):
+    for i in range(n_bias):
         tree[f"bias_{i}"] = jax.random.normal(next(ks), (128,))
     return tree
 
@@ -196,12 +206,18 @@ def _mesh_sync_worker():
 
     mesh = make_test_mesh((2, 2, 2), ("replica", "data", "model"))
     rules = make_tp_rules(mesh, replica_axis="replica")
+    rules_fsdp = make_tp_rules(mesh, replica_axis="replica", fsdp=True)
     lm = build_model(get_smoke_config("granite-3-2b"))
     out = {}
-    for name, resident, kernels in [("gated", False, True),
-                                    ("mesh_resident", True, True)]:
-        hwa_cfg = HWAConfig(n_replicas=2, window=3, use_kernels=kernels)
-        bundle = make_mesh_hwa_sync_step(lm, rules, hwa_cfg,
+    # fsdp_grouped: the FSDP mixed data×model tilings through the GROUPED
+    # mesh-resident layout — per-group launches (≤ n_groups), still zero
+    # assembly collectives (before the grouped chooser this tree was
+    # stuck on the legacy path measured by the "gated" leg)
+    for name, leg_rules, resident in [("gated", rules, False),
+                                      ("mesh_resident", rules, True),
+                                      ("fsdp_grouped", rules_fsdp, True)]:
+        hwa_cfg = HWAConfig(n_replicas=2, window=3, use_kernels=True)
+        bundle = make_mesh_hwa_sync_step(lm, leg_rules, hwa_cfg,
                                          mesh_resident=resident)
         compiled = bundle.lower(mesh).compile()
         hlo = compiled.as_text()
@@ -216,6 +232,7 @@ def _mesh_sync_worker():
             "assembly_bytes": result_bytes(sorted(assembly)),
             "ici_bytes_per_sync": collective_stats(hlo).traffic_bytes,
             "pack_padded_bytes": 4 * bundle.pack_spec.padded,
+            "n_groups": bundle.pack_spec.n_groups,
         }
     print(json.dumps(out))
 
@@ -229,11 +246,12 @@ def gated_vs_mesh_resident(print_fn=print):
                                    print_fn=print_fn)
     if not rec:
         return {}
-    for name in ("gated", "mesh_resident"):
+    for name in ("gated", "mesh_resident", "fsdp_grouped"):
         r = rec[name]
         print_fn(csv_row(
             f"kernel/mesh_sync/{name}", 0.0,
             f"launches={r['pallas_launches']};"
+            f"n_groups={r['n_groups']};"
             f"collectives={r['collectives']};"
             f"assembly_collectives={r['assembly_collectives']};"
             f"assembly_bytes={r['assembly_bytes']};"
@@ -244,7 +262,7 @@ def gated_vs_mesh_resident(print_fn=print):
 
 def main(print_fn=print):
     out = {}
-    N = 1 << 20
+    N = 1 << 15 if SMOKE else 1 << 20
     I, K = 8, 4
     ring = jnp.zeros((I, N), jnp.float32)
     total = jnp.zeros((N,), jnp.float32)
@@ -284,7 +302,7 @@ def main(print_fn=print):
     out["packed_vs_per_leaf"] = packed_vs_per_leaf(print_fn)
     out["mesh_sync_gated_vs_resident"] = gated_vs_mesh_resident(print_fn)
 
-    B, S, H, D = 2, 1024, 4, 64
+    B, S, H, D = (2, 256, 4, 64) if SMOKE else (2, 1024, 4, 64)
     ks = jax.random.split(jax.random.key(0), 3)
     q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
     k = jax.random.normal(ks[1], (B, S, H, D), jnp.float32)

@@ -115,10 +115,31 @@ def _contiguous_spec(spec):
 
 def save_window_state(path: str, state: Any) -> None:
     """Save a (packed) WindowState: ring/total buffers + counters + the
-    packed layout (so a different mesh can repack on load)."""
+    packed layout (so a different mesh can repack on load).
+
+    Grouped (mixed-tiling) window states hold ring/total as PER-GROUP
+    buffer tuples at runtime; on disk the canonical form is always the
+    single logical buffer (group ranges contiguous), so they are merged
+    here and re-split on load — bit-exact both ways (pure concat). The
+    merge runs on HOST copies: the runtime buffers are device-resident
+    and differently sharded per group, and an eager concat across
+    differently-sharded operands is exactly the pattern XLA 0.4.37's CPU
+    SPMD partitioner miscompiles (see tests/mesh_hwa_check.py)."""
     from repro.common.packing import spec_to_json
 
-    tree = {"ring": state.ring, "total": state.total,
+    def _merge_host(parts):
+        if not isinstance(parts, (tuple, list)):
+            return parts
+        arrs = [np.asarray(p) for p in parts]
+        return arrs[0] if len(arrs) == 1 else \
+            np.concatenate(arrs, axis=arrs[0].ndim - 1)
+
+    ring, total = state.ring, state.total
+    if state.spec is not None:
+        if ring is not None:
+            ring = _merge_host(ring)
+        total = _merge_host(total)
+    tree = {"ring": ring, "total": total,
             "count": state.count, "next_idx": state.next_idx}
     if state.spec is not None:
         tree["spec_json"] = np.asarray(spec_to_json(state.spec))
@@ -203,10 +224,17 @@ def load_window_state(path: str, like: Any) -> Any:
             parts.append(jnp.asarray(np.asarray(arr, np.float32)))
         return pack_leaves(parts, spec, n_lead=len(lead)).astype(dtype)
 
+    from repro.common.packing import split_groups
     ring = None
     if like.ring is not None:
-        ring = restore(grab("ring"), (like.window,), like.ring.dtype)
+        ring_grouped = isinstance(like.ring, tuple)
+        rd = like.ring[0].dtype if ring_grouped else like.ring.dtype
+        ring = restore(grab("ring"), (like.window,), rd)
+        if ring_grouped:        # template holds per-group runtime buffers
+            ring = split_groups(ring, spec)
     total = restore(grab("total"), (), jnp.float32)
+    if isinstance(like.total, tuple):
+        total = split_groups(total, spec)
     count = jnp.asarray(grab("count")[0][1], jnp.int32)
     next_idx = jnp.asarray(grab("next_idx")[0][1], jnp.int32)
     return WindowState(ring=ring, total=total, count=count,

@@ -39,11 +39,29 @@ any elementwise update on the packed buffer is bit-identical (0 ULP) to
 the same update applied per leaf. :func:`repack` converts a buffer
 between two layouts of the same leaf set (e.g. checkpoints moving
 between mesh shapes) with the same 0-ULP guarantee.
+
+**Grouped layout** (``spec.groups``). A single super-axis cannot align
+mixed tilings — FSDP trees shard some leaves over the data axes, some
+over model, some over both at once. The grouped layout partitions the
+leaves by their *placement key* (the ordered sequence of hot
+PartitionSpec entries): each :class:`PackGroup` owns a contiguous range
+of the buffer laid out exactly like an independent segment-major pack —
+``shards`` segments of ``seg_len`` elements over its own super-axis —
+and leaves replicated over every hot axis form a ``shards == 1`` group
+stored once. A leaf may tile over SEVERAL dims at once (``LeafSpec.tiles``,
+e.g. dim 1 over ``data`` and dim 2 over ``model``); segment ``s`` of its
+group then holds the block at the row-major coordinate decomposition of
+``s`` over the tile parts, which is exactly the block a device at those
+mesh coordinates owns. Each group range is therefore independently
+shardable over its own axes (``P((None,) * lead + (group.axes,))``), and
+every device's slice of every group is computable from its local leaf
+blocks alone — the mesh-resident invariant, extended to mixed tilings.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
+import math
 from typing import Any, Sequence
 
 import jax
@@ -68,12 +86,50 @@ class LeafSpec:
     ``offset`` is the WITHIN-SEGMENT offset (== the global offset when
     ``shards == 1``). ``shard_dim`` names the leaf dim split over the
     packed super-axis, or None for a leaf replicated into every segment.
+    ``group`` indexes the :class:`PackGroup` the leaf lives in (always 0
+    for single-range layouts). ``tiles`` is the multi-dim placement of a
+    grouped layout — ``((dim, parts), ...)`` in ascending dim order, one
+    entry per tiled dim — or None to derive the single-dim placement from
+    ``shard_dim`` and the group's shard count.
     """
     offset: int
     size: int
     shape: tuple[int, ...]
     dtype: str
     shard_dim: int | None = None
+    group: int = 0
+    tiles: tuple[tuple[int, int], ...] | None = None
+
+
+def _leaf_tiles(ls: LeafSpec, shards: int) -> tuple[tuple[int, int], ...]:
+    """Normalized tiling of a leaf within a group of ``shards`` segments:
+    () for a leaf held whole in every segment."""
+    if ls.tiles is not None:
+        return ls.tiles
+    if ls.shard_dim is None or shards == 1:
+        return ()
+    return ((ls.shard_dim, shards),)
+
+
+@dataclasses.dataclass(frozen=True)
+class PackGroup:
+    """One contiguous range of a grouped packed layout.
+
+    The range ``[offset, offset + shards * seg_len)`` is laid out like an
+    independent segment-major pack: ``shards`` segments of ``seg_len``
+    elements (an ``align`` multiple each), sharded jointly over the mesh
+    axes ``axes`` (layout metadata — packing itself never touches a
+    mesh). ``axes == ()`` with ``shards == 1`` is the replicated group:
+    its leaves are stored once and every device holds the full range.
+    """
+    shards: int
+    axes: tuple[str, ...]
+    seg_len: int
+    offset: int
+
+    @property
+    def padded(self) -> int:
+        return self.shards * self.seg_len
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,14 +149,34 @@ class PackSpec:
     align: int = ALIGN
     shards: int = 1
     axes: tuple[str, ...] = ()
+    groups: tuple[PackGroup, ...] = ()   # grouped layout; () == one range
+                                         # described by shards/axes
 
     @property
     def n_leaves(self) -> int:
         return len(self.leaves)
 
     @property
+    def n_groups(self) -> int:
+        return len(self.groups) if self.groups else 1
+
+    @property
+    def is_grouped(self) -> bool:
+        return bool(self.groups)
+
+    @property
     def seg_len(self) -> int:
+        """Per-segment length of a SINGLE-range layout (grouped layouts
+        carry per-group ``seg_len`` in :meth:`group_table`)."""
         return self.padded // self.shards
+
+    def group_table(self) -> tuple[PackGroup, ...]:
+        """The layout as PackGroups — grouped layouts verbatim, single-
+        range layouts as the one degenerate group covering the buffer."""
+        if self.groups:
+            return self.groups
+        return (PackGroup(shards=self.shards, axes=self.axes,
+                          seg_len=self.padded // self.shards, offset=0),)
 
     @property
     def pad_waste(self) -> float:
@@ -108,40 +184,63 @@ class PackSpec:
         return (self.padded - self.size) / max(self.size, 1)
 
     def piece_size(self, ls: LeafSpec) -> int:
-        return ls.size // self.shards if ls.shard_dim is not None else ls.size
+        tiles = _leaf_tiles(ls, self.group_table()[ls.group].shards)
+        parts = math.prod(p for _, p in tiles) if tiles else 1
+        return ls.size // parts
 
     def local_spec(self) -> "PackSpec":
-        """The per-device view of a sharded layout: one segment, local leaf
-        shapes (``shard_dim`` divided by ``shards``), same offsets.
+        """The per-device view of a sharded layout: one segment per group,
+        local leaf shapes (each tiled dim divided by its parts), same
+        within-segment offsets.
 
         Inside a manual ``shard_map`` whose in_specs shard each leaf over
-        the super-axis on its ``shard_dim``, ``pack(local_tree,
-        spec.local_spec())`` equals the device's ``seg_len`` slice of the
-        global ``pack(tree, spec)`` — the invariant that makes the
-        mesh-resident WA path collective-free.
+        its group's super-axis on its tiled dims, ``pack(local_tree,
+        spec.local_spec())`` equals the device's slice of the global
+        ``pack(tree, spec)`` (segment ``s`` of every group, ``s`` the
+        device's coordinate along that group's axes) — the invariant that
+        makes the mesh-resident WA path collective-free. The local view of
+        a grouped layout keeps its groups (all ``shards == 1``, offsets
+        re-based to the concatenation of the per-group segments).
         """
-        if self.shards == 1:
+        if not self.groups and self.shards == 1:
             return self
+        gt = self.group_table()
         leaves = []
         for ls in self.leaves:
-            if ls.shard_dim is None:
+            tiles = _leaf_tiles(ls, gt[ls.group].shards)
+            if not tiles:
                 leaves.append(LeafSpec(offset=ls.offset, size=ls.size,
-                                       shape=ls.shape, dtype=ls.dtype))
+                                       shape=ls.shape, dtype=ls.dtype,
+                                       group=ls.group))
             else:
                 shape = list(ls.shape)
-                shape[ls.shard_dim] //= self.shards
+                for d, p in tiles:
+                    shape[d] //= p
+                parts = math.prod(p for _, p in tiles)
                 leaves.append(LeafSpec(offset=ls.offset,
-                                       size=ls.size // self.shards,
-                                       shape=tuple(shape), dtype=ls.dtype))
+                                       size=ls.size // parts,
+                                       shape=tuple(shape), dtype=ls.dtype,
+                                       group=ls.group))
+        if not self.groups:
+            return PackSpec(treedef=self.treedef, leaves=tuple(leaves),
+                            size=sum(l.size for l in leaves),
+                            padded=self.seg_len, align=self.align)
+        lgroups = []
+        off = 0
+        for g in gt:
+            lgroups.append(PackGroup(shards=1, axes=(), seg_len=g.seg_len,
+                                     offset=off))
+            off += g.seg_len
         return PackSpec(treedef=self.treedef, leaves=tuple(leaves),
-                        size=sum(l.size for l in leaves),
-                        padded=self.seg_len, align=self.align)
+                        size=sum(l.size for l in leaves), padded=off,
+                        align=self.align, groups=tuple(lgroups))
 
     def same_layout(self, other: "PackSpec") -> bool:
         """Layout equality ignoring the treedef (checkpoint-rehydrated
         specs have none)."""
         return (self.leaves == other.leaves and self.padded == other.padded
-                and self.shards == other.shards and self.align == other.align)
+                and self.shards == other.shards and self.align == other.align
+                and self.groups == other.groups)
 
 
 def pack_spec(tree: PyTree, align: int = ALIGN, *, shards: int = 1,
@@ -187,6 +286,83 @@ def pack_spec(tree: PyTree, align: int = ALIGN, *, shards: int = 1,
                     axes=tuple(axes))
 
 
+# A per-leaf placement for the grouped layout: ((dim, axes), ...) pairs in
+# ascending dim order — leaf dim ``dim`` tiles over the mesh axes ``axes``
+# jointly — or () for a leaf replicated over every hot axis.
+Placement = tuple[tuple[int, tuple[str, ...]], ...]
+
+
+def pack_spec_grouped(tree: PyTree, align: int = ALIGN, *,
+                      placements: Sequence[Placement],
+                      axis_sizes: dict[str, int]) -> PackSpec:
+    """Compute a GROUPED packed layout of ``tree`` for mixed tilings.
+
+    ``placements`` gives, per leaf (flatten order), which dims tile over
+    which mesh axes (``axis_sizes`` maps axis name → device count).
+    Leaves sharing a placement key — the ordered sequence of axes tuples
+    — share a :class:`PackGroup`; groups are laid out contiguously in
+    first-appearance order, each segment-major over its own super-axis.
+    Leaves with an empty placement form a ``shards == 1`` group stored
+    once (no per-segment duplication). Every tiled dim must divide by its
+    axes' device product.
+    """
+    flat, treedef = jax.tree.flatten(tree)
+    pls = [tuple(pl) for pl in placements]
+    if len(pls) != len(flat):
+        raise ValueError(f"placements has {len(pls)} entries for "
+                         f"{len(flat)} leaves")
+    keys: list[tuple[tuple[str, ...], ...]] = []
+    for pl in pls:
+        key = tuple(tuple(axes) for _, axes in pl)
+        if key not in keys:
+            keys.append(key)
+    if not keys:
+        keys.append(())
+    offsets = [0] * len(keys)
+    leaves = []
+    for leaf, pl in zip(flat, pls):
+        shape = tuple(int(d) for d in leaf.shape)
+        size = int(np.prod(shape, dtype=np.int64)) if shape else 1
+        key = tuple(tuple(axes) for _, axes in pl)
+        gi = keys.index(key)
+        tiles = []
+        for dim, axes in pl:
+            parts = math.prod(axis_sizes[a] for a in axes)
+            if not (0 <= dim < len(shape)) or size == 0 or \
+                    shape[dim] % parts != 0:
+                raise ValueError(f"leaf {shape} cannot tile dim {dim} "
+                                 f"{parts}-ways over {tuple(axes)}")
+            tiles.append((dim, parts))
+        dims_used = [d for d, _ in tiles]
+        if dims_used != sorted(set(dims_used)):
+            raise ValueError(f"placement dims must be distinct and "
+                             f"ascending, got {dims_used}")
+        parts_total = math.prod(p for _, p in tiles) if tiles else 1
+        if len(tiles) == 1:
+            ls = LeafSpec(offset=offsets[gi], size=size, shape=shape,
+                          dtype=np.dtype(leaf.dtype).name,
+                          shard_dim=tiles[0][0], group=gi)
+        else:
+            ls = LeafSpec(offset=offsets[gi], size=size, shape=shape,
+                          dtype=np.dtype(leaf.dtype).name, group=gi,
+                          tiles=tuple(tiles) if tiles else None)
+        leaves.append(ls)
+        offsets[gi] += size // parts_total
+    groups = []
+    goff = 0
+    for key, used in zip(keys, offsets):
+        flat_axes = tuple(a for axes in key for a in axes)
+        shards = math.prod(axis_sizes[a] for a in flat_axes) if flat_axes \
+            else 1
+        seg_len = max(align, -(-used // align) * align)
+        groups.append(PackGroup(shards=shards, axes=flat_axes,
+                                seg_len=seg_len, offset=goff))
+        goff += shards * seg_len
+    return PackSpec(treedef=treedef, leaves=tuple(leaves),
+                    size=sum(l.size for l in leaves), padded=goff,
+                    align=align, groups=tuple(groups))
+
+
 def _check(tree: PyTree, spec: PackSpec) -> list:
     flat, treedef = jax.tree.flatten(tree)
     if treedef != spec.treedef:
@@ -198,15 +374,28 @@ def _check(tree: PyTree, spec: PackSpec) -> list:
     return flat
 
 
-def _piece(leaf, ls: LeafSpec, spec: PackSpec, s: int, n_lead: int):
-    """Leaf's segment-``s`` contribution, flattened (lead dims kept)."""
+def _piece(leaf, ls: LeafSpec, group: PackGroup, s: int, n_lead: int):
+    """Leaf's segment-``s`` contribution to its group, flattened (lead
+    dims kept). ``s`` decomposes row-major over the leaf's tile parts —
+    the coordinate order of the group's joint super-axis."""
     lead = tuple(leaf.shape[:n_lead])
-    if ls.shard_dim is None or spec.shards == 1:
+    tiles = _leaf_tiles(ls, group.shards)
+    if not tiles:
         return jnp.reshape(leaf, lead + (ls.size,))
-    c = ls.shape[ls.shard_dim] // spec.shards
-    sl = jax.lax.slice_in_dim(leaf, s * c, (s + 1) * c,
-                              axis=ls.shard_dim + n_lead)
-    return jnp.reshape(sl, lead + (ls.size // spec.shards,))
+    suffix = []
+    acc = 1
+    for _, p in reversed(tiles):
+        suffix.append(acc)
+        acc *= p
+    suffix.reverse()
+    x = leaf
+    n = ls.size
+    for (d, p), suf in zip(tiles, suffix):
+        c = (s // suf) % p
+        w = x.shape[d + n_lead] // p
+        x = jax.lax.slice_in_dim(x, c * w, (c + 1) * w, axis=d + n_lead)
+        n //= p
+    return jnp.reshape(x, lead + (n,))
 
 
 def pack_leaves(flat: Sequence[Any], spec: PackSpec, dtype=jnp.float32,
@@ -214,15 +403,20 @@ def pack_leaves(flat: Sequence[Any], spec: PackSpec, dtype=jnp.float32,
     """Pack already-flattened leaves (``n_lead`` shared leading batch dims
     per leaf, e.g. the K of :func:`pack_stacked` or a ring's I rows)."""
     lead = tuple(flat[0].shape[:n_lead]) if flat else ()
+    gt = spec.group_table()
+    members: list[list] = [[] for _ in gt]
+    for leaf, ls in zip(flat, spec.leaves):
+        members[ls.group].append((leaf, ls))
     segs = []
-    for s in range(spec.shards):
-        parts = [_piece(leaf, ls, spec, s, n_lead).astype(dtype)
-                 for leaf, ls in zip(flat, spec.leaves)]
-        used = sum(p.shape[-1] for p in parts)
-        if spec.seg_len > used:
-            parts.append(jnp.zeros(lead + (spec.seg_len - used,), dtype))
-        segs.append(jnp.concatenate(parts, axis=-1))
-    return jnp.concatenate(segs, axis=-1) if spec.shards > 1 else segs[0]
+    for g, mem in zip(gt, members):
+        for s in range(g.shards):
+            parts = [_piece(leaf, ls, g, s, n_lead).astype(dtype)
+                     for leaf, ls in mem]
+            used = sum(p.shape[-1] for p in parts)
+            if g.seg_len > used:
+                parts.append(jnp.zeros(lead + (g.seg_len - used,), dtype))
+            segs.append(jnp.concatenate(parts, axis=-1))
+    return jnp.concatenate(segs, axis=-1) if len(segs) > 1 else segs[0]
 
 
 def pack(tree: PyTree, spec: PackSpec | None = None,
@@ -257,19 +451,33 @@ def pack_stacked(tree: PyTree, spec: PackSpec, dtype=jnp.float32) -> jax.Array:
 def _unpack_one(buf: jax.Array, spec: PackSpec, ls: LeafSpec):
     """One leaf's view of the packed buffer (lead dims preserved)."""
     lead = buf.shape[:-1]
-    if ls.shard_dim is None or spec.shards == 1:
-        x = jax.lax.slice_in_dim(buf, ls.offset, ls.offset + ls.size,
-                                 axis=buf.ndim - 1)
+    g = spec.group_table()[ls.group]
+    tiles = _leaf_tiles(ls, g.shards)
+    if not tiles:
+        off = g.offset + ls.offset      # replicated: segment 0's copy
+        x = jax.lax.slice_in_dim(buf, off, off + ls.size, axis=buf.ndim - 1)
         return jnp.reshape(x, lead + ls.shape)
-    piece = ls.size // spec.shards
+    parts = math.prod(p for _, p in tiles)
+    piece = ls.size // parts
     local = list(ls.shape)
-    local[ls.shard_dim] //= spec.shards
-    parts = []
-    for s in range(spec.shards):
-        off = s * spec.seg_len + ls.offset
+    for d, p in tiles:
+        local[d] //= p
+    pieces = []
+    for s in range(g.shards):
+        off = g.offset + s * g.seg_len + ls.offset
         x = jax.lax.slice_in_dim(buf, off, off + piece, axis=buf.ndim - 1)
-        parts.append(jnp.reshape(x, lead + tuple(local)))
-    return jnp.concatenate(parts, axis=len(lead) + ls.shard_dim)
+        pieces.append(jnp.reshape(x, lead + tuple(local)))
+
+    def assemble(arrs, ts):
+        d, p = ts[0]
+        if len(ts) == 1:
+            return jnp.concatenate(arrs, axis=len(lead) + d)
+        chunk = len(arrs) // p
+        subs = [assemble(arrs[i * chunk:(i + 1) * chunk], ts[1:])
+                for i in range(p)]
+        return jnp.concatenate(subs, axis=len(lead) + d)
+
+    return assemble(pieces, tiles)
 
 
 def unpack(buf: jax.Array, spec: PackSpec, like: PyTree | None = None
@@ -308,6 +516,53 @@ def repack(buf: jax.Array, src: PackSpec, dst: PackSpec) -> jax.Array:
     return pack_leaves(leaves, dst, buf.dtype, n_lead=buf.ndim - 1)
 
 
+# -------------------------------------------------- grouped-buffer views
+#
+# A grouped layout is ONE logical buffer (checkpoints and repack see it
+# that way), but at runtime each group range shards over a DIFFERENT
+# super-axis, which a single array's PartitionSpec cannot express — so
+# the mesh sync bundles carry grouped window state as per-group buffer
+# tuples. These helpers convert between the two representations (pure
+# slicing/concat: bit-exact both ways).
+
+
+def split_groups(buf: jax.Array, spec: PackSpec) -> tuple[jax.Array, ...]:
+    """Per-group sub-buffers of a packed buffer (lead dims preserved)."""
+    return tuple(
+        jax.lax.slice_in_dim(buf, g.offset, g.offset + g.padded,
+                             axis=buf.ndim - 1)
+        for g in spec.group_table())
+
+
+def merge_groups(parts, spec: PackSpec) -> jax.Array:
+    """Inverse of :func:`split_groups`: concatenate per-group buffers
+    back into the single logical buffer (a bare array passes through)."""
+    if not isinstance(parts, (tuple, list)):
+        return parts
+    parts = tuple(parts)
+    if len(parts) != spec.n_groups:
+        raise ValueError(f"{len(parts)} group buffers for a "
+                         f"{spec.n_groups}-group layout")
+    return parts[0] if len(parts) == 1 else \
+        jnp.concatenate(parts, axis=parts[0].ndim - 1)
+
+
+def window_buffers(spec: PackSpec, window: int, ring_dtype=jnp.float32,
+                   make=jnp.zeros):
+    """Allocate zeroed (ring, total) window buffers matching a sync
+    bundle's ``pack_spec`` contract: bare ``(I, padded)`` / ``(padded,)``
+    arrays for single-range layouts, per-group tuples for grouped ones
+    (each group buffer shards over its own super-axis). ``make(shape,
+    dtype)`` swaps the allocator — ``jax.ShapeDtypeStruct`` gives the
+    bundle's abstract args (the ONE place this shape contract lives)."""
+    if not spec.is_grouped:
+        return (make((window, spec.padded), ring_dtype),
+                make((spec.padded,), jnp.float32))
+    gt = spec.group_table()
+    return (tuple(make((window, g.padded), ring_dtype) for g in gt),
+            tuple(make((g.padded,), jnp.float32) for g in gt))
+
+
 # ------------------------------------------- layout (de)serialization
 #
 # Checkpoints store the layout next to the buffers so a window state saved
@@ -316,22 +571,40 @@ def repack(buf: jax.Array, src: PackSpec, dst: PackSpec) -> jax.Array:
 
 
 def spec_to_json(spec: PackSpec) -> str:
-    return json.dumps({
+    d = {
         "align": spec.align, "shards": spec.shards, "axes": list(spec.axes),
         "size": spec.size, "padded": spec.padded,
         "leaves": [[ls.offset, ls.size, list(ls.shape), ls.dtype,
-                    ls.shard_dim] for ls in spec.leaves]})
+                    ls.shard_dim, ls.group,
+                    [list(t) for t in ls.tiles] if ls.tiles is not None
+                    else None] for ls in spec.leaves]}
+    if spec.groups:
+        d["groups"] = [[g.shards, list(g.axes), g.seg_len, g.offset]
+                       for g in spec.groups]
+    return json.dumps(d)
 
 
 def spec_from_json(s: str) -> PackSpec:
-    """Rehydrate a layout saved by :func:`spec_to_json`. The treedef is
-    not serializable; the result supports the flat/leaf-level operations
-    (``pack_leaves``/``unpack_leaf``/:func:`repack`) but not tree-level
-    pack/unpack."""
+    """Rehydrate a layout saved by :func:`spec_to_json` (including
+    pre-grouped-layout records, whose leaf rows have no group/tiles
+    columns). The treedef is not serializable; the result supports the
+    flat/leaf-level operations (``pack_leaves``/``unpack_leaf``/
+    :func:`repack`) but not tree-level pack/unpack."""
     d = json.loads(s)
-    leaves = tuple(LeafSpec(offset=o, size=n, shape=tuple(sh), dtype=dt,
-                            shard_dim=sd)
-                   for o, n, sh, dt, sd in d["leaves"])
-    return PackSpec(treedef=None, leaves=leaves, size=d["size"],
+    leaves = []
+    for row in d["leaves"]:
+        o, n, sh, dt, sd = row[:5]
+        gi = row[5] if len(row) > 5 else 0
+        tiles = row[6] if len(row) > 6 else None
+        leaves.append(LeafSpec(
+            offset=o, size=n, shape=tuple(sh), dtype=dt, shard_dim=sd,
+            group=gi,
+            tiles=tuple(tuple(t) for t in tiles) if tiles is not None
+            else None))
+    groups = tuple(PackGroup(shards=gs, axes=tuple(ax), seg_len=sl,
+                             offset=go)
+                   for gs, ax, sl, go in d.get("groups", []))
+    return PackSpec(treedef=None, leaves=tuple(leaves), size=d["size"],
                     padded=d["padded"], align=d["align"],
-                    shards=d["shards"], axes=tuple(d["axes"]))
+                    shards=d["shards"], axes=tuple(d["axes"]),
+                    groups=groups)

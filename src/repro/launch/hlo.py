@@ -195,7 +195,8 @@ def result_bytes(hits) -> int:
 
 
 def sync_collective_audit(hlo_text: str, mesh, replica_axis: str = "replica",
-                          outer_axis: str | None = None) -> dict:
+                          outer_axis: str | None = None,
+                          n_groups: int | None = None) -> dict:
     """Structural audit of an HWA sync step's collectives, per level.
 
     **Flat** (``outer_axis=None``): the mesh-resident packed sync's
@@ -203,6 +204,15 @@ def sync_collective_audit(hlo_text: str, mesh, replica_axis: str = "replica",
     (pmean/psum) over the replica axis — and ZERO collectives crossing
     any other mesh axis (i.e. the packed-W̄ assembly and the W̿ unpack
     are shard-local).
+
+    **Grouped** (``n_groups`` set): the mixed-tiling (FSDP) grouped
+    layout keeps the SAME collective contract — the per-group window
+    buffers change the kernel-launch budget (≤ ``n_groups``
+    pallas_calls, counted separately via :func:`count_pallas_calls` on
+    the jaxpr — interpret-mode HLO has no custom-call marker), not the
+    traffic: partials are concatenated before the one replica
+    all-reduce and every group's assembly stays shard-local. The
+    ``grouped_sync_ok`` verdict asserts that HLO side.
 
     **Two-level** (``outer_axis`` set, e.g. ``"pod"``): each collective
     is classified by which of the two replica-population axes its
@@ -252,7 +262,7 @@ def sync_collective_audit(hlo_text: str, mesh, replica_axis: str = "replica",
              if ax != replica_axis and ax != outer_axis}
     assembly_free = not any(hits for hits in other.values())
     one_ar = lambda hits: len(hits) == 1 and hits[0][0] == "all-reduce"
-    return {
+    out = {
         "replica": replica,
         "outer": outer,
         "mixed": mixed,
@@ -265,6 +275,11 @@ def sync_collective_audit(hlo_text: str, mesh, replica_axis: str = "replica",
         "outer_sync_ok": (one_ar(inner_only) and one_ar(outer_only)
                           and not mixed and assembly_free),
     }
+    if n_groups is not None:
+        out["n_groups"] = n_groups
+        out["grouped_sync_ok"] = (out["replica_allreduce_only"]
+                                  and assembly_free)
+    return out
 
 
 # --------------------------------------------------- kernel-launch counting

@@ -37,10 +37,12 @@ from repro.launch.sync.bundles import (StepBundle, _expand0, _mk_optimizer,
 from repro.launch.sync.topology import Flat, SyncTopology, TwoLevel
 # Mesh-resident packed machinery (private names kept importable — the
 # ROADMAP/ARCHITECTURE docs and downstream experiments reference them).
-from repro.launch.sync.packed import (_axes_entry, _local_inner_sync,
+from repro.launch.sync.packed import (_axes_entry, _grouped_resident_layout,
+                                      _local_inner_sync,
                                       _local_packed_sync,
                                       _mesh_resident_layout, _norm_entry,
-                                      _packed_sharding)
+                                      _packed_sharding,
+                                      choose_resident_spec)
 # Legacy GSPMD fallback; ``check_legacy_assembly`` is the promoted hard
 # error (the old ``_warn_legacy_assembly`` name stays as an alias).
 from repro.launch.sync.legacy import (check_legacy_assembly,

@@ -26,10 +26,10 @@ from repro.core.hwa import HWAConfig, hwa_local_inner_step
 from repro.launch.sync.legacy import (check_legacy_assembly,
                                       make_legacy_mesh_sync_step,
                                       make_legacy_sync_step)
-from repro.launch.sync.packed import (_axes_entry, _local_inner_sync,
-                                      _local_packed_sync,
-                                      _mesh_resident_layout, _norm_entry,
-                                      _packed_sharding)
+from repro.launch.sync.packed import (_local_inner_sync,
+                                      _local_packed_sync, _norm_entry,
+                                      _packed_pspecs, _packed_shardings,
+                                      choose_resident_spec)
 from repro.launch.sync.topology import Flat, SyncTopology, TwoLevel
 from repro.models.registry import LM
 from repro.optim import adamw, apply_updates, sgd
@@ -309,6 +309,16 @@ def _check_outer_every(hwa_cfg: HWAConfig, topology: SyncTopology) -> None:
             "topology for the H·H₂ hierarchy, or leave outer_every at 1")
 
 
+def _window_abs(spec, window: int, ring_dtype):
+    """Abstract (ring, total) args for a sync bundle's window state —
+    ``packing.window_buffers``' shape contract with ShapeDtypeStructs in
+    place of arrays (one source of truth for the grouped/single-range
+    buffer shapes)."""
+    from repro.common.packing import window_buffers
+    return window_buffers(spec, window, ring_dtype,
+                          make=jax.ShapeDtypeStruct)
+
+
 def make_hwa_sync_step(lm: LM, rules: ShardingRules, hwa_cfg: HWAConfig,
                        ring_dtype=jnp.float32,
                        mesh_resident: bool | None = None) -> StepBundle:
@@ -354,23 +364,29 @@ def make_hwa_sync_step(lm: LM, rules: ShardingRules, hwa_cfg: HWAConfig,
     its local ``(I, P/shards)`` slice of a shard-aware packed layout
     (zero assembly collectives; see ``packed._local_packed_sync``),
     driving the Pallas kernel on true local shapes when ``use_kernels``
-    and the jnp reference otherwise. When the parameter tilings admit no
-    such layout (``_mesh_resident_layout`` → None, e.g. FSDP) the legacy
-    GSPMD fallback (``launch.sync.legacy``) runs instead, paying one
-    param-size assembly all-reduce per sync — and on multi-device CPU
-    meshes that fallback is a HARD ERROR (XLA 0.4.37's CPU partitioner
-    miscompiles it; ``REPRO_ALLOW_LEGACY_ASSEMBLY=1`` downgrades to a
-    warning for HLO-introspection-only callers). ``mesh_resident`` forces
-    the choice (True raises if the layout does not qualify); None picks
-    automatically.
+    and the jnp reference otherwise. Mixed tilings (FSDP's data/model
+    splits, multi-dim placements included) take the GROUPED layout
+    (``packed.choose_resident_spec`` → ``PackSpec.groups``): ring/total
+    become PER-GROUP buffer tuples — allocate them with
+    ``packing.window_buffers(bundle.pack_spec, I)`` — each sharded over
+    its group's own super-axis, updated by one kernel launch per group,
+    still with exactly one replica all-reduce and zero assembly
+    collectives. The legacy GSPMD fallback (``launch.sync.legacy``) is
+    now an explicitly-requested escape hatch (``mesh_resident=False``) or
+    the last resort for layouts even the grouped chooser cannot align
+    (zero-size leaves, params sharded over replica axes, indivisible
+    tiles) — it pays one param-size assembly all-reduce per sync, and on
+    multi-device CPU meshes it is a HARD ERROR (XLA 0.4.37's CPU
+    partitioner miscompiles it; ``REPRO_ALLOW_LEGACY_ASSEMBLY=1``
+    downgrades to a warning for HLO-introspection-only callers).
+    ``mesh_resident`` forces the choice (True raises if no layout
+    qualifies); None picks automatically.
 
     Variants (EXPERIMENTS.md §Perf pair 3): exact f32 ring (paper),
     bf16 ring (2× window memory saving), or hwa_cfg.window_kind ==
     "streaming" (O(1) extra copies, windowed-running-mean approximation;
     always the jnp path — it is a two-pass rescale, not ring-shaped).
     """
-    from repro.common.packing import pack_spec
-
     K = hwa_cfg.n_replicas
     I = hwa_cfg.window
     mesh = rules.mesh
@@ -389,24 +405,19 @@ def make_hwa_sync_step(lm: LM, rules: ShardingRules, hwa_cfg: HWAConfig,
     flat_shapes = [tuple(l.shape) for l in jax.tree.leaves(params_abs)]
     k_entry = rules.spec(("replica",), (K,))
     k_axes = _norm_entry(k_entry[0] if len(k_entry) else None)
-    axes, shard_dims = _mesh_resident_layout(mesh, flat_specs, flat_shapes,
-                                             exclude=k_axes)
+    spec = choose_resident_spec(mesh, params_abs, flat_specs, flat_shapes,
+                                exclude=k_axes)
     if mesh_resident is None:
         mesh_resident = (mesh.size > 1 and not streaming
-                         and axes is not None)
-    if mesh_resident and (axes is None or streaming):
+                         and spec is not None)
+    if mesh_resident and (spec is None or streaming):
         raise ValueError("mesh-resident sync needs a ring window and "
                          "leaf tilings that align with packed ranges "
-                         "(_mesh_resident_layout found none)")
+                         "(no single-super-axis OR grouped layout found)")
 
     if mesh_resident:
-        S = math.prod(mesh.shape[a] for a in axes) if axes else 1
-        spec = pack_spec(params_abs, shards=S, shard_dims=shard_dims,
-                         axes=axes)
-        ring_abs = jax.ShapeDtypeStruct((I, spec.padded), ring_dtype)
-        total_abs = jax.ShapeDtypeStruct((spec.padded,), jnp.float32)
+        ring_abs, total_abs = _window_abs(spec, I, ring_dtype)
         stacked_pspecs = rules.tree_specs(stacked_abs, stacked_dims)
-        pax = _axes_entry(axes)
         body = functools.partial(_local_packed_sync, hwa_cfg,
                                  spec.local_spec(), K, (k_axes,),
                                  hwa_cfg.use_kernels, False)
@@ -417,14 +428,15 @@ def make_hwa_sync_step(lm: LM, rules: ShardingRules, hwa_cfg: HWAConfig,
 
         step = shard_map(
             local_step, mesh,
-            in_specs=(stacked_pspecs, P(None, pax), P(pax), P(), P()),
-            out_specs=(stacked_pspecs, P(None, pax), P(pax), P(), P(),
-                       pspec_tree),
+            in_specs=(stacked_pspecs, _packed_pspecs(spec, 1),
+                      _packed_pspecs(spec), P(), P()),
+            out_specs=(stacked_pspecs, _packed_pspecs(spec, 1),
+                       _packed_pspecs(spec), P(), P(), pspec_tree),
             check_rep=False)
         p_sh = rules.tree_shardings(stacked_abs, stacked_dims)
         w_sh = rules.tree_shardings(params_abs, param_dims)
-        r_sh = _packed_sharding(mesh, spec.padded, lead_dims=1, axes=axes)
-        t_sh = _packed_sharding(mesh, spec.padded, axes=axes)
+        r_sh = _packed_shardings(mesh, spec, lead_dims=1)
+        t_sh = _packed_shardings(mesh, spec)
         s_sh = NamedSharding(mesh, P())
         return StepBundle(
             fn=step,
@@ -546,9 +558,9 @@ def make_mesh_hwa_train_step(lm: LM, rules: ShardingRules, batch_specs,
 
 def _mesh_resident_pack(lm, rules, topology):
     """Shared prologue of the mesh-native sync builders: abstract trees,
-    the shard-aware packed layout (or None), and the sharding trees."""
-    from repro.common.packing import pack_spec
-
+    the shard-aware packed layout — single-super-axis or grouped, or None
+    when even the grouped chooser cannot align the tilings — and the
+    sharding trees."""
     params_abs, param_dims = lm.abstract()
     K = math.prod(rules.mesh.shape[a] for a in topology.replica_axes)
     stacked_abs = jax.tree.map(
@@ -557,15 +569,11 @@ def _mesh_resident_pack(lm, rules, topology):
     pspec_tree = rules.tree_specs(params_abs, param_dims)
     flat_specs = jax.tree.leaves(pspec_tree)
     flat_shapes = [tuple(l.shape) for l in jax.tree.leaves(params_abs)]
-    axes, shard_dims = _mesh_resident_layout(
-        rules.mesh, flat_specs, flat_shapes, exclude=topology.replica_axes)
-    spec = None
-    if axes is not None:
-        S = math.prod(rules.mesh.shape[a] for a in axes) if axes else 1
-        spec = pack_spec(params_abs, shards=S, shard_dims=shard_dims,
-                         axes=axes)
+    spec = choose_resident_spec(rules.mesh, params_abs, flat_specs,
+                                flat_shapes,
+                                exclude=topology.replica_axes)
     return (params_abs, param_dims, stacked_abs, stacked_dims, pspec_tree,
-            axes, spec)
+            spec)
 
 
 def make_mesh_hwa_sync_step(lm: LM, rules: ShardingRules, hwa_cfg: HWAConfig,
@@ -611,15 +619,27 @@ def make_mesh_hwa_sync_step(lm: LM, rules: ShardingRules, hwa_cfg: HWAConfig,
     see ROADMAP "partial-auto on new JAX"/"scan under manual subgroups").
     With no auto axes in the sync map there is no subgroup to miscompile.
 
-    **Fallback.** When the parameter tilings admit no aligned layout
-    (``_mesh_resident_layout`` → None, e.g. FSDP's mixed tilings), the
-    legacy split (``launch.sync.legacy``) runs instead: pmean inside a
+    **Grouped layouts (FSDP).** Mixed tilings — leaves sharded over
+    different axis sets, multi-dim data×model placements included — no
+    longer fall back: ``packed.choose_resident_spec`` returns a GROUPED
+    ``PackSpec`` whose window state is a PER-GROUP buffer tuple
+    (allocate with ``packing.window_buffers(bundle.pack_spec, I)``),
+    each group sharded over its own super-axis and pushed by its own
+    kernel launch (≤ n_groups pallas_calls), with the weight all-reduce
+    still computed ONCE over the concatenated local partials — the audit
+    contract (one replica all-reduce, zero assembly collectives) is
+    unchanged.
+
+    **Fallback.** The legacy split (``launch.sync.legacy``) survives only
+    as an explicitly-requested escape hatch (``mesh_resident=False``) or
+    for layouts even the grouped chooser cannot align (zero-size leaves,
+    params sharded over replica axes, indivisible tiles): pmean inside a
     partial-auto shard_map, window push outside in GSPMD-land — Flat
     only, one param-size masked all-reduce per sync, and a HARD ERROR on
     multi-device CPU meshes where XLA 0.4.37 miscompiles the assembly
     (``REPRO_ALLOW_LEGACY_ASSEMBLY=1`` downgrades to a warning).
-    ``mesh_resident`` forces the choice (True raises if the layout does
-    not qualify); None picks automatically.
+    ``mesh_resident`` forces the choice (True raises if no layout
+    qualifies); None picks automatically.
 
     **pack_spec contract.** Callers allocate the window buffers from
     ``bundle.pack_spec`` — ``ring = zeros((I, spec.padded), ring_dtype)``,
@@ -647,17 +667,17 @@ def make_mesh_hwa_sync_step(lm: LM, rules: ShardingRules, hwa_cfg: HWAConfig,
     psum_groups = (topology.psum_groups()
                    if isinstance(topology, TwoLevel) else (k_axes,))
     scalar_i = jax.ShapeDtypeStruct((), jnp.int32)
-    (params_abs, param_dims, stacked_abs, stacked_dims, pspec_tree, axes,
+    (params_abs, param_dims, stacked_abs, stacked_dims, pspec_tree,
      spec) = _mesh_resident_pack(lm, rules, topology)
     p_sh = rules.tree_shardings(stacked_abs, stacked_dims)
     w_sh = rules.tree_shardings(params_abs, param_dims)
     s_sh = NamedSharding(mesh, P())
 
     if mesh_resident is None:
-        mesh_resident = axes is not None
-    elif mesh_resident and axes is None:
+        mesh_resident = spec is not None
+    elif mesh_resident and spec is None:
         raise ValueError("mesh-resident sync: leaf tilings do not align "
-                         "with any packed super-axis")
+                         "with any packed super-axis or grouped layout")
     if not mesh_resident and isinstance(topology, TwoLevel):
         raise ValueError("the two-level sync tree requires the "
                          "mesh-resident packed path (no legacy GSPMD "
@@ -665,20 +685,19 @@ def make_mesh_hwa_sync_step(lm: LM, rules: ShardingRules, hwa_cfg: HWAConfig,
 
     if mesh_resident:
         stacked_pspecs = rules.tree_specs(stacked_abs, stacked_dims)
-        ring_abs = jax.ShapeDtypeStruct((I, spec.padded), ring_dtype)
-        total_abs = jax.ShapeDtypeStruct((spec.padded,), jnp.float32)
-        pax = _axes_entry(axes)
+        ring_abs, total_abs = _window_abs(spec, I, ring_dtype)
         step = shard_map(
             functools.partial(_local_packed_sync, hwa_cfg,
                               spec.local_spec(), K, psum_groups,
                               hwa_cfg.use_kernels, True),
             mesh,
-            in_specs=(stacked_pspecs, P(None, pax), P(pax), P(), P(), P()),
-            out_specs=(stacked_pspecs, P(None, pax), P(pax), P(), P(),
-                       pspec_tree, P()),
+            in_specs=(stacked_pspecs, _packed_pspecs(spec, 1),
+                      _packed_pspecs(spec), P(), P(), P()),
+            out_specs=(stacked_pspecs, _packed_pspecs(spec, 1),
+                       _packed_pspecs(spec), P(), P(), pspec_tree, P()),
             check_rep=False)
-        r_sh = _packed_sharding(mesh, spec.padded, lead_dims=1, axes=axes)
-        t_sh = _packed_sharding(mesh, spec.padded, axes=axes)
+        r_sh = _packed_shardings(mesh, spec, lead_dims=1)
+        t_sh = _packed_shardings(mesh, spec)
         return StepBundle(
             fn=step,
             abstract_args=(stacked_abs, ring_abs, total_abs, scalar_i,
@@ -722,11 +741,12 @@ def make_mesh_hwa_inner_sync_step(lm: LM, rules: ShardingRules,
     topology.validate(mesh, K)
     _check_outer_every(hwa_cfg, topology)
     _resolved_k_axes(rules, K, topology)
-    (params_abs, param_dims, stacked_abs, stacked_dims, pspec_tree, axes,
+    (params_abs, param_dims, stacked_abs, stacked_dims, pspec_tree,
      spec) = _mesh_resident_pack(lm, rules, topology)
-    if axes is None:
+    if spec is None:
         raise ValueError("inner sync: leaf tilings do not align with any "
-                         "packed super-axis (mesh-resident only)")
+                         "packed super-axis or grouped layout "
+                         "(mesh-resident only)")
     stacked_pspecs = rules.tree_specs(stacked_abs, stacked_dims)
     pod_size = K // topology.pods(mesh)
     step = shard_map(

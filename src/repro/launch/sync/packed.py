@@ -53,6 +53,25 @@ def _packed_sharding(mesh: Mesh, padded: int, lead_dims: int = 0,
     return NamedSharding(mesh, P(*([None] * lead_dims + [ax])))
 
 
+def _packed_pspecs(spec, lead_dims: int = 0):
+    """shard_map PartitionSpec(s) for window buffers under ``spec``: one
+    bare spec for single-range layouts, a per-group tuple for grouped
+    ones (each group's buffer dim splits over its OWN super-axis)."""
+    if not spec.is_grouped:
+        return P(*([None] * lead_dims + [_axes_entry(spec.axes)]))
+    return tuple(P(*([None] * lead_dims + [_axes_entry(g.axes)]))
+                 for g in spec.group_table())
+
+
+def _packed_shardings(mesh: Mesh, spec, lead_dims: int = 0):
+    """NamedSharding(s) matching :func:`_packed_pspecs`."""
+    if not spec.is_grouped:
+        return _packed_sharding(mesh, spec.padded, lead_dims,
+                                axes=spec.axes)
+    return tuple(NamedSharding(mesh, p)
+                 for p in _packed_pspecs(spec, lead_dims))
+
+
 def _mesh_resident_layout(mesh: Mesh, flat_specs, flat_shapes,
                           exclude: tuple[str, ...] = ()):
     """Choose a packed super-axis aligning leaf tilings with packed ranges.
@@ -71,6 +90,15 @@ def _mesh_resident_layout(mesh: Mesh, flat_specs, flat_shapes,
     every leaf (e.g. FSDP's mixed data/model tilings) — callers then fall
     back to the legacy redistribute-and-all-reduce assembly.
     """
+    # zero-size leaves break the SHARDED segment-major layout (their
+    # 0-element pieces make `pack_spec` reject sharded placements, and a
+    # per-segment duplicate is meaningless) — the guard must apply to
+    # every leaf of a shards>1 candidate, REPLICATED leaves included,
+    # not just inside the sharded branch below (the historical bug: a
+    # zero-size replicated leaf slipped through). The degenerate
+    # shards==1 fallback is plain contiguous packing, which supports
+    # empty leaves fine, so it stays available.
+    has_zero = any(not all(d > 0 for d in shape) for shape in flat_shapes)
     cands: list[tuple[str, ...]] = []
     for sp in flat_specs:
         for e in sp:
@@ -82,6 +110,8 @@ def _mesh_resident_layout(mesh: Mesh, flat_specs, flat_shapes,
     cands.append(())
     for cand in cands:
         S = math.prod(mesh.shape[a] for a in cand) if cand else 1
+        if S > 1 and has_zero:
+            continue
         dims: list[int | None] = []
         ok = True
         for sp, shape in zip(flat_specs, flat_shapes):
@@ -100,7 +130,7 @@ def _mesh_resident_layout(mesh: Mesh, flat_specs, flat_shapes,
                 break
             if not hot:
                 dims.append(None)
-            elif shape[hot[0]] % S == 0 and all(d > 0 for d in shape):
+            elif shape[hot[0]] % S == 0:
                 dims.append(hot[0])
             else:
                 ok = False
@@ -108,6 +138,69 @@ def _mesh_resident_layout(mesh: Mesh, flat_specs, flat_shapes,
         if ok:
             return (cand, dims) if S > 1 else ((), [None] * len(flat_specs))
     return None, None
+
+
+def _grouped_resident_layout(mesh: Mesh, flat_specs, flat_shapes,
+                             exclude: tuple[str, ...] = ()):
+    """Per-leaf multi-axis placements for the GROUPED mesh-resident
+    layout, or None when even that cannot align the tilings.
+
+    Where :func:`_mesh_resident_layout` needs every leaf to agree on ONE
+    super-axis, this covers FSDP-style mixed tilings: each leaf may tile
+    any number of dims over any non-``exclude`` axis sets (e.g. dim 1
+    over ``data`` and dim 2 over ``model``), and leaves sharing a
+    placement key get their own :class:`~repro.common.packing.PackGroup`
+    (``packing.pack_spec_grouped``). Disqualifiers — None is returned,
+    callers fall back to the legacy GSPMD assembly: a leaf sharded over
+    an excluded (replica) axis, a tiled dim that does not divide by its
+    axes' device count, or a zero-size leaf (same hoisted guard as the
+    single-axis chooser).
+    """
+    placements = []
+    any_hot = False
+    for sp, shape in zip(flat_specs, flat_shapes):
+        if not all(d > 0 for d in shape):
+            return None
+        pl = []
+        for i, e in enumerate(sp):
+            t = _norm_entry(e)
+            if not t or math.prod(mesh.shape[a] for a in t) == 1:
+                continue                          # effectively replicated
+            if set(t) & set(exclude):
+                return None                       # sharded over replica axes
+            parts = math.prod(mesh.shape[a] for a in t)
+            if shape[i] % parts != 0:
+                return None
+            pl.append((i, t))
+        any_hot = any_hot or bool(pl)
+        placements.append(tuple(pl))
+    if not any_hot:
+        return None          # fully replicated: the single-axis chooser's
+                             # ((), all-None) case already covers it
+    return tuple(placements)
+
+
+def choose_resident_spec(mesh: Mesh, params_abs, flat_specs, flat_shapes,
+                         exclude: tuple[str, ...] = ()):
+    """The layout chooser the sync builders drive: the single-super-axis
+    layout when one aligns every leaf (unchanged PR-3 behavior, incl. the
+    degenerate fully-replicated case), else the GROUPED layout whenever
+    per-leaf placements exist, else None (legacy GSPMD fallback)."""
+    from repro.common.packing import pack_spec, pack_spec_grouped
+
+    axes, shard_dims = _mesh_resident_layout(mesh, flat_specs, flat_shapes,
+                                             exclude=exclude)
+    if axes is not None:
+        S = math.prod(mesh.shape[a] for a in axes) if axes else 1
+        return pack_spec(params_abs, shards=S, shard_dims=shard_dims,
+                         axes=axes)
+    placements = _grouped_resident_layout(mesh, flat_specs, flat_shapes,
+                                          exclude=exclude)
+    if placements is None:
+        return None
+    return pack_spec_grouped(params_abs, placements=placements,
+                             axis_sizes={a: int(mesh.shape[a])
+                                         for a in mesh.axis_names})
 
 
 def _psum_composition(part, psum_axes):
@@ -118,6 +211,63 @@ def _psum_composition(part, psum_axes):
         if axes:
             part = jax.lax.psum(part, axes)
     return part
+
+
+def _push_window_groups(hwa_cfg: HWAConfig, bounds, rings, totals, mean,
+                        count, next_idx, cycle, use_kernel: bool,
+                        with_stride: bool):
+    """Per-group slide-window push of the packed mean — the grouped
+    generalization of ``core.offline.window_update_packed`` (and, when
+    ``with_stride``, ``core.hwa.window_push_packed``): one kernel launch
+    per group over its local ``(I, seg_len)`` ring slice, ONE shared set
+    of counters, and the sparse-window stride cond applied once across
+    all groups. Single-range layouts pass one bound/ring/total and get
+    bit-identical results to the ungrouped helpers."""
+    from repro.kernels.ref import wa_window_update_ref
+
+    I = hwa_cfg.window
+    idx = next_idx
+    full = (count >= I).astype(jnp.float32)
+    new_count = jnp.minimum(count + 1, I)
+    inv = 1.0 / new_count.astype(jnp.float32)
+
+    def do_update(state):
+        rs, ts = state
+        out_r, out_t, out_a = [], [], []
+        for (lo, hi), r, t in zip(bounds, rs, ts):
+            m = jax.lax.slice_in_dim(mean, lo, hi, axis=0)
+            if use_kernel and r.dtype == jnp.float32:
+                from repro.kernels import ops as kops
+                r2, t2, a = kops.wa_window_update_packed(r, t, m, idx,
+                                                         full, inv)
+            else:
+                r2, t2, a = wa_window_update_ref(r, t, m, idx, full, inv)
+            out_r.append(r2)
+            out_t.append(t2)
+            out_a.append(a)
+        return (tuple(out_r), tuple(out_t), tuple(out_a), new_count,
+                jnp.mod(idx + 1, I))
+
+    def skip_update(state):
+        rs, ts = state
+        denom = jnp.maximum(count, 1).astype(jnp.float32)
+        return (tuple(rs), tuple(ts), tuple(t / denom for t in ts), count,
+                idx)
+
+    new_cycle = cycle + 1
+    if not with_stride or hwa_cfg.window_stride == 1:
+        rs2, ts2, avgs, cnt2, nidx2 = do_update((rings, totals))
+    else:
+        take = jnp.mod(new_cycle - 1, hwa_cfg.window_stride) == 0
+        rs2, ts2, avgs, cnt2, nidx2 = jax.lax.cond(
+            take, do_update, skip_update, (rings, totals))
+    if with_stride:
+        # W̿ = W̄ until the window holds an entry (window_push_packed)
+        avgs = tuple(
+            jnp.where(cnt2 == 0,
+                      jax.lax.slice_in_dim(mean, lo, hi, axis=0), a)
+            for (lo, hi), a in zip(bounds, avgs))
+    return rs2, ts2, avgs, cnt2, nidx2, new_cycle
 
 
 def _local_packed_sync(hwa_cfg: HWAConfig, lspec, K: int,
@@ -133,6 +283,14 @@ def _local_packed_sync(hwa_cfg: HWAConfig, lspec, K: int,
     device's segment of the shard-aware layout, assembled here from the
     local leaf shards alone (zero collectives by construction).
 
+    ``lspec`` may be a GROUPED local layout (mixed/FSDP tilings): ``ring``
+    and ``total`` then arrive as per-group buffer tuples (each group's
+    range shards over its own super-axis, so one array cannot carry them
+    all), the window push runs one kernel launch per group on its local
+    slice, and the weight all-reduce still happens ONCE over the
+    concatenated local partials. Single-range layouts pass bare buffers
+    and behave exactly as before.
+
     ``psum_axes`` is the topology's grouped reduction composition
     (``SyncTopology.psum_groups()``): one group — the flat weight
     all-reduce — or inner-then-outer for the two-level tree, where the
@@ -145,60 +303,75 @@ def _local_packed_sync(hwa_cfg: HWAConfig, lspec, K: int,
     disappears and the whole sync fuses into one kernel launch.
     """
     from repro.common.packing import pack_stacked, unpack
-    from repro.core.hwa import window_push_packed
-    from repro.core.offline import WindowState, window_update_packed
     from repro.core.online import broadcast_to_replicas, halving_sum_axis0
 
     I = hwa_cfg.window
-    sbuf = pack_stacked(inner, lspec)            # (K_local, seg_len) f32
+    grouped = isinstance(ring, tuple)
+    rings = ring if grouped else (ring,)
+    totals = total if grouped else (total,)
+    gt = lspec.group_table()       # local view: one segment per group
+    bounds = [(g.offset, g.offset + g.seg_len) for g in gt]
+    sbuf = pack_stacked(inner, lspec)            # (K_local, P_local) f32
     k_local = sbuf.shape[0]
     collective = any(psum_axes)
-    fused = (use_kernel and not collective and ring.dtype == jnp.float32
+    ring_f32 = all(r.dtype == jnp.float32 for r in rings)
+    fused = (use_kernel and not collective and ring_f32
              and (not with_stride or hwa_cfg.window_stride == 1))
     if fused:
-        # whole sync in ONE launch on the local slice: K-mean + window
-        # push, (K+2) reads + 3 writes, W̄ read back from the ring slot
+        # whole sync in ONE launch per group on its local slice: K-mean +
+        # window push, (K+2) reads + 3 writes, W̄ read back from the ring
+        # slot — ≤ n_groups pallas_calls total
         from repro.kernels import ops as kops
         idx = next_idx
         full = (count >= I).astype(jnp.float32)
         new_count = jnp.minimum(count + 1, I)
-        ring2, total2, avg = kops.hwa_sync_packed(
-            sbuf, ring, total, idx, full,
-            1.0 / new_count.astype(jnp.float32))
-        mean = jax.lax.dynamic_index_in_dim(ring2, idx, keepdims=False)
-        ws2 = WindowState(ring=ring2, total=total2, count=new_count,
-                          next_idx=jnp.mod(idx + 1, I), window=I,
-                          kind="ring", spec=lspec)
+        inv = 1.0 / new_count.astype(jnp.float32)
+        rs2, ts2, means, avgs = [], [], [], []
+        for (lo, hi), r, t in zip(bounds, rings, totals):
+            sb = jax.lax.slice_in_dim(sbuf, lo, hi, axis=1)
+            r2, t2, a = kops.hwa_sync_packed(sb, r, t, idx, full, inv)
+            means.append(jax.lax.dynamic_index_in_dim(r2, idx,
+                                                      keepdims=False))
+            rs2.append(r2)
+            ts2.append(t2)
+            avgs.append(a)
+        new_nidx = jnp.mod(idx + 1, I)
         new_cycle = cycle + 1
     else:
-        if use_kernel and k_local == 2:
+        if use_kernel and k_local == 2 and len(gt) == 1:
             # the kernel's row reduction is jnp.sum order — a single IEEE
             # add for 2 rows, so it keeps the halving/composition bits;
             # for k_local > 2 it would NOT (XLA's order is neither
             # sequential nor pairwise, measured), so the canonical
             # halving sum below takes over to preserve the 0-ULP
-            # flat↔tree parity contract (docs/ARCHITECTURE.md §4)
+            # flat↔tree parity contract (docs/ARCHITECTURE.md §4).
+            # Grouped layouts always take the halving sum (same single
+            # IEEE add for 2 rows, bit-identical) so the launch budget
+            # stays ≤ n_groups — the per-group window updates.
             from repro.kernels import ops as kops
             part = kops.online_mean_packed(sbuf, inv_k=1.0 / K)
         else:
             part = halving_sum_axis0(sbuf) * (1.0 / K)
-        # THE weight all-reduce(s): pre-scaled partial sums keep the
-        # result bit-identical to the fused kernel's sum×(1/K) for
-        # power-of-two K, flat psum and grouped composition alike
+        # THE weight all-reduce(s): computed over the CONCATENATED local
+        # buffer (all groups at once) so the grouped layout still costs
+        # exactly one collective per topology level; pre-scaled partial
+        # sums keep the result bit-identical to the fused kernel's
+        # sum×(1/K) for power-of-two K, flat psum and grouped composition
+        # alike
         mean = _psum_composition(part, psum_axes)
-        ws = WindowState(ring=ring, total=total, count=count,
-                         next_idx=next_idx, window=I, kind="ring",
-                         spec=lspec)
-        if with_stride:
-            ws2, avg, new_cycle = window_push_packed(
-                hwa_cfg, mean, ws, cycle, use_kernel=use_kernel)
-        else:
-            ws2, avg = window_update_packed(ws, mean, use_kernel=use_kernel)
-            new_cycle = cycle + 1
+        rs2, ts2, avgs, new_count, new_nidx, new_cycle = \
+            _push_window_groups(hwa_cfg, bounds, rings, totals, mean,
+                                count, next_idx, cycle, use_kernel,
+                                with_stride)
+    if fused:
+        mean = (jnp.concatenate(means) if len(means) > 1 else means[0])
+    avg = (jnp.concatenate(list(avgs)) if len(avgs) > 1 else avgs[0])
     outer = unpack(mean, lspec)                  # local leaf views, free
     wa = unpack(avg, lspec)
     new_inner = broadcast_to_replicas(outer, k_local)
-    return (new_inner, ws2.ring, ws2.total, ws2.count, ws2.next_idx, wa,
+    ring_out = tuple(rs2) if grouped else rs2[0]
+    total_out = tuple(ts2) if grouped else ts2[0]
+    return (new_inner, ring_out, total_out, new_count, new_nidx, wa,
             new_cycle)
 
 
@@ -206,7 +379,9 @@ def _local_inner_sync(lspec, pod_size: int,
                       psum_axes: tuple[tuple[str, ...], ...], inner):
     """Per-device body of the two-level tree's INNER (pod-local) sync.
 
-    Same fully-manual setting as :func:`_local_packed_sync`, but the
+    Same fully-manual setting as :func:`_local_packed_sync` (grouped
+    local layouts included — ``pack_stacked``/``unpack`` are group-aware
+    and the body touches no window buffers), but the
     reduction stops at the pod boundary: one psum whose
     ``replica_groups`` pair only same-pod devices, so the lowered HLO
     crosses NOTHING but the inner axis (audited per level by

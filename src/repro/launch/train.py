@@ -33,11 +33,14 @@ from repro.train.trainer import TrainConfig, Trainer, lm_task
 
 
 def run_mesh_native(args) -> dict:
-    """Train with the shard_map HWA steps on a (replica=K, data, model=1)
-    mesh built from whatever devices are available — or, with
+    """Train with the shard_map HWA steps on a (replica=K, data,
+    model=--tp) mesh built from whatever devices are available — or, with
     ``--sync-tree two-level``, on a pod-carved (pod, replica, data,
-    model=1) mesh where only every ``--outer-every``-th sync crosses
+    model=--tp) mesh where only every ``--outer-every``-th sync crosses
     pods (the rest are pod-internal restarts with zero cross-pod bytes).
+    ``--fsdp --tp 2`` exercises the FSDP mixed data×model tilings whose
+    sync runs through the GROUPED mesh-resident packed layout (per-group
+    window buffers; no legacy GSPMD assembly).
 
     Inter-replica traffic happens only inside the sync steps — the
     paper's H-fold communication amortization (×H₂ more for cross-pod
@@ -58,10 +61,11 @@ def run_mesh_native(args) -> dict:
 
     n_dev = len(jax.devices())
     K = args.k
-    if n_dev % K or n_dev // K < 1:
+    tp = max(args.tp, 1)
+    if n_dev % (K * tp) or n_dev // (K * tp) < 1:
         raise SystemExit(
-            f"--mesh-native needs a device count divisible by K={K} "
-            f"(have {n_dev}; set XLA_FLAGS="
+            f"--mesh-native needs a device count divisible by K×tp="
+            f"{K * tp} (have {n_dev}; set XLA_FLAGS="
             "--xla_force_host_platform_device_count=<n>)")
     tree = args.sync_tree == "two-level"
     if tree:
@@ -69,15 +73,16 @@ def run_mesh_native(args) -> dict:
         if K % pods or K // pods < 1:
             raise SystemExit(f"--sync-tree two-level needs K divisible by "
                              f"--pods (K={K}, pods={pods})")
-        mesh = make_mesh((pods, K // pods, n_dev // K, 1),
+        mesh = make_mesh((pods, K // pods, n_dev // (K * tp), tp),
                          ("pod", "replica", "data", "model"))
         replica_axis = ("pod", "replica")
         topo = TwoLevel("replica", "pod", outer_every=args.outer_every)
     else:
-        mesh = make_mesh((K, n_dev // K, 1), ("replica", "data", "model"))
+        mesh = make_mesh((K, n_dev // (K * tp), tp),
+                         ("replica", "data", "model"))
         replica_axis = "replica"
         topo = None
-    rules = make_tp_rules(mesh, replica_axis=replica_axis)
+    rules = make_tp_rules(mesh, replica_axis=replica_axis, fsdp=args.fsdp)
     cfg = get_smoke_config(args.arch)
     if cfg.family in ("vlm", "audio"):
         raise SystemExit(f"{args.arch}: mesh-native driver supports LM "
@@ -102,9 +107,10 @@ def run_mesh_native(args) -> dict:
     from repro.launch.steps import _mk_optimizer
     opt = _mk_optimizer("sgd")   # must match the compiled step's optimizer
     inner_opt = jax.vmap(opt.init)(inner)
+    from repro.common.packing import window_buffers
     spec = sync.pack_spec       # window state is packed: one (I, P) ring
-    ring = jnp.zeros((args.window, spec.padded), jnp.float32)
-    total = jnp.zeros((spec.padded,), jnp.float32)
+    # (or, under FSDP's grouped mixed-tiling layout, one ring per group)
+    ring, total = window_buffers(spec, args.window)
     count = nidx = cycle = jnp.zeros((), jnp.int32)
 
     train_c = train.lower(mesh).compile()
@@ -184,6 +190,15 @@ def main():
     ap.add_argument("--pods", type=int, default=0,
                     help="pod count for --sync-tree two-level "
                          "(0 = auto: 2)")
+    ap.add_argument("--fsdp", action="store_true",
+                    help="mesh-native only: FSDP rule table (params + "
+                         "moments sharded over the data axes too) — the "
+                         "mixed data/model tilings the GROUPED "
+                         "mesh-resident packed sync covers")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="mesh-native only: model (tensor-parallel) axis "
+                         "size; with --fsdp this yields true mixed "
+                         "data×model leaf tilings")
     args = ap.parse_args()
 
     if args.mesh_native:

@@ -24,7 +24,13 @@ Verifies the tentpole properties of mesh-native HWA on a (2,2,2)
      cross-pod; outer sync: exactly one cross-pod all-reduce on top);
      the tuple-axis train step is collective-free over pod AND replica;
      and the legacy GSPMD fallback is a hard error on this CPU mesh
-     unless REPRO_ALLOW_LEGACY_ASSEMBLY=1.
+     unless REPRO_ALLOW_LEGACY_ASSEMBLY=1;
+  6. FSDP mixed tilings (fsdp=True rules: data-only, model-only AND
+     data×model leaves at once) sync through the GROUPED mesh-resident
+     layout — per-group window-buffer tuples, ≤ n_groups Pallas
+     launches, still exactly one replica all-reduce and zero assembly
+     collectives — bit-identical to the per-leaf reference, with no
+     legacy-assembly error.
 
 All oracles are computed on HOST-materialized copies: eagerly packing
 DISTRIBUTED leaves (a concat across differently-sharded operands) is
@@ -273,6 +279,54 @@ finally:
         os.environ.pop("REPRO_ALLOW_LEGACY_ASSEMBLY", None)
     else:
         os.environ["REPRO_ALLOW_LEGACY_ASSEMBLY"] = _prior_hatch
+
+# ---- FSDP mixed tilings: the GROUPED mesh-resident packed sync ------------
+# fsdp=True rules shard "embed" dims over data too, so leaves tile over
+# data-only, model-only, AND data×model jointly — no single packed
+# super-axis covers them, and before the grouped layout this tree fell
+# back to the legacy GSPMD assembly (the hard error asserted above). Now
+# choose_resident_spec returns a grouped PackSpec (one PackGroup per
+# placement key), the window state rides as per-group buffer tuples, the
+# sync costs one kernel launch per group and STILL exactly one replica
+# all-reduce with zero assembly collectives, and every result is
+# bit-identical to the per-leaf reference (same math, different layout).
+from repro.common.packing import merge_groups, window_buffers
+
+rules_f = make_tp_rules(mesh, replica_axis="replica", fsdp=True)
+sync_f = make_mesh_hwa_sync_step(lm, rules_f, hwa_cfg_k)   # builds: no
+check("fsdp sync: grouped layout chosen, no legacy-assembly error "     # raise
+      f"(n_groups={sync_f.pack_spec.n_groups})",
+      sync_f.pack_spec.is_grouped and sync_f.pack_spec.n_groups >= 2)
+spec_f = sync_f.pack_spec
+sync_fc = sync_f.lower(mesh).compile()
+ring_f, total_f = window_buffers(spec_f, hwa_cfg_k.window)
+with use_mesh(mesh):
+    (fs_inner, fs_ring, fs_total, fs_count, fs_nidx, fs_wa,
+     fs_cycle) = sync_fc(jax.tree.map(jnp.array, a_host2), ring_f, total_f,
+                         zero, zero, zero)
+check("fsdp sync: W̿ bit-equal to per-leaf reference",
+      tree_equal(fs_wa, leaf_wa))
+check("fsdp sync: restart bit-equal to single-device fused ring slot",
+      tree_equal(jax.tree.map(lambda x: x[0], fs_inner),
+                 unpack(ring1[0], spec1)))
+fs_ring_h = to_host(fs_ring)
+check("fsdp sync: merged group ring slot bit-equal",
+      tree_equal(unpack(merge_groups(tuple(r[0] for r in fs_ring_h),
+                                     spec_f), spec_f),
+                 unpack(ring1[0], spec1)))
+check("fsdp sync: window advanced",
+      int(fs_count) == 1 and int(fs_cycle) == 1)
+audit_f = sync_collective_audit(sync_fc.as_text(), mesh,
+                                n_groups=spec_f.n_groups)
+check("fsdp sync: grouped audit ok (one replica all-reduce, zero "
+      f"assembly crossings; replica="
+      f"{[op for op, _ in audit_f['replica']]})",
+      audit_f["grouped_sync_ok"])
+n_launch_f = count_pallas_calls(
+    jax.make_jaxpr(sync_f.fn)(*sync_f.abstract_args))
+check(f"fsdp sync: pallas launches ≤ n_groups "
+      f"({n_launch_f} ≤ {spec_f.n_groups})",
+      1 <= n_launch_f <= spec_f.n_groups)
 
 # vmap-path train step, for contrast, is *allowed* replica traffic (GSPMD
 # may or may not insert it) — we only report it, the guarantee is the

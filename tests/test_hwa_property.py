@@ -4,6 +4,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# hypothesis-heavy: excluded from the CI tier1 PR lane (-m "not slow");
+# the nightly full lane runs it
+pytestmark = pytest.mark.slow
+
 pytest.importorskip("hypothesis", reason="hypothesis not installed "
                     "(see requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st

@@ -49,6 +49,7 @@ def test_pack_unpack_roundtrip(seed):
                                       np.asarray(b, np.float32))
 
 
+@pytest.mark.slow
 def test_roundtrip_property():
     """Hypothesis sweep over arbitrary pytrees (shapes incl. empty/scalar,
     float dtypes that embed exactly in the f32 buffer)."""
@@ -215,6 +216,316 @@ def test_pack_spec_rejects_indivisible_shard_dim():
     with pytest.raises(ValueError, match="cannot shard"):
         # bias is (7,): 7 % 4 != 0
         pack_spec(tree, shards=4, shard_dims=[0, None, None, None])
+
+
+# ------------------------------------------------------ grouped layout
+#
+# Mixed (FSDP-style) tilings: leaves shard over DIFFERENT axis sets, some
+# over several dims at once. No single super-axis aligns them, so the
+# grouped layout gives each placement key its own contiguous range
+# (PackGroup) — its own shard count and super-axis — and replicated
+# leaves a shards==1 range stored once. Pure layout math, no mesh needed.
+
+GROUPED_SIZES = {"data": 2, "model": 3}
+
+
+def grouped_tree(seed=0):
+    """One leaf per placement class: 2-dim data×model tile, data-only,
+    model-only, replicated vector, replicated scalar."""
+    ks = jax.random.split(jax.random.key(seed), 5)
+    return {"fs": jax.random.normal(ks[0], (4, 6)),    # data × model
+            "emb": jax.random.normal(ks[1], (8, 5)),   # dim 0 over data
+            "head": jax.random.normal(ks[2], (5, 6)),  # dim 1 over model
+            "bias": jax.random.normal(ks[3], (7,)),    # replicated
+            "scale": jax.random.normal(ks[4], ())}     # replicated
+
+
+# flatten order: bias, emb, fs, head, scale
+GROUPED_PLACEMENTS = [
+    (),
+    ((0, ("data",)),),
+    ((0, ("data",)), (1, ("model",))),
+    ((1, ("model",)),),
+    (),
+]
+
+
+def grouped_spec(tree, align=8):
+    from repro.common.packing import pack_spec_grouped
+    return pack_spec_grouped(tree, align=align,
+                             placements=GROUPED_PLACEMENTS,
+                             axis_sizes=GROUPED_SIZES)
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_grouped_layout_roundtrip(seed):
+    tree = grouped_tree(seed)
+    spec = grouped_spec(tree)
+    gt = spec.group_table()
+    assert spec.is_grouped and spec.n_groups == 4
+    assert spec.padded == sum(g.padded for g in gt)
+    assert all(g.seg_len % spec.align == 0 for g in gt)
+    # group ranges are contiguous and ordered by first appearance
+    assert [g.offset for g in gt] == \
+        [sum(h.padded for h in gt[:i]) for i in range(len(gt))]
+    buf = pack(tree, spec)
+    assert buf.shape == (spec.padded,)
+    back = unpack(buf, spec)
+    flat = jax.tree.leaves(tree)
+    for a, b in zip(flat, jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    for i in range(spec.n_leaves):
+        np.testing.assert_array_equal(
+            np.asarray(unpack_leaf(buf, spec, i), np.float32),
+            np.asarray(flat[i], np.float32))
+    stacked = jax.tree.map(lambda x: jnp.stack([x, 3 * x]), tree)
+    sbuf = pack_stacked(stacked, spec)
+    np.testing.assert_array_equal(np.asarray(sbuf[0]), np.asarray(buf))
+    np.testing.assert_array_equal(np.asarray(sbuf[1]), 3 * np.asarray(buf))
+
+
+def test_grouped_segments_are_local_packs():
+    """THE mesh-resident invariant, grouped: for every device coordinate
+    (c_data, c_model), packing the device's LOCAL leaf blocks under
+    spec.local_spec() reproduces exactly its segment of every group of
+    the global pack — multi-dim tiles included."""
+    tree = grouped_tree()
+    spec = grouped_spec(tree)
+    lspec = spec.local_spec()
+    gt = spec.group_table()
+    assert lspec.is_grouped and all(g.shards == 1
+                                    for g in lspec.group_table())
+    assert lspec.padded == sum(g.seg_len for g in gt)
+    buf = np.asarray(pack(tree, spec))
+    flat, treedef = jax.tree.flatten(tree)
+    b, e, f, h, s = flat            # bias, emb, fs, head, scale
+    nd, nm = GROUPED_SIZES["data"], GROUPED_SIZES["model"]
+    for cd in range(nd):
+        for cm in range(nm):
+            local = jax.tree.unflatten(treedef, [
+                b,
+                e[cd * (8 // nd):(cd + 1) * (8 // nd)],
+                f[cd * (4 // nd):(cd + 1) * (4 // nd),
+                  cm * (6 // nm):(cm + 1) * (6 // nm)],
+                h[:, cm * (6 // nm):(cm + 1) * (6 // nm)],
+                s])
+            lbuf = np.asarray(pack(local, lspec))
+            # segment index per group: row-major over the group's axes
+            seg = {(): 0, ("data",): cd, ("model",): cm,
+                   ("data", "model"): cd * nm + cm}
+            want = np.concatenate([
+                buf[g.offset + seg[g.axes] * g.seg_len:
+                    g.offset + (seg[g.axes] + 1) * g.seg_len]
+                for g in gt])
+            np.testing.assert_array_equal(lbuf, want)
+
+
+def test_grouped_layout_update_bitwise_equals_contiguous():
+    """The same elementwise update on the grouped and contiguous layouts
+    yields bit-identical leaf views (packing is layout-only)."""
+    tree = grouped_tree()
+    spec_c = pack_spec(tree, align=8)
+    spec_g = grouped_spec(tree)
+    new = grouped_tree(9)
+    outs = {}
+    for name, spec in [("contig", spec_c), ("grouped", spec_g)]:
+        ring = jnp.zeros((3, spec.padded))
+        total = pack(tree, spec)
+        ring2, total2, avg = kref.wa_window_update_ref(
+            ring, total, pack(new, spec), 1, 0.0, 0.5)
+        outs[name] = (unpack(ring2[1], spec), unpack(total2, spec),
+                      unpack(avg, spec))
+    for a, b in zip(jax.tree.leaves(outs["contig"]),
+                    jax.tree.leaves(outs["grouped"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_grouped_repack_json_and_split_roundtrip():
+    from repro.common.packing import (merge_groups, repack, spec_from_json,
+                                      spec_to_json, split_groups)
+    tree = grouped_tree()
+    spec_c = pack_spec(tree, align=8)
+    spec_g = grouped_spec(tree)
+    buf = pack(tree, spec_g)
+    # grouped <-> contiguous, both directions, bit-exact
+    np.testing.assert_array_equal(np.asarray(repack(buf, spec_g, spec_c)),
+                                  np.asarray(pack(tree, spec_c)))
+    np.testing.assert_array_equal(
+        np.asarray(repack(pack(tree, spec_c), spec_c, spec_g)),
+        np.asarray(buf))
+    # grouped <-> single-super-axis shard-aware layout
+    spec_s = pack_spec(tree, align=8, shards=2,
+                       shard_dims=[None, 0, 0, None, None],
+                       axes=("data",))
+    np.testing.assert_array_equal(
+        np.asarray(repack(repack(buf, spec_g, spec_s), spec_s, spec_c)),
+        np.asarray(pack(tree, spec_c)))
+    # ring-style lead dims survive
+    ring = jnp.stack([buf, 2 * buf])
+    np.testing.assert_array_equal(
+        np.asarray(repack(ring, spec_g, spec_c)[1]),
+        2 * np.asarray(pack(tree, spec_c)))
+    # JSON round-trip keeps groups and multi-dim tiles
+    re = spec_from_json(spec_to_json(spec_g))
+    assert re.same_layout(spec_g)
+    assert re.group_table() == spec_g.group_table()
+    assert any(ls.tiles is not None for ls in re.leaves)
+    np.testing.assert_array_equal(
+        np.asarray(unpack_leaf(buf, re, 2)),
+        np.asarray(jax.tree.leaves(tree)[2]))
+    # per-group runtime views merge back bit-exactly
+    parts = split_groups(buf, spec_g)
+    assert len(parts) == spec_g.n_groups
+    np.testing.assert_array_equal(np.asarray(merge_groups(parts, spec_g)),
+                                  np.asarray(buf))
+
+
+def test_grouped_window_buffers_match_contract():
+    from repro.common.packing import window_buffers
+    tree = grouped_tree()
+    spec_g = grouped_spec(tree)
+    ring, total = window_buffers(spec_g, 3)
+    assert isinstance(ring, tuple) and len(ring) == spec_g.n_groups
+    for r, t, g in zip(ring, total, spec_g.group_table()):
+        assert r.shape == (3, g.padded) and t.shape == (g.padded,)
+    spec_c = pack_spec(tree, align=8)
+    ring_c, total_c = window_buffers(spec_c, 3)
+    assert ring_c.shape == (3, spec_c.padded)
+    assert total_c.shape == (spec_c.padded,)
+
+
+def test_pack_spec_grouped_rejections():
+    from repro.common.packing import pack_spec_grouped
+    tree = grouped_tree()
+    with pytest.raises(ValueError, match="cannot tile"):
+        # bias is (7,): 7 % 2 != 0
+        pack_spec_grouped(tree, placements=[((0, ("data",)),), (), (), (),
+                                            ()],
+                          axis_sizes=GROUPED_SIZES)
+    with pytest.raises(ValueError, match="ascending"):
+        pack_spec_grouped(
+            tree,
+            placements=[(), (), ((1, ("model",)), (0, ("data",))), (), ()],
+            axis_sizes=GROUPED_SIZES)
+
+
+def test_grouped_window_state_checkpoint_cross_layout(tmp_path):
+    """A grouped (per-group tuple) window state saves to the canonical
+    single-buffer form and loads bit-exactly into a contiguous template,
+    and a contiguous save loads into a grouped (tuple-buffer) template —
+    grouped↔single-axis↔per-leaf migrations all repack, never copy-cast.
+    """
+    from repro.checkpoint import load_window_state, save_window_state
+    from repro.common.packing import repack, split_groups
+    from repro.core.offline import WindowState
+
+    p = grouped_tree()
+    ws = window_init(p, 3)
+    for t in range(4):
+        ws, _ = window_update(ws, grouped_tree(20 + t))
+    spec_g = grouped_spec(p, align=8)
+    ring_g = split_groups(repack(ws.ring, ws.spec, spec_g), spec_g)
+    total_g = split_groups(repack(ws.total, ws.spec, spec_g), spec_g)
+    ws_g = WindowState(ring=ring_g, total=total_g, count=ws.count,
+                       next_idx=ws.next_idx, window=ws.window,
+                       kind=ws.kind, spec=spec_g)
+    path = str(tmp_path / "ws_grouped.npz")
+    save_window_state(path, ws_g)
+    back = load_window_state(path, window_init(p, 3))
+    np.testing.assert_array_equal(np.asarray(back.ring), np.asarray(ws.ring))
+    np.testing.assert_array_equal(np.asarray(back.total),
+                                  np.asarray(ws.total))
+    assert int(back.count) == int(ws.count)
+    # contiguous save -> grouped tuple template
+    path_c = str(tmp_path / "ws_contig.npz")
+    save_window_state(path_c, ws)
+    back_g = load_window_state(path_c, ws_g)
+    assert isinstance(back_g.ring, tuple)
+    for a, b in zip(back_g.ring, ring_g):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(back_g.total, total_g):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # per-leaf (pre-packing) checkpoint -> grouped template
+    from repro.checkpoint import save_pytree
+    old_ring = {k: np.stack([np.asarray(unpack(ws.ring[r], ws.spec)[k])
+                             for r in range(3)]) for k in p}
+    old_total = {k: np.asarray(unpack(ws.total, ws.spec)[k]) for k in p}
+    path_l = str(tmp_path / "ws_per_leaf.npz")
+    save_pytree(path_l, {"ring": old_ring, "total": old_total,
+                         "count": ws.count, "next_idx": ws.next_idx})
+    back_l = load_window_state(path_l, ws_g)
+    for a, b in zip(back_l.ring, ring_g):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------ layout choosers
+
+
+def _fake_mesh(shape: dict):
+    import types
+    return types.SimpleNamespace(shape=shape, axis_names=tuple(shape))
+
+
+def test_mesh_resident_layout_rejects_zero_size_leaves():
+    """Regression (hoisted guard): a ZERO-SIZE REPLICATED leaf used to
+    slip through the chooser — the `all(d > 0)` check only ran for
+    sharded leaves — and break the segment-major invariant downstream.
+    Both choosers must refuse the whole tree."""
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.sync.packed import (_grouped_resident_layout,
+                                          _mesh_resident_layout)
+    mesh = _fake_mesh({"data": 2, "model": 2})
+    specs = [P("model"), P()]
+    shapes = [(8,), (0, 5)]
+    assert _mesh_resident_layout(mesh, specs, shapes) == (None, None)
+    assert _grouped_resident_layout(mesh, specs, shapes) is None
+    # control: dropping the zero-size leaf re-qualifies the same tree
+    axes, dims = _mesh_resident_layout(mesh, specs[:1], shapes[:1])
+    assert axes == ("model",) and dims == [0]
+    # the degenerate fully-replicated (shards==1) layout stays available
+    # — contiguous packing supports empty leaves, only SHARDED segment
+    # layouts must refuse them
+    axes, dims = _mesh_resident_layout(mesh, [P(), P()], [(4,), (0, 5)])
+    assert axes == () and dims == [None, None]
+
+
+def test_grouped_resident_layout_placements():
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.sync.packed import _grouped_resident_layout
+    mesh = _fake_mesh({"replica": 2, "data": 2, "model": 2})
+    specs = [P("data"), P(None, "model"), P("data", "model"), P()]
+    shapes = [(4,), (3, 6), (4, 6), (5,)]
+    pl = _grouped_resident_layout(mesh, specs, shapes,
+                                  exclude=("replica",))
+    assert pl == (((0, ("data",)),), ((1, ("model",)),),
+                  ((0, ("data",)), (1, ("model",))), ())
+    # a leaf sharded over an excluded (replica) axis disqualifies
+    assert _grouped_resident_layout(mesh, [P("replica")], [(4,)],
+                                    exclude=("replica",)) is None
+    # an indivisible tiled dim disqualifies
+    assert _grouped_resident_layout(mesh, [P("model")], [(7,)]) is None
+    # fully-replicated trees are the single-axis chooser's job
+    assert _grouped_resident_layout(mesh, [P()], [(4,)]) is None
+
+
+def test_choose_resident_spec_prefers_single_axis():
+    """Uniform tilings keep the PR-3 single-super-axis layout (bit- and
+    layout-compatible with existing checkpoints); only genuinely mixed
+    tilings get the grouped one."""
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.sync.packed import choose_resident_spec
+    mesh = _fake_mesh({"data": 2, "model": 2})
+    abs_tree = {"a": jax.ShapeDtypeStruct((8, 4), jnp.float32),
+                "b": jax.ShapeDtypeStruct((6,), jnp.float32)}
+    uniform = choose_resident_spec(mesh, abs_tree,
+                                   [P(None, "model"), P()],
+                                   [(8, 4), (6,)])
+    assert not uniform.is_grouped and uniform.axes == ("model",)
+    mixed = choose_resident_spec(mesh, abs_tree,
+                                 [P("data", "model"), P("model")],
+                                 [(8, 4), (6,)])
+    assert mixed.is_grouped and mixed.n_groups == 2
 
 
 # ----------------------------------------- 0 ULP vs per-leaf formulation

@@ -150,6 +150,7 @@ except ImportError:                       # pragma: no cover
     HAVE_HYPOTHESIS = False
 
 if HAVE_HYPOTHESIS:
+    @pytest.mark.slow
     @given(st.sampled_from([2, 4, 8, 16]), st.integers(0, 1000))
     @settings(max_examples=25, deadline=None)
     def test_two_level_grouped_mean_property(k, seed):

@@ -1,0 +1,102 @@
+#!/usr/bin/env python
+"""Bench regression guard: BENCH_kernels.json vs committed thresholds.
+
+BENCH_kernels.json is the cross-PR perf trajectory (written by ``make
+bench-kernels`` / ``make bench-sync``). Its WALL TIMES are machine- and
+load-dependent, so this guard deliberately ignores them; what it pins
+are the STRUCTURAL claims the docs and ROADMAP make — kernel-launch
+counts, collective counts, assembly bytes, padding waste, cross-pod
+traffic ratios — which must hold on any machine, smoke lane included.
+
+``benchmarks/thresholds.json`` holds two sections:
+
+- ``required``: dotted key paths that must exist and be numbers
+  (schema stability — a renamed metric fails loudly instead of silently
+  vanishing from the trajectory);
+- ``bounds``: ``{path: {"min": x?, "max": y?}}`` numeric guards.
+
+Paths are dot-joined; a literal key containing dots (``sync/tree``)
+wins over path splitting. Exit 0 iff every check passes; offending
+entries are printed. Run via ``make bench-check`` (the CI bench-smoke
+job runs it against a fresh ``make bench-kernels``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH = os.path.join(ROOT, "BENCH_kernels.json")
+THRESHOLDS = os.path.join(ROOT, "benchmarks", "thresholds.json")
+
+
+def lookup(data, path: str):
+    """Resolve a dotted path; literal keys with dots (e.g. 'sync/tree'
+    block names) are matched greedily before splitting."""
+    node = data
+    rest = path
+    while rest:
+        if not isinstance(node, dict):
+            raise KeyError(path)
+        if rest in node:
+            return node[rest]
+        # longest prefix of `rest` that is a literal key
+        best = None
+        for key in node:
+            pref = key + "."
+            if rest.startswith(pref) and \
+                    (best is None or len(key) > len(best)):
+                best = key
+        if best is None:
+            raise KeyError(path)
+        node, rest = node[best], rest[len(best) + 1:]
+    return node
+
+
+def main() -> int:
+    errors = []
+    try:
+        with open(BENCH) as f:
+            data = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"FAIL BENCH_kernels.json unreadable: {e}")
+        return 1
+    with open(THRESHOLDS) as f:
+        th = json.load(f)
+
+    for path in th.get("required", []):
+        try:
+            v = lookup(data, path)
+        except KeyError:
+            errors.append(f"missing required metric: {path}")
+            continue
+        if not isinstance(v, (int, float)) or isinstance(v, bool):
+            errors.append(f"required metric {path} is not a number: {v!r}")
+
+    for path, bound in th.get("bounds", {}).items():
+        try:
+            v = lookup(data, path)
+        except KeyError:
+            errors.append(f"missing bounded metric: {path}")
+            continue
+        if not isinstance(v, (int, float)) or isinstance(v, bool):
+            errors.append(f"bounded metric {path} is not a number: {v!r}")
+            continue
+        if "min" in bound and v < bound["min"]:
+            errors.append(f"{path} = {v} < min {bound['min']}")
+        if "max" in bound and v > bound["max"]:
+            errors.append(f"{path} = {v} > max {bound['max']}")
+
+    if errors:
+        print(f"FAIL bench-check ({len(errors)} problem(s)):")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    n = len(th.get("required", [])) + len(th.get("bounds", {}))
+    print(f"OK bench-check: {n} structural thresholds hold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
