@@ -8,7 +8,7 @@ export PYTHONPATH := src:$(PYTHONPATH)
 PYTEST_ARGS ?=
 
 .PHONY: test test-fast spmd mesh-hwa mesh-hwa-fsdp bench bench-kernels \
-	bench-sync bench-check train-smoke docs-check
+	bench-sync bench-check train-smoke docs-check hwa-lint hwa-lint-smoke
 
 # tier-1: docs sanity + the full CPU suite (SPMD checks run in their own
 # subprocesses)
@@ -61,3 +61,16 @@ bench-sync:
 # times are machine-dependent and deliberately unchecked
 bench-check:
 	$(PY) tools/bench_check.py
+
+# static SPMD contract checker: compile the full bundle matrix (flat /
+# two-level / grouped-FSDP sync, inner sync, train steps; 1-device and
+# (2,2,2) test meshes) and check each lowered jaxpr + post-SPMD HLO
+# against its declarative contract — collectives, Pallas-launch budgets,
+# donation/aliasing, dtype discipline, manual-subgroup hazards.
+# Writes the machine-readable report to lint_report.json.
+hwa-lint:
+	$(PY) tools/hwa_lint.py --json lint_report.json
+
+# PR-lane subset (the CI lint job; REPRO_LINT_SMOKE=1 selects the same)
+hwa-lint-smoke:
+	$(PY) tools/hwa_lint.py --smoke --json lint_report.json

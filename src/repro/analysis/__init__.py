@@ -1,0 +1,60 @@
+"""Static analysis over lowered jaxprs and post-SPMD HLO.
+
+Layers:
+
+- :mod:`~repro.analysis.hlo_text`    — HLO-text parsing primitives
+  (instructions, replica groups, aliasing config, dtype tokens).
+- :mod:`~repro.analysis.collectives` — collective census, axis-crossing
+  classification, the sync audit, roofline terms.
+- :mod:`~repro.analysis.contracts`   — the declarative per-bundle
+  contract schema (pure data, importable without jax).
+- :mod:`~repro.analysis.passes`      — the checks: collectives, launch
+  budget, donation/aliasing, dtype discipline, manual-subgroup hazards.
+- :mod:`~repro.analysis.report`      — machine-readable JSON report.
+- :mod:`~repro.analysis.lint`        — the bundle×mesh matrix runner
+  behind ``tools/hwa_lint.py`` / ``make hwa-lint``.
+
+``repro.launch.hlo`` remains the stable facade for the pre-existing
+public names (ports of the old monolith); new code imports from here.
+"""
+from repro.analysis.collectives import (HBM_BW, ICI_BW, PEAK_FLOPS,
+                                        CollectiveStats,
+                                        check_collective_contract,
+                                        collective_stats,
+                                        collectives_crossing_axis,
+                                        result_bytes, roofline_terms,
+                                        sync_collective_audit)
+from repro.analysis.contracts import (DEFAULT_CONTRACT, BundleContract,
+                                      CollectiveContract, DonationPolicy,
+                                      DtypePolicy, HazardPolicy,
+                                      LaunchBudget, sync_contract,
+                                      train_contract)
+from repro.analysis.hlo_text import (HloInstruction, axis_coords,
+                                     collective_instructions,
+                                     count_pallas_calls, dtype_token,
+                                     iter_instructions,
+                                     parse_input_output_alias,
+                                     parse_instruction,
+                                     parse_lowered_donations,
+                                     parse_replica_groups)
+from repro.analysis.passes import (PASS_NAMES, BundleArtifacts, PassResult,
+                                   manual_loop_hazards, run_passes)
+from repro.analysis.report import (build_report, bundle_entry, report_ok,
+                                   summarize, to_json)
+
+__all__ = [
+    "PEAK_FLOPS", "HBM_BW", "ICI_BW",
+    "CollectiveStats", "collective_stats", "collectives_crossing_axis",
+    "result_bytes", "roofline_terms", "sync_collective_audit",
+    "check_collective_contract",
+    "BundleContract", "CollectiveContract", "LaunchBudget", "DtypePolicy",
+    "DonationPolicy", "HazardPolicy", "DEFAULT_CONTRACT",
+    "sync_contract", "train_contract",
+    "HloInstruction", "parse_instruction", "iter_instructions",
+    "collective_instructions", "parse_replica_groups", "axis_coords",
+    "parse_input_output_alias", "parse_lowered_donations", "dtype_token",
+    "count_pallas_calls",
+    "PASS_NAMES", "PassResult", "BundleArtifacts", "manual_loop_hazards",
+    "run_passes",
+    "bundle_entry", "build_report", "report_ok", "to_json", "summarize",
+]

@@ -1,0 +1,288 @@
+"""Collective-traffic model, axis-crossing classification, and the
+declarative collective contract check.
+
+The compiled module is the *per-device* program (verified: cost_analysis
+flops ≈ global/chips). Collective results are parsed from ``as_text()``
+via ``analysis.hlo_text``; per-device traffic model (bytes moved over ICI
+per device):
+
+    all-reduce        : 2 × result_bytes × (g-1)/g   (ring: RS + AG phases)
+    all-gather        : result_bytes × (g-1)/g       (result = gathered)
+    reduce-scatter    : result_bytes × (g-1)          (result = one shard)
+    all-to-all        : result_bytes × (g-1)/g
+    collective-permute: result_bytes
+
+with g the participating group size parsed from ``replica_groups=[n,g]``.
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.analysis.hlo_text import (axis_coords, collective_instructions,
+                                     parse_instruction,
+                                     parse_iota_group_size,
+                                     parse_replica_groups, shape_bytes)
+
+PEAK_FLOPS = 197e12     # bf16 per chip
+HBM_BW = 819e9          # bytes/s per chip
+ICI_BW = 50e9           # bytes/s per link
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    bytes_by_op: dict
+    traffic_bytes: float     # modeled per-device ICI traffic
+
+    @property
+    def total_result_bytes(self) -> float:
+        return float(sum(self.bytes_by_op.values()))
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    counts: dict = {}
+    bytes_by_op: dict = {}
+    traffic = 0.0
+    for inst in collective_instructions(hlo_text):
+        op = inst.base_op
+        b = inst.result_bytes
+        g = parse_iota_group_size(inst.line)
+        if g is None:
+            # explicit-list groups ({{0,4},{1,5},...}) and permute pairs
+            groups = parse_replica_groups(inst.line)
+            g = max((len(grp) for grp in groups), default=1) if groups else 1
+        if g <= 1:
+            factor = 0.0
+        elif op == "all-reduce":
+            factor = 2.0 * (g - 1) / g
+        elif op == "all-gather":
+            factor = (g - 1) / g
+        elif op == "reduce-scatter":
+            factor = float(g - 1)
+        elif op == "all-to-all":
+            factor = (g - 1) / g
+        else:  # collective-permute
+            factor = 1.0
+        counts[op] = counts.get(op, 0) + 1
+        bytes_by_op[op] = bytes_by_op.get(op, 0) + b
+        traffic += b * factor
+    return CollectiveStats(counts=counts, bytes_by_op=bytes_by_op,
+                           traffic_bytes=traffic)
+
+
+def collectives_crossing_axis(hlo_text: str, mesh, axis: str
+                              ) -> list[tuple[str, str]]:
+    """(op, hlo line) of every collective whose groups span ``axis``.
+
+    A group "spans" the axis when two of its members sit at different
+    coordinates along it. A collective whose participants cannot be
+    parsed at all is conservatively counted as crossing — a false
+    positive beats silently voiding the no-replica-traffic guarantee.
+    """
+    coords = axis_coords(mesh)[axis]
+    hits = []
+    for inst in collective_instructions(hlo_text):
+        groups = parse_replica_groups(inst.line)
+        if groups is None:
+            hits.append((inst.base_op, inst.line.strip()))
+            continue
+        for grp in groups:
+            if len({coords.get(d, -1) for d in grp}) > 1:
+                hits.append((inst.base_op, inst.line.strip()))
+                break
+    return hits
+
+
+def result_bytes(hits) -> int:
+    """Total RESULT bytes of ``(op, hlo line)`` collective hits (as
+    returned by :func:`collectives_crossing_axis` /
+    :func:`sync_collective_audit`). Result type only — counting the whole
+    line would also include operand shapes and double the figure."""
+    total = 0
+    for op, line in hits:
+        inst = parse_instruction(line)
+        total += shape_bytes(inst.result_type) if inst else 0
+    return total
+
+
+def sync_collective_audit(hlo_text: str, mesh, replica_axis: str = "replica",
+                          outer_axis: str | None = None,
+                          n_groups: int | None = None) -> dict:
+    """Structural audit of an HWA sync step's collectives, per level.
+
+    **Flat** (``outer_axis=None``): the mesh-resident packed sync's
+    contract is exactly ONE collective — the weight all-reduce
+    (pmean/psum) over the replica axis — and ZERO collectives crossing
+    any other mesh axis (i.e. the packed-W̄ assembly and the W̿ unpack
+    are shard-local).
+
+    **Grouped** (``n_groups`` set): the mixed-tiling (FSDP) grouped
+    layout keeps the SAME collective contract — the per-group window
+    buffers change the kernel-launch budget (≤ ``n_groups``
+    pallas_calls, counted separately via ``hlo_text.count_pallas_calls``
+    on the jaxpr — interpret-mode HLO has no custom-call marker), not
+    the traffic: partials are concatenated before the one replica
+    all-reduce and every group's assembly stays shard-local. The
+    ``grouped_sync_ok`` verdict asserts that HLO side.
+
+    **Two-level** (``outer_axis`` set, e.g. ``"pod"``): each collective
+    is classified by which of the two replica-population axes its
+    ``replica_groups`` actually span —
+
+    - *inner-only*: crosses ``replica_axis`` but NOT ``outer_axis`` (a
+      per-pod reduction with pod-local groups);
+    - *outer-only*: crosses ``outer_axis`` but NOT ``replica_axis`` (the
+      cross-pod all-reduce of already-pod-reduced partials);
+    - *mixed*: spans both — a MISWIRED grouping (e.g. one joint
+      all-reduce where the tree promises a composition), rejected by
+      both per-level verdicts below.
+
+    The per-level expectations the tree bundles are audited against:
+
+    - ``inner_sync_ok`` — an INNER sync crosses ONLY the inner groups:
+      exactly one inner-only all-reduce, zero outer crossings, zero
+      mixed, assembly-free;
+    - ``outer_sync_ok`` — an OUTER sync adds exactly one cross-pod
+      all-reduce on top: one inner-only + one outer-only all-reduce,
+      zero mixed, assembly-free.
+
+    Returns::
+
+        {"replica": [(op, line), ...],   # all collectives crossing replica
+         "outer":   [(op, line), ...],   # all crossing outer_axis ([] if None)
+         "mixed":   [(op, line), ...],   # crossing both (miswired grouping)
+         "other":   {axis: [(op, line), ...]},
+         "replica_allreduce_only": bool, # replica hits are 1 all-reduce
+         "assembly_free": bool,          # no crossings outside the levels
+         "inner_sync_ok": bool,
+         "outer_sync_ok": bool}
+
+    Used by tests/mesh_hwa_check.py, tests/test_sync_topology.py and
+    benchmarks/kernel_bench.py / benchmarks/sync_tree.py.
+    """
+    replica = collectives_crossing_axis(hlo_text, mesh, replica_axis)
+    outer = (collectives_crossing_axis(hlo_text, mesh, outer_axis)
+             if outer_axis is not None else [])
+    outer_lines = {line for _, line in outer}
+    replica_lines = {line for _, line in replica}
+    mixed = [h for h in replica if h[1] in outer_lines]
+    inner_only = [h for h in replica if h[1] not in outer_lines]
+    outer_only = [h for h in outer if h[1] not in replica_lines]
+    other = {ax: collectives_crossing_axis(hlo_text, mesh, ax)
+             for ax in mesh.axis_names
+             if ax != replica_axis and ax != outer_axis}
+    assembly_free = not any(hits for hits in other.values())
+    one_ar = lambda hits: len(hits) == 1 and hits[0][0] == "all-reduce"
+    out = {
+        "replica": replica,
+        "outer": outer,
+        "mixed": mixed,
+        "other": other,
+        "replica_allreduce_only": (
+            len(replica) == 1 and replica[0][0] == "all-reduce"),
+        "assembly_free": assembly_free,
+        "inner_sync_ok": (one_ar(inner_only) and not outer
+                          and assembly_free),
+        "outer_sync_ok": (one_ar(inner_only) and one_ar(outer_only)
+                          and not mixed and assembly_free),
+    }
+    if n_groups is not None:
+        out["n_groups"] = n_groups
+        out["grouped_sync_ok"] = (out["replica_allreduce_only"]
+                                  and assembly_free)
+    return out
+
+
+def check_collective_contract(hlo_text: str, mesh, contract) -> dict:
+    """Check compiled HLO against a declarative
+    :class:`~repro.analysis.contracts.CollectiveContract`.
+
+    The generalization of :func:`sync_collective_audit`'s hard-wired
+    verdicts: the contract states exact per-op counts for the collectives
+    crossing the replica axes (``ops``), optionally a second level over
+    ``outer_axis`` (``outer_ops``) where a group spanning BOTH levels is
+    always a miswiring, and whether every remaining mesh axis must be
+    crossed by nothing at all (``assembly_free`` — the zero-assembly
+    claim). ``axis=()`` with ``assembly_free=True`` therefore means "no
+    collectives anywhere" (single-device / K-resident syncs).
+
+    Returns ``{"ok": bool, "violations": [str], "counts": {op: n},
+    "outer_counts": {op: n}, "evidence": [str]}`` — evidence lines are
+    the offending (or, when clean, the matched) HLO collectives.
+    """
+    axes = ((contract.axis,) if isinstance(contract.axis, str)
+            else tuple(contract.axis))
+    inner_hits: dict[str, str] = {}        # line -> op, dedup joint axes
+    for ax in axes:
+        for op, line in collectives_crossing_axis(hlo_text, mesh, ax):
+            inner_hits[line] = op
+    outer_hits: dict[str, str] = {}
+    if contract.outer_axis is not None:
+        for op, line in collectives_crossing_axis(hlo_text, mesh,
+                                                  contract.outer_axis):
+            outer_hits[line] = op
+    mixed = [ln for ln in inner_hits if ln in outer_hits]
+    inner_only = {ln: op for ln, op in inner_hits.items()
+                  if ln not in outer_hits}
+    outer_only = {ln: op for ln, op in outer_hits.items()
+                  if ln not in inner_hits}
+
+    def _count(hits):
+        counts: dict[str, int] = {}
+        for op in hits.values():
+            counts[op] = counts.get(op, 0) + 1
+        return counts
+
+    counts = _count(inner_only)
+    outer_counts = _count(outer_only)
+    violations: list[str] = []
+    evidence: list[str] = []
+
+    def _match(level, got, want):
+        for op in sorted(set(got) | set(want)):
+            g, w = got.get(op, 0), want.get(op, 0)
+            if g != w:
+                violations.append(
+                    f"{level}: expected {w} × {op} crossing "
+                    f"{axes if level == 'inner' else contract.outer_axis}, "
+                    f"found {g}")
+
+    _match("inner", counts, dict(contract.ops))
+    if contract.outer_axis is not None:
+        _match("outer", outer_counts, dict(contract.outer_ops))
+        for ln in mixed:
+            violations.append(
+                f"miswired grouping: {inner_hits[ln]} spans both {axes} "
+                f"and {contract.outer_axis}")
+            evidence.append(ln)
+    if contract.assembly_free:
+        level_axes = set(axes) | ({contract.outer_axis}
+                                  if contract.outer_axis else set())
+        for ax in mesh.axis_names:
+            if ax in level_axes:
+                continue
+            for op, line in collectives_crossing_axis(hlo_text, mesh, ax):
+                violations.append(
+                    f"assembly traffic: {op} crosses non-replica axis "
+                    f"{ax!r}")
+                evidence.append(line)
+    evidence.extend(ln for ln in inner_hits if ln not in evidence)
+    evidence.extend(ln for ln in outer_only if ln not in evidence)
+    return {"ok": not violations, "violations": violations,
+            "counts": counts, "outer_counts": outer_counts,
+            "evidence": evidence}
+
+
+def roofline_terms(flops_per_device: float, bytes_per_device: float,
+                   traffic_bytes: float) -> dict:
+    compute_s = flops_per_device / PEAK_FLOPS
+    memory_s = bytes_per_device / HBM_BW
+    collective_s = traffic_bytes / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    terms["dominant"] = dominant
+    terms["bound_s"] = terms[dominant]
+    return terms

@@ -1,0 +1,169 @@
+"""Declarative per-bundle SPMD contracts — pure data, no jax imports.
+
+A :class:`BundleContract` states what a compiled StepBundle's program
+must look like; the passes in ``analysis.passes`` check each piece and
+``tools/hwa_lint.py`` runs the whole matrix. Builders attach a contract
+to the bundles they assemble (``StepBundle.contract``) AT BUILD TIME —
+the builder knows the topology, kernel gating and pack layout it chose,
+so the declaration can be exact (e.g. the precise Pallas-launch count)
+without a second source of truth. New bundles (the ROADMAP MoE/SSM sweep,
+multi-host) get lint coverage by declaring a contract here and adding a
+matrix entry in ``analysis.lint`` — not by writing new test assertions.
+
+Every field set to ``None`` means "unchecked" — contracts state only the
+guarantees a bundle actually makes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveContract:
+    """What the compiled program's collectives must be, per level.
+
+    ``axis`` names the replica-population mesh axes (one name, or a tuple
+    for a joint population like a two-level ``("pod", "replica")`` stack
+    reduced flat); ``ops`` maps HLO base opcode → EXACT count of
+    collectives crossing those axes (ops not listed must not appear).
+    With ``outer_axis`` set, ``ops`` constrains the inner-only crossings,
+    ``outer_ops`` the outer-only ones, and any group spanning both levels
+    is a miswired composition (always a violation). ``assembly_free``
+    demands ZERO collectives crossing any remaining mesh axis — the
+    packed-assembly claim. ``axis=()`` + ``assembly_free=True`` =
+    "no collectives anywhere".
+    """
+    axis: str | tuple[str, ...] = ()
+    ops: Mapping[str, int] = dataclasses.field(default_factory=dict)
+    outer_axis: str | None = None
+    outer_ops: Mapping[str, int] = dataclasses.field(default_factory=dict)
+    assembly_free: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class LaunchBudget:
+    """Pallas-launch budget, counted structurally in the jaxpr (branches
+    of a ``cond`` included — the budget is a static program property)."""
+    min: int = 0
+    max: int = 0
+
+    @classmethod
+    def exact(cls, n: int) -> "LaunchBudget":
+        return cls(min=n, max=n)
+
+
+@dataclasses.dataclass(frozen=True)
+class DtypePolicy:
+    """Precision discipline for the compiled program.
+
+    ``forbid``: HLO dtype tokens that must not appear ANYWHERE in the
+    compiled text (f64 leaks — a stray Python float in the sync math
+    silently doubles comm bytes). ``collective_dtypes``: allowed payload
+    dtypes of every collective instruction (None = unchecked); the sync
+    bundles pin this to ``("f32",)`` — THE enforcement point where the
+    ROADMAP compressed-comms (bf16/fp8) work will land budgeted
+    exceptions per bundle instead of a global free-for-all.
+    ``float_args``: allowed tokens for every inexact (floating) leaf of
+    the bundle's abstract args (None = unchecked) — pins the packed
+    ring/total and parameter state; a bf16-ring variant declares
+    ``("f32", "bf16")`` explicitly.
+    """
+    forbid: tuple[str, ...] = ("f64",)
+    collective_dtypes: tuple[str, ...] | None = None
+    float_args: tuple[str, ...] | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class DonationPolicy:
+    """Donation/aliasing verification of ``donate_argnums``.
+
+    XLA only WARNS (once, at lowering) when it drops a donation; a
+    dropped WA-buffer donation silently doubles window HBM. The pass
+    re-derives each donated arg's flat parameter numbers and requires
+    every one to appear as an alias source in the compiled module's
+    ``input_output_alias`` config. ``ignore_scalar_leaves`` skips rank-0
+    leaves (optimizer step counters — byte-free, and XLA legitimately
+    folds them).
+    """
+    check: bool = True
+    ignore_scalar_leaves: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class HazardPolicy:
+    """Manual-subgroup loop hazard (XLA 0.4.x fatal).
+
+    ``while``/``scan`` inside a shard_map with manual axes fatals in the
+    0.4.x partitioner (hlo_sharding_util.cc IsManualSubgroup) for
+    partial-auto regions; ``ModelConfig.scan_unroll`` is the workaround
+    the mesh-native builders force. The pass flags the pattern statically
+    in the jaxpr so a new bundle fails lint with a pointer to the
+    workaround instead of a partitioner crash. ``include_fully_manual``
+    extends the flag to fully-manual regions too (no current bundle puts
+    loops there; conservative default on 0.4.x). Pallas kernel bodies are
+    exempt — their loops never reach the SPMD partitioner.
+    """
+    check: bool = True
+    include_fully_manual: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class BundleContract:
+    """The full declarative contract of one StepBundle.
+
+    ``collectives``/``launch`` default to None (unchecked) because only
+    the builder knows them; ``dtypes``/``donation``/``hazard`` default to
+    the universal discipline every bundle in this repo keeps (no f64,
+    honored donations, no loops under manual shard_map).
+    """
+    collectives: CollectiveContract | None = None
+    launch: LaunchBudget | None = None
+    dtypes: DtypePolicy | None = DtypePolicy()
+    donation: DonationPolicy | None = DonationPolicy()
+    hazard: HazardPolicy | None = HazardPolicy()
+    notes: str = ""
+
+
+#: the universal baseline for bundles with no builder-attached contract
+DEFAULT_CONTRACT = BundleContract()
+
+#: strict f32 discipline of the WA sync bundles: collective payloads and
+#: every floating arg leaf (params, packed ring/total) stay f32
+SYNC_DTYPES_F32 = DtypePolicy(collective_dtypes=("f32",),
+                              float_args=("f32",))
+
+
+def sync_contract(axis, *, launches: int, outer_axis=None,
+                  n_collectives: int = 1, outer_collectives: int = 0,
+                  float_args: tuple[str, ...] = ("f32",),
+                  notes: str = "") -> BundleContract:
+    """Contract factory for WA sync bundles: ``n_collectives`` weight
+    all-reduces over ``axis`` (0 when the replica stack is device-local),
+    optionally one level up over ``outer_axis``, zero assembly traffic,
+    an exact launch budget, and the strict f32 discipline."""
+    return BundleContract(
+        collectives=CollectiveContract(
+            axis=axis,
+            ops={"all-reduce": n_collectives} if n_collectives else {},
+            outer_axis=outer_axis,
+            outer_ops=({"all-reduce": outer_collectives}
+                       if outer_collectives else {}),
+            assembly_free=True),
+        launch=LaunchBudget.exact(launches),
+        dtypes=DtypePolicy(collective_dtypes=("f32",),
+                           float_args=float_args),
+        notes=notes)
+
+
+def train_contract(replica_axes=None, notes: str = "") -> BundleContract:
+    """Contract factory for train steps: collective-free over the replica
+    axes when given (the mesh-native H-fold amortization guarantee —
+    data/model collectives unconstrained), no f64, loops-under-manual
+    hazard-clean. Launches and collective payload dtypes unchecked (the
+    model may legitimately use attention kernels / integer gathers)."""
+    collectives = None
+    if replica_axes is not None:
+        collectives = CollectiveContract(axis=replica_axes, ops={},
+                                         assembly_free=False)
+    return BundleContract(collectives=collectives, notes=notes)

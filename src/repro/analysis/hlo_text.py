@@ -1,0 +1,305 @@
+"""Post-SPMD HLO text parsing: instructions, shapes, replica groups.
+
+The lowest layer of ``repro.analysis``: turn XLA's ``as_text()`` dump
+into structured records the passes consume. Everything here is pure
+string → data; the traffic model and contract checks live in
+``analysis.collectives``, the pass framework in ``analysis.passes``.
+
+**Instruction-form matching.** Each HLO line defines one instruction::
+
+    %name = f32[8]{0} all-reduce(f32[8]{0} %operand), replica_groups=...
+
+The OPCODE is the token between the result type and the operand list's
+opening paren. Matching the opcode positionally (instead of substring
+scans over the whole line) is load-bearing: the historical
+``"-done" in line`` skip dropped any line merely *mentioning* an async
+``-done`` value as an operand — e.g. a real all-reduce consuming
+``%all-reduce-done.3`` vanished from the stats, silently voiding the
+collective contracts. Here only instructions whose own opcode carries the
+``-done`` suffix are classified as async completions (their ``-start``
+half already carries the payload), and operand mentions are inert.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# one HLO instruction: [ROOT] %name = <type> <opcode>(...
+# the result type may be a tuple "(f32[4]{0}, f32[4]{0})" (async starts),
+# so it is matched lazily up to the LAST token before the operand paren.
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(?.*?\)?)\s+([\w\-]+)\(")
+
+#: opcodes the collective-traffic model covers (base form, no async
+#: suffix). ``-start``/``-done`` pairs are folded onto the base op.
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+_ASYNC_SUFFIXES = ("-start", "-done")
+
+
+@dataclasses.dataclass(frozen=True)
+class HloInstruction:
+    """One parsed HLO instruction line.
+
+    ``opcode`` is the raw opcode (``all-reduce-start``); ``base_op`` has
+    any async suffix stripped (``all-reduce``) and ``suffix`` is the
+    stripped part (``"-start"``, ``"-done"`` or ``""``).
+    """
+    name: str
+    result_type: str
+    opcode: str
+    line: str
+
+    @property
+    def base_op(self) -> str:
+        for suf in _ASYNC_SUFFIXES:
+            if self.opcode.endswith(suf):
+                return self.opcode[:-len(suf)]
+        return self.opcode
+
+    @property
+    def suffix(self) -> str:
+        for suf in _ASYNC_SUFFIXES:
+            if self.opcode.endswith(suf):
+                return suf
+        return ""
+
+    @property
+    def result_bytes(self) -> int:
+        return shape_bytes(self.result_type)
+
+    @property
+    def result_dtypes(self) -> tuple[str, ...]:
+        """Distinct dtypes appearing in the result type, in order."""
+        out = []
+        for dtype, _ in _SHAPE_RE.findall(self.result_type):
+            if dtype in _DTYPE_BYTES and dtype not in out:
+                out.append(dtype)
+        return tuple(out)
+
+
+def shape_bytes(type_str: str) -> int:
+    """Total bytes of every shape token in an HLO type string (tuple
+    types sum their members)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def line_dtypes(line: str) -> tuple[str, ...]:
+    """Distinct shape dtypes mentioned anywhere on an HLO line (operands
+    included) — the f64-leak scan matches TOKENS, not substrings, so an
+    op_name metadata string containing "f64" cannot false-positive."""
+    out = []
+    for dtype, _ in _SHAPE_RE.findall(line):
+        if dtype in _DTYPE_BYTES and dtype not in out:
+            out.append(dtype)
+    return tuple(out)
+
+
+_DTYPE_TOKENS = {
+    "float64": "f64", "float32": "f32", "float16": "f16",
+    "bfloat16": "bf16", "float8_e4m3fn": "f8e4m3fn",
+    "float8_e5m2": "f8e5m2", "bool": "pred", "int64": "s64",
+    "int32": "s32", "int16": "s16", "int8": "s8", "uint64": "u64",
+    "uint32": "u32", "uint16": "u16", "uint8": "u8", "complex64": "c64",
+    "complex128": "c128",
+}
+
+
+def dtype_token(dtype) -> str:
+    """HLO dtype token of a numpy/jax dtype (float32 → ``f32``)."""
+    import numpy as np
+    name = np.dtype(dtype).name
+    return _DTYPE_TOKENS.get(name, name)
+
+
+def parse_instruction(line: str) -> HloInstruction | None:
+    """Parse one HLO line into an :class:`HloInstruction`, or None for
+    non-instruction lines (headers, braces, comments)."""
+    m = _INSTR_RE.match(line)
+    if not m:
+        return None
+    return HloInstruction(name=m.group(1), result_type=m.group(2),
+                          opcode=m.group(3), line=line)
+
+
+def iter_instructions(hlo_text: str):
+    """Every parsed instruction of an HLO module dump, in text order."""
+    for line in hlo_text.splitlines():
+        inst = parse_instruction(line)
+        if inst is not None:
+            yield inst
+
+
+def collective_instructions(hlo_text: str) -> list[HloInstruction]:
+    """Every collective instruction, async pairs counted ONCE.
+
+    ``-start`` carries the op (its result holds the payload buffers);
+    the matching ``-done`` is dropped by ITS OWN opcode — never by a
+    substring scan, so collectives that merely consume a ``-done`` value
+    as an operand are kept (see module docstring).
+    """
+    out = []
+    for inst in iter_instructions(hlo_text):
+        if inst.base_op in COLLECTIVE_OPS and inst.suffix != "-done":
+            out.append(inst)
+    return out
+
+
+# ------------------------------------------------ replica-group structure
+#
+# Which devices does each collective pair up? XLA prints groups in two
+# forms: explicit ``replica_groups={{0,4},{1,5}}`` and iota
+# ``replica_groups=[n,g]<=[dims]`` with an optional ``T(perm)`` transpose;
+# collective-permute carries ``source_target_pairs`` instead.
+
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{(\{[\d,]*\}(?:,\{[\d,]*\})*)\}")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{((?:\{\d+,\d+\},?)*)\}")
+
+
+def parse_replica_groups(line: str) -> list[list[int]] | None:
+    """Participant groups of one HLO collective line, or None if absent.
+
+    Members are *logical* partition indices (positions in the jit's
+    device assignment, i.e. mesh.devices.flat order), not physical device
+    ids. collective-permute carries source_target_pairs instead; each
+    pair is returned as a two-member group.
+    """
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return [[int(x) for x in g.split(",") if x]
+                for g in re.findall(r"\{([\d,]*)\}", m.group(1))]
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        n, g = int(m.group(1)), int(m.group(2))
+        dims = [int(d) for d in m.group(3).split(",")]
+        import numpy as np
+        arr = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            arr = arr.transpose([int(d) for d in m.group(4).split(",")])
+        return [list(map(int, row)) for row in arr.reshape(n, g)]
+    m = _PAIRS_RE.search(line)
+    if m:
+        return [[int(a), int(b)] for a, b in
+                re.findall(r"\{(\d+),(\d+)\}", m.group(1))]
+    return None
+
+
+def parse_iota_group_size(line: str) -> int | None:
+    """Group size g of the compact iota form ``replica_groups=[n,g]``,
+    or None when the line uses another form."""
+    m = _GROUPS_RE.search(line)
+    return int(m.group(2)) if m else None
+
+
+def axis_coords(mesh) -> dict[str, dict[int, int]]:
+    """logical partition index (mesh.devices.flat position — what HLO
+    replica_groups refer to) → coordinate along each mesh axis."""
+    import numpy as np
+    shape = mesh.devices.shape
+    out: dict[str, dict[int, int]] = {a: {} for a in mesh.axis_names}
+    for pos, idx in enumerate(np.ndindex(*shape)):
+        for a, c in zip(mesh.axis_names, idx):
+            out[a][pos] = c
+    return out
+
+
+# ------------------------------------------------ input/output aliasing
+#
+# Donation surfaces in two places: the compiled module header's
+# ``input_output_alias={ {out}: (param, {path}, may-alias), ... }`` and
+# the lowered StableHLO's per-arg ``tf.aliasing_output`` attributes. A
+# donation XLA could not honor simply VANISHES from both (jax warns once
+# at lowering, easily lost in CI logs) — which is exactly why the
+# donation pass re-derives the declared set and diffs it here.
+
+
+def parse_input_output_alias(hlo_text: str) -> set[int] | None:
+    """Parameter numbers that are donation/alias SOURCES in a compiled
+    module's ``input_output_alias`` header, or None when the header has
+    no such config at all (every donation dropped, or none declared)."""
+    key = "input_output_alias={"
+    start = hlo_text.find(key)
+    if start < 0:
+        return None
+    i = start + len(key)
+    depth = 1
+    while i < len(hlo_text) and depth:
+        if hlo_text[i] == "{":
+            depth += 1
+        elif hlo_text[i] == "}":
+            depth -= 1
+        i += 1
+    seg = hlo_text[start + len(key):i - 1]
+    return {int(p) for p in re.findall(r"\(\s*(\d+)\s*,", seg)}
+
+
+_ALIAS_ATTR_RE = re.compile(
+    r"%arg(\d+):[^)]*?tf\.aliasing_output\s*=\s*(\d+)")
+_DONOR_ATTR_RE = re.compile(r"%arg(\d+):[^)]*?jax\.buffer_donor")
+
+
+def parse_lowered_donations(stablehlo_text: str) -> set[int]:
+    """Flat argument indices carrying an aliasing/donor attribute in a
+    LOWERED (StableHLO) module's @main signature. Backend-independent
+    counterpart of :func:`parse_input_output_alias` (the compiled header
+    is authoritative; this catches drops that happen at lowering)."""
+    sig_at = stablehlo_text.find("@main")
+    text = stablehlo_text if sig_at < 0 else \
+        stablehlo_text[sig_at:stablehlo_text.find("\n", sig_at) + 1 or None]
+    out = {int(m.group(1)) for m in _ALIAS_ATTR_RE.finditer(text)}
+    out |= {int(m.group(1)) for m in _DONOR_ATTR_RE.finditer(text)}
+    return out
+
+
+# --------------------------------------------------- kernel-launch counting
+#
+# The packed WA path's contract is O(1) launches per sync regardless of
+# parameter-leaf count. Counted structurally: ``pallas_call`` equations in
+# the jaxpr (robust in interpret mode, where the lowered HLO has no
+# custom-call marker), or ``custom-call`` ops targeting the TPU/Mosaic
+# kernel entry points in compiled HLO text.
+
+_PALLAS_CC_RE = re.compile(
+    r'custom-call.*custom_call_target="(?:tpu_custom_call|mosaic|'
+    r'__gpu\$xla\.gpu\.triton)"')
+
+
+def count_pallas_calls(obj) -> int:
+    """Number of Pallas kernel launches in a jaxpr (or ClosedJaxpr, or
+    anything with a ``.jaxpr``) or in lowered/compiled HLO text."""
+    if isinstance(obj, str):
+        return sum(1 for line in obj.splitlines()
+                   if _PALLAS_CC_RE.search(line))
+    jaxpr = obj
+    while hasattr(jaxpr, "jaxpr"):
+        jaxpr = jaxpr.jaxpr
+    count = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            count += 1
+        for param in eqn.params.values():
+            for sub in (param if isinstance(param, (list, tuple)) else
+                        (param,)):
+                if hasattr(sub, "eqns") or hasattr(sub, "jaxpr"):
+                    count += count_pallas_calls(sub)
+    return count

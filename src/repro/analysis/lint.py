@@ -1,0 +1,191 @@
+"""hwa-lint: compile the bundle matrix and check every declarative
+contract. Importable core of ``tools/hwa_lint.py`` (which only sets
+XLA_FLAGS for the forced host devices before jax loads).
+
+The matrix mirrors the configurations the repo's guarantees are stated
+for (tests/mesh_hwa_check.py, docs/ARCHITECTURE.md): flat / two-level /
+grouped-FSDP sync, the tree's inner sync, the train steps — on the
+(2,2,2) test mesh, the pod-carved tree mesh, and a single device.
+Contracts come from the builders (``StepBundle.contract``); a case can
+override one to state something stronger than the family default.
+
+``REPRO_LINT_SMOKE=1`` (or ``--smoke``) runs the PR-lane subset — one
+case per pass family — leaving the full matrix to the nightly job.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import sys
+from typing import Any, Callable
+
+REQUIRED_DEVICES = 8
+
+#: env var selecting the PR-lane smoke subset
+SMOKE_ENV = "REPRO_LINT_SMOKE"
+
+
+@dataclasses.dataclass
+class LintCase:
+    """One bundle×mesh configuration of the lint matrix."""
+    name: str
+    build: Callable[[], tuple]     # () -> (bundle, mesh)
+    smoke: bool = False            # part of the PR-lane subset
+    contract: Any = None           # override; default = bundle.contract
+
+
+def default_cases() -> list[LintCase]:
+    """The real-bundle matrix (needs the 8 forced host devices)."""
+    import jax
+
+    if len(jax.devices()) < REQUIRED_DEVICES:
+        raise RuntimeError(
+            f"hwa-lint needs {REQUIRED_DEVICES} devices for the test "
+            f"meshes (found {len(jax.devices())}); run via "
+            "tools/hwa_lint.py, which sets "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=8 before "
+            "importing jax")
+
+    from repro.configs import get_smoke_config
+    from repro.core.hwa import HWAConfig
+    from repro.launch.mesh import make_test_mesh, make_tree_test_mesh
+    from repro.launch.specs import input_specs
+    from repro.launch.sync.bundles import (make_hwa_sync_step,
+                                           make_hwa_train_step,
+                                           make_mesh_hwa_inner_sync_step,
+                                           make_mesh_hwa_sync_step,
+                                           make_mesh_hwa_train_step)
+    from repro.launch.sync.topology import TwoLevel
+    from repro.models.registry import build_model
+    from repro.models.types import InputShape
+    from repro.sharding.rules import make_tp_rules
+
+    cfg = get_smoke_config("granite-3-2b")
+    lm = build_model(cfg)
+    shape = InputShape("tiny", seq_len=16, global_batch=8, kind="train")
+    specs, dims = input_specs(cfg, shape)
+
+    mesh = make_test_mesh((2, 2, 2), ("replica", "data", "model"))
+    rules = make_tp_rules(mesh, replica_axis="replica")
+    rules_f = make_tp_rules(mesh, replica_axis="replica", fsdp=True)
+    mesh_t = make_tree_test_mesh()          # (pod=2, replica=2, model=2)
+    rules_t = make_tp_rules(mesh_t, replica_axis=("pod", "replica"))
+    mesh_1 = make_test_mesh((1, 1, 1), ("replica", "data", "model"))
+    rules_1 = make_tp_rules(mesh_1, replica_axis="replica")
+
+    hwa2 = HWAConfig(n_replicas=2, window=3)
+    hwa2k = HWAConfig(n_replicas=2, window=3, use_kernels=True)
+    hwa4k = HWAConfig(n_replicas=4, window=3, use_kernels=True)
+    hwa4t = HWAConfig(n_replicas=4, window=3, use_kernels=True,
+                      outer_every=2)
+    topo = TwoLevel("replica", "pod", outer_every=2)
+
+    return [
+        LintCase(
+            "train/mesh-native@2x2x2", smoke=True,
+            build=lambda: (make_mesh_hwa_train_step(
+                lm, rules, specs, dims, hwa2, optimizer="sgd"), mesh)),
+        LintCase(
+            "train/hwa-vmap@2x2x2",
+            build=lambda: (make_hwa_train_step(
+                lm, rules, specs, dims, hwa2, optimizer="sgd"), mesh)),
+        LintCase(
+            "sync/flat-resident@2x2x2", smoke=True,
+            build=lambda: (make_mesh_hwa_sync_step(lm, rules, hwa2),
+                           mesh)),
+        LintCase(
+            "sync/flat-resident-kernel@2x2x2", smoke=True,
+            build=lambda: (make_mesh_hwa_sync_step(lm, rules, hwa2k),
+                           mesh)),
+        LintCase(
+            "sync/flat-vmap-k4-kernel@2x2x2",
+            build=lambda: (make_hwa_sync_step(lm, rules, hwa4k), mesh)),
+        LintCase(
+            "sync/fsdp-grouped-kernel@2x2x2",
+            build=lambda: (make_mesh_hwa_sync_step(lm, rules_f, hwa2k),
+                           mesh)),
+        LintCase(
+            "sync/two-level-outer-kernel@tree",
+            build=lambda: (make_mesh_hwa_sync_step(
+                lm, rules_t, hwa4t, topology=topo), mesh_t)),
+        LintCase(
+            "sync/two-level-inner@tree",
+            build=lambda: (make_mesh_hwa_inner_sync_step(
+                lm, rules_t, hwa4t, topo), mesh_t)),
+        LintCase(
+            "sync/legacy-kernel@1dev", smoke=True,
+            build=lambda: (make_hwa_sync_step(lm, rules_1, hwa2k),
+                           mesh_1)),
+    ]
+
+
+def run_case(case: LintCase) -> dict:
+    """Build and lint one case; a build/compile crash becomes a failing
+    report entry instead of killing the matrix."""
+    from repro.analysis.passes import run_passes
+    from repro.analysis.report import bundle_entry
+
+    try:
+        bundle, mesh = case.build()
+        results = run_passes(bundle, mesh, contract=case.contract)
+    except Exception as e:                      # noqa: BLE001
+        return bundle_entry([], error=f"{type(e).__name__}: {e}")
+    return bundle_entry(results)
+
+
+def run_lint(cases: list[LintCase] | None = None, smoke: bool = False,
+             log=print) -> dict:
+    from repro.analysis.report import build_report
+
+    cases = default_cases() if cases is None else cases
+    if smoke:
+        cases = [c for c in cases if c.smoke]
+    bundles = {}
+    for case in cases:
+        log(f"lint: {case.name} ...")
+        bundles[case.name] = run_case(case)
+    return build_report(bundles, smoke=smoke)
+
+
+def main(argv: list[str] | None = None) -> int:
+    from repro.analysis.report import report_ok, summarize, to_json
+
+    ap = argparse.ArgumentParser(
+        prog="hwa_lint",
+        description="Declarative SPMD contract checker over the compiled "
+                    "bundle matrix (collectives, launch budgets, "
+                    "donation, dtype, manual-subgroup hazards).")
+    ap.add_argument("--smoke", action="store_true",
+                    help="PR-lane subset (also via "
+                         f"{SMOKE_ENV}=1)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the machine-readable report here")
+    ap.add_argument("--only", metavar="SUBSTR", default=None,
+                    help="run only cases whose name contains SUBSTR")
+    ap.add_argument("--list", action="store_true",
+                    help="list matrix case names and exit")
+    args = ap.parse_args(argv)
+
+    smoke = args.smoke or os.environ.get(SMOKE_ENV) == "1"
+    cases = default_cases()
+    if args.list:
+        for c in cases:
+            print(("[smoke] " if c.smoke else "        ") + c.name)
+        return 0
+    if args.only:
+        cases = [c for c in cases if args.only in c.name]
+        if not cases:
+            print(f"no lint case matches {args.only!r}", file=sys.stderr)
+            return 2
+    report = run_lint(cases, smoke=smoke)
+    if args.json:
+        with open(args.json, "w") as f:
+            f.write(to_json(report) + "\n")
+        print(f"report written to {args.json}")
+    print(summarize(report))
+    return 0 if report_ok(report) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,322 @@
+"""The static-analysis passes: each checks one facet of a compiled
+StepBundle against its declarative contract.
+
+Pass inventory (canonical report order):
+
+- ``collectives``    — :class:`~repro.analysis.contracts.CollectiveContract`
+  over the post-SPMD HLO (exact per-level op counts, zero assembly).
+- ``launch_budget``  — Pallas-launch count in the jaxpr vs the declared
+  :class:`~repro.analysis.contracts.LaunchBudget` (O(1)-launches claim).
+- ``donation``       — every declared ``donate_argnums`` leaf appears as
+  an alias source in the compiled ``input_output_alias`` config (a
+  dropped donation doubles WA HBM and XLA only warns).
+- ``dtype``          — no forbidden dtypes anywhere, collective payloads
+  and floating args in the allowed sets (f32 discipline; the future
+  bf16/fp8 compressed-comms enforcement point).
+- ``manual_hazard``  — no ``while``/``scan`` under manual shard_map
+  regions (the XLA 0.4.x IsManualSubgroup fatal ``scan_unroll`` works
+  around), detected statically in the jaxpr BEFORE compiling.
+
+Execution order differs from report order: the hazard pass runs first on
+the jaxpr alone, and a flagged bundle is NOT compiled (the fatal it
+predicts is a process abort, not an exception) — the compile-dependent
+passes then report ``skipped`` with the reason.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.analysis.collectives import check_collective_contract
+from repro.analysis.contracts import DEFAULT_CONTRACT, BundleContract
+from repro.analysis.hlo_text import (collective_instructions,
+                                     count_pallas_calls, dtype_token,
+                                     line_dtypes, parse_input_output_alias)
+
+#: canonical pass order in reports (the execution order is different —
+#: manual_hazard gates the compile)
+PASS_NAMES = ("collectives", "launch_budget", "donation", "dtype",
+              "manual_hazard")
+
+_EVIDENCE_CAP = 8
+
+
+def _trim(line: str, n: int = 200) -> str:
+    line = line.strip()
+    return line if len(line) <= n else line[:n] + "…"
+
+
+@dataclasses.dataclass
+class PassResult:
+    """Verdict of one pass on one bundle."""
+    name: str
+    ok: bool
+    violations: list
+    evidence: list
+    skipped: bool = False
+
+    def as_json(self) -> dict:
+        return {"ok": bool(self.ok), "skipped": bool(self.skipped),
+                "violations": list(self.violations),
+                "evidence": list(self.evidence)}
+
+
+def _skipped(name: str, why: str) -> PassResult:
+    return PassResult(name=name, ok=True, violations=[], evidence=[why],
+                      skipped=True)
+
+
+class BundleArtifacts:
+    """Lazily-computed analysis inputs for one (bundle, mesh) pair.
+
+    The jaxpr is cheap (abstract tracing, no compile); ``compiled_text``
+    triggers the full jit compile once and is shared by every
+    compile-dependent pass.
+    """
+
+    def __init__(self, bundle, mesh):
+        self.bundle = bundle
+        self.mesh = mesh
+        self._jaxpr = None
+        self._compiled_text = None
+
+    @property
+    def jaxpr(self):
+        if self._jaxpr is None:
+            import jax
+            self._jaxpr = jax.make_jaxpr(self.bundle.fn)(
+                *self.bundle.abstract_args)
+        return self._jaxpr
+
+    @property
+    def compiled_text(self) -> str:
+        if self._compiled_text is None:
+            self._compiled_text = \
+                self.bundle.lower(self.mesh).compile().as_text()
+        return self._compiled_text
+
+
+# ------------------------------------------------------------ the passes
+
+
+def collectives_pass(art: BundleArtifacts,
+                     contract: BundleContract) -> PassResult:
+    if contract.collectives is None:
+        return _skipped("collectives", "no collective contract declared")
+    res = check_collective_contract(art.compiled_text, art.mesh,
+                                    contract.collectives)
+    return PassResult(
+        name="collectives", ok=res["ok"], violations=res["violations"],
+        evidence=[_trim(ln) for ln in res["evidence"][:_EVIDENCE_CAP]])
+
+
+def launch_budget_pass(art: BundleArtifacts,
+                       contract: BundleContract) -> PassResult:
+    budget = contract.launch
+    if budget is None:
+        return _skipped("launch_budget", "no launch budget declared")
+    n = count_pallas_calls(art.jaxpr)
+    ok = budget.min <= n <= budget.max
+    violations = [] if ok else [
+        f"pallas launch count {n} outside budget "
+        f"[{budget.min}, {budget.max}]"]
+    return PassResult(name="launch_budget", ok=ok, violations=violations,
+                      evidence=[f"pallas_call eqns in jaxpr: {n}"])
+
+
+def donation_pass(art: BundleArtifacts,
+                  contract: BundleContract) -> PassResult:
+    policy = contract.donation
+    if policy is None or not policy.check:
+        return _skipped("donation", "donation check disabled")
+    import jax
+    bundle = art.bundle
+    donated: dict[int, str] = {}        # flat param number -> description
+    offset = 0
+    for i, arg in enumerate(bundle.abstract_args):
+        leaves = jax.tree.leaves(arg)
+        if i in bundle.donate_argnums:
+            for j, leaf in enumerate(leaves):
+                if policy.ignore_scalar_leaves and getattr(
+                        leaf, "ndim", len(leaf.shape)) == 0:
+                    continue
+                donated[offset + j] = (
+                    f"arg {i} leaf {j} "
+                    f"{dtype_token(leaf.dtype)}{list(leaf.shape)}")
+        offset += len(leaves)
+    if not donated:
+        return PassResult(name="donation", ok=True, violations=[],
+                          evidence=["no (non-scalar) donated leaves"])
+    aliased = parse_input_output_alias(art.compiled_text)
+    if aliased is None:
+        return PassResult(
+            name="donation", ok=False,
+            violations=[f"all {len(donated)} declared donations dropped: "
+                        "compiled module has no input_output_alias "
+                        "config"],
+            evidence=[donated[p] for p in sorted(donated)[:_EVIDENCE_CAP]])
+    missing = sorted(set(donated) - aliased)
+    violations = [f"donation dropped: param {p} ({donated[p]}) is not an "
+                  "input_output_alias source" for p in missing]
+    return PassResult(
+        name="donation", ok=not missing, violations=violations,
+        evidence=[f"declared {len(donated)} donated params, "
+                  f"{len(donated) - len(missing)} aliased by XLA"])
+
+
+def dtype_pass(art: BundleArtifacts,
+               contract: BundleContract) -> PassResult:
+    policy = contract.dtypes
+    if policy is None:
+        return _skipped("dtype", "no dtype policy declared")
+    violations: list[str] = []
+    evidence: list[str] = []
+    forbid = set(policy.forbid)
+    if forbid:
+        found: dict[str, int] = {}
+        for line in art.compiled_text.splitlines():
+            bad = [t for t in line_dtypes(line) if t in forbid]
+            if bad:
+                for t in bad:
+                    found[t] = found.get(t, 0) + 1
+                if len(evidence) < _EVIDENCE_CAP:
+                    evidence.append(_trim(line))
+        for t in sorted(found):
+            violations.append(f"forbidden dtype {t} appears on "
+                              f"{found[t]} line(s) of the compiled "
+                              "program")
+    if policy.collective_dtypes is not None:
+        allowed = set(policy.collective_dtypes)
+        for inst in collective_instructions(art.compiled_text):
+            bad = [t for t in inst.result_dtypes if t not in allowed]
+            if bad:
+                violations.append(
+                    f"collective payload dtype {'/'.join(bad)} not in "
+                    f"allowed {sorted(allowed)} ({inst.base_op})")
+                if len(evidence) < _EVIDENCE_CAP:
+                    evidence.append(_trim(inst.line))
+    if policy.float_args is not None:
+        import jax
+        import jax.numpy as jnp
+        allowed_f = set(policy.float_args)
+        for i, arg in enumerate(art.bundle.abstract_args):
+            for j, leaf in enumerate(jax.tree.leaves(arg)):
+                # jnp.issubdtype, not np: ml_dtypes (bf16, fp8) are not
+                # np.floating subtypes and would silently pass
+                if not jnp.issubdtype(leaf.dtype, jnp.floating):
+                    continue
+                tok = dtype_token(leaf.dtype)
+                if tok not in allowed_f:
+                    violations.append(
+                        f"floating arg leaf (arg {i} leaf {j}) is {tok}, "
+                        f"allowed {sorted(allowed_f)}")
+    if not violations and not evidence:
+        evidence = ["no forbidden dtypes; payloads/args within policy"]
+    return PassResult(name="dtype", ok=not violations,
+                      violations=violations, evidence=evidence)
+
+
+_LOOP_PRIMS = ("while", "scan")
+
+
+def manual_loop_hazards(jaxpr, include_fully_manual: bool = True) -> list:
+    """Statically find ``while``/``scan`` eqns under manual shard_map
+    regions anywhere in a jaxpr (ClosedJaxpr accepted).
+
+    Pallas kernel bodies are NOT descended into: their internal loops
+    lower through Mosaic/interpret, never the SPMD partitioner. A
+    ``scan`` with ``unroll >= length`` (``scan_unroll=True`` sets
+    ``unroll=length``) lowers loop-free — no while ever reaches the
+    partitioner — so it is exempt; that is precisely the workaround this
+    pass points to. Returns ``[(prim_name, context_dict), ...]`` with
+    the enclosing region's manual axes and partial-auto flag.
+    """
+    hazards: list = []
+
+    def walk(j, ctx):
+        while hasattr(j, "jaxpr"):
+            j = j.jaxpr
+        if not hasattr(j, "eqns"):
+            return
+        for eqn in j.eqns:
+            name = eqn.primitive.name
+            if name == "pallas_call":
+                continue
+            if name in _LOOP_PRIMS and ctx is not None:
+                unrolled = (name == "scan" and
+                            eqn.params.get("unroll", 1)
+                            >= eqn.params.get("length", float("inf")))
+                if not unrolled:
+                    hazards.append((name, ctx))
+            sub_ctx = ctx
+            if name == "shard_map":
+                mesh = eqn.params.get("mesh")
+                auto = eqn.params.get("auto") or frozenset()
+                axis_names = tuple(getattr(mesh, "axis_names", ()))
+                manual = tuple(a for a in axis_names if a not in auto)
+                partial = bool(auto) and bool(manual)
+                fully = bool(manual) and not auto
+                if partial or (fully and include_fully_manual):
+                    sub_ctx = {"manual_axes": manual,
+                               "auto_axes": tuple(sorted(auto)),
+                               "partial_auto": partial}
+            for param in eqn.params.values():
+                for sub in (param if isinstance(param, (list, tuple))
+                            else (param,)):
+                    if hasattr(sub, "eqns") or hasattr(sub, "jaxpr"):
+                        walk(sub, sub_ctx)
+
+    walk(jaxpr, None)
+    return hazards
+
+
+def manual_hazard_pass(art: BundleArtifacts,
+                       contract: BundleContract) -> PassResult:
+    policy = contract.hazard
+    if policy is None or not policy.check:
+        return _skipped("manual_hazard", "hazard check disabled")
+    hazards = manual_loop_hazards(
+        art.jaxpr, include_fully_manual=policy.include_fully_manual)
+    violations = []
+    evidence = []
+    for name, ctx in hazards:
+        kind = ("partial-auto" if ctx["partial_auto"] else "fully-manual")
+        violations.append(
+            f"`{name}` inside a {kind} manual shard_map region (manual "
+            f"axes {ctx['manual_axes']}) — XLA 0.4.x fatals on loops "
+            "under manual subgroups (IsManualSubgroup); unroll the loop "
+            "(ModelConfig.scan_unroll=True) or hoist it out of the "
+            "manual region")
+        evidence.append(f"{name} under manual_axes={ctx['manual_axes']} "
+                        f"auto={ctx['auto_axes']}")
+    if not hazards:
+        evidence = ["no while/scan under manual shard_map regions"]
+    return PassResult(name="manual_hazard", ok=not hazards,
+                      violations=violations,
+                      evidence=evidence[:_EVIDENCE_CAP])
+
+
+def run_passes(bundle, mesh, contract: BundleContract | None = None
+               ) -> list[PassResult]:
+    """Run every pass on one bundle, in canonical report order.
+
+    ``contract`` defaults to the builder-attached ``bundle.contract``
+    (or the universal baseline). The hazard pass executes FIRST: a
+    flagged bundle would abort the process at compile time, so the
+    compile-dependent passes are reported as skipped instead.
+    """
+    contract = (contract if contract is not None
+                else getattr(bundle, "contract", None) or DEFAULT_CONTRACT)
+    art = BundleArtifacts(bundle, mesh)
+    hazard = manual_hazard_pass(art, contract)
+    launch = launch_budget_pass(art, contract)
+    if hazard.ok:
+        coll = collectives_pass(art, contract)
+        donation = donation_pass(art, contract)
+        dtype = dtype_pass(art, contract)
+    else:
+        why = ("not compiled: manual-subgroup hazard detected (the XLA "
+               "0.4.x fatal is a process abort, not an exception)")
+        coll = _skipped("collectives", why)
+        donation = _skipped("donation", why)
+        dtype = _skipped("dtype", why)
+    return [coll, launch, donation, dtype, hazard]

@@ -1,329 +1,38 @@
-"""Post-SPMD HLO introspection: collective-traffic extraction + roofline.
+"""HLO inspection — thin re-exporting facade over ``repro.analysis``.
 
-The compiled module is the *per-device* program (verified: cost_analysis
-flops ≈ global/chips). Collective results are parsed from ``as_text()``;
-per-device traffic model (bytes moved over ICI per device):
+The parsing/census monolith this module used to be was carved into the
+``repro/analysis/`` static-analysis package in PR 6:
 
-    all-reduce        : 2 × result_bytes × (g-1)/g   (ring: RS + AG phases)
-    all-gather        : result_bytes × (g-1)/g       (result = gathered)
-    reduce-scatter    : result_bytes × (g-1)          (result = one shard)
-    all-to-all        : result_bytes × (g-1)/g
-    collective-permute: result_bytes
+- ``analysis.hlo_text``    — instruction-level HLO parsing (the old
+  regex soup, now with async ``-start``/``-done`` pairs counted once by
+  their own opcode instead of a brittle substring skip), replica-group
+  parsing, ``input_output_alias`` extraction, Pallas-launch counting.
+- ``analysis.collectives`` — the collective census
+  (:func:`collective_stats`), axis-crossing classification,
+  :func:`sync_collective_audit`, roofline terms, and the generalized
+  :func:`~repro.analysis.collectives.check_collective_contract`.
+- ``analysis.contracts``   — declarative per-bundle contracts
+  (:class:`~repro.analysis.contracts.BundleContract`) the builders
+  attach and ``tools/hwa_lint.py`` checks.
+- ``analysis.passes`` / ``analysis.lint`` — the pass framework and the
+  hwa-lint bundle×mesh matrix.
 
-with g the participating group size parsed from ``replica_groups=[n,g]``.
-
-Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+Every name importable from here before the split still is, with
+identical behavior; new code should import from ``repro.analysis``.
 """
 from __future__ import annotations
 
-import dataclasses
-import re
+from repro.analysis.collectives import (HBM_BW, ICI_BW, PEAK_FLOPS,
+                                        CollectiveStats, collective_stats,
+                                        collectives_crossing_axis,
+                                        result_bytes, roofline_terms,
+                                        sync_collective_audit)
+from repro.analysis.hlo_text import (axis_coords, count_pallas_calls,
+                                     parse_replica_groups)
 
-PEAK_FLOPS = 197e12     # bf16 per chip
-HBM_BW = 819e9          # bytes/s per chip
-ICI_BW = 50e9           # bytes/s per link
-
-_DTYPE_BYTES = {
-    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
-    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
-    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
-}
-
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-_COLL_RE = re.compile(
-    r"=\s+(\(?[^=]*?)\s+"
-    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
-    r"(?:-start)?\(")
-_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
-
-
-def _shape_bytes(type_str: str) -> int:
-    total = 0
-    for dtype, dims in _SHAPE_RE.findall(type_str):
-        if dtype not in _DTYPE_BYTES:
-            continue
-        n = 1
-        for d in dims.split(","):
-            if d:
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dtype]
-    return total
-
-
-@dataclasses.dataclass
-class CollectiveStats:
-    counts: dict
-    bytes_by_op: dict
-    traffic_bytes: float     # modeled per-device ICI traffic
-
-    @property
-    def total_result_bytes(self) -> float:
-        return float(sum(self.bytes_by_op.values()))
-
-
-def collective_stats(hlo_text: str) -> CollectiveStats:
-    counts: dict = {}
-    bytes_by_op: dict = {}
-    traffic = 0.0
-    for line in hlo_text.splitlines():
-        if "-done" in line:
-            continue
-        m = _COLL_RE.search(line)
-        if not m:
-            continue
-        type_str, op = m.group(1), m.group(2)
-        b = _shape_bytes(type_str)
-        gm = _GROUPS_RE.search(line)
-        if gm:
-            g = int(gm.group(2))
-        else:
-            # explicit-list groups ({{0,4},{1,5},...}) and permute pairs
-            groups = parse_replica_groups(line)
-            g = max((len(grp) for grp in groups), default=1) if groups else 1
-        if g <= 1:
-            factor = 0.0
-        elif op == "all-reduce":
-            factor = 2.0 * (g - 1) / g
-        elif op == "all-gather":
-            factor = (g - 1) / g
-        elif op == "reduce-scatter":
-            factor = float(g - 1)
-        elif op == "all-to-all":
-            factor = (g - 1) / g
-        else:  # collective-permute
-            factor = 1.0
-        counts[op] = counts.get(op, 0) + 1
-        bytes_by_op[op] = bytes_by_op.get(op, 0) + b
-        traffic += b * factor
-    return CollectiveStats(counts=counts, bytes_by_op=bytes_by_op,
-                           traffic_bytes=traffic)
-
-
-# ------------------------------------------------ replica-group structure
-#
-# Which mesh axes does each collective actually cross? XLA prints groups in
-# two forms: explicit ``replica_groups={{0,4},{1,5}}`` and iota
-# ``replica_groups=[n,g]<=[dims]`` with an optional ``T(perm)`` transpose.
-# Mapping member device ids back to mesh coordinates tells us whether a
-# collective crosses a given axis — the property the mesh-native HWA path
-# is built around (no replica-axis traffic outside hwa_sync).
-
-_GROUPS_LIST_RE = re.compile(r"replica_groups=\{(\{[\d,]*\}(?:,\{[\d,]*\})*)\}")
-_GROUPS_IOTA_RE = re.compile(
-    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
-_PAIRS_RE = re.compile(r"source_target_pairs=\{((?:\{\d+,\d+\},?)*)\}")
-
-
-def parse_replica_groups(line: str) -> list[list[int]] | None:
-    """Participant groups of one HLO collective line, or None if absent.
-
-    Members are *logical* partition indices (positions in the jit's
-    device assignment, i.e. mesh.devices.flat order), not physical device
-    ids. collective-permute carries source_target_pairs instead; each
-    pair is returned as a two-member group.
-    """
-    m = _GROUPS_LIST_RE.search(line)
-    if m:
-        return [[int(x) for x in g.split(",") if x]
-                for g in re.findall(r"\{([\d,]*)\}", m.group(1))]
-    m = _GROUPS_IOTA_RE.search(line)
-    if m:
-        n, g = int(m.group(1)), int(m.group(2))
-        dims = [int(d) for d in m.group(3).split(",")]
-        import numpy as np
-        arr = np.arange(int(np.prod(dims))).reshape(dims)
-        if m.group(4):
-            arr = arr.transpose([int(d) for d in m.group(4).split(",")])
-        return [list(map(int, row)) for row in arr.reshape(n, g)]
-    m = _PAIRS_RE.search(line)
-    if m:
-        return [[int(a), int(b)] for a, b in
-                re.findall(r"\{(\d+),(\d+)\}", m.group(1))]
-    return None
-
-
-def axis_coords(mesh) -> dict[str, dict[int, int]]:
-    """logical partition index (mesh.devices.flat position — what HLO
-    replica_groups refer to) → coordinate along each mesh axis."""
-    import numpy as np
-    shape = mesh.devices.shape
-    out: dict[str, dict[int, int]] = {a: {} for a in mesh.axis_names}
-    for pos, idx in enumerate(np.ndindex(*shape)):
-        for a, c in zip(mesh.axis_names, idx):
-            out[a][pos] = c
-    return out
-
-
-def collectives_crossing_axis(hlo_text: str, mesh, axis: str
-                              ) -> list[tuple[str, str]]:
-    """(op, hlo line) of every collective whose groups span ``axis``.
-
-    A group "spans" the axis when two of its members sit at different
-    coordinates along it. A collective whose participants cannot be
-    parsed at all is conservatively counted as crossing — a false
-    positive beats silently voiding the no-replica-traffic guarantee.
-    """
-    coords = axis_coords(mesh)[axis]
-    hits = []
-    for line in hlo_text.splitlines():
-        if "-done" in line:
-            continue
-        m = _COLL_RE.search(line)
-        if not m:
-            continue
-        groups = parse_replica_groups(line)
-        if groups is None:
-            hits.append((m.group(2), line.strip()))
-            continue
-        for grp in groups:
-            if len({coords.get(d, -1) for d in grp}) > 1:
-                hits.append((m.group(2), line.strip()))
-                break
-    return hits
-
-
-def result_bytes(hits) -> int:
-    """Total RESULT bytes of ``(op, hlo line)`` collective hits (as
-    returned by :func:`collectives_crossing_axis` /
-    :func:`sync_collective_audit`). Result type only — counting the whole
-    line would also include operand shapes and double the figure."""
-    total = 0
-    for op, line in hits:
-        m = _COLL_RE.search(line)
-        total += _shape_bytes(m.group(1)) if m else 0
-    return total
-
-
-def sync_collective_audit(hlo_text: str, mesh, replica_axis: str = "replica",
-                          outer_axis: str | None = None,
-                          n_groups: int | None = None) -> dict:
-    """Structural audit of an HWA sync step's collectives, per level.
-
-    **Flat** (``outer_axis=None``): the mesh-resident packed sync's
-    contract is exactly ONE collective — the weight all-reduce
-    (pmean/psum) over the replica axis — and ZERO collectives crossing
-    any other mesh axis (i.e. the packed-W̄ assembly and the W̿ unpack
-    are shard-local).
-
-    **Grouped** (``n_groups`` set): the mixed-tiling (FSDP) grouped
-    layout keeps the SAME collective contract — the per-group window
-    buffers change the kernel-launch budget (≤ ``n_groups``
-    pallas_calls, counted separately via :func:`count_pallas_calls` on
-    the jaxpr — interpret-mode HLO has no custom-call marker), not the
-    traffic: partials are concatenated before the one replica
-    all-reduce and every group's assembly stays shard-local. The
-    ``grouped_sync_ok`` verdict asserts that HLO side.
-
-    **Two-level** (``outer_axis`` set, e.g. ``"pod"``): each collective
-    is classified by which of the two replica-population axes its
-    ``replica_groups`` actually span —
-
-    - *inner-only*: crosses ``replica_axis`` but NOT ``outer_axis`` (a
-      per-pod reduction with pod-local groups);
-    - *outer-only*: crosses ``outer_axis`` but NOT ``replica_axis`` (the
-      cross-pod all-reduce of already-pod-reduced partials);
-    - *mixed*: spans both — a MISWIRED grouping (e.g. one joint
-      all-reduce where the tree promises a composition), rejected by
-      both per-level verdicts below.
-
-    The per-level expectations the tree bundles are audited against:
-
-    - ``inner_sync_ok`` — an INNER sync crosses ONLY the inner groups:
-      exactly one inner-only all-reduce, zero outer crossings, zero
-      mixed, assembly-free;
-    - ``outer_sync_ok`` — an OUTER sync adds exactly one cross-pod
-      all-reduce on top: one inner-only + one outer-only all-reduce,
-      zero mixed, assembly-free.
-
-    Returns::
-
-        {"replica": [(op, line), ...],   # all collectives crossing replica
-         "outer":   [(op, line), ...],   # all crossing outer_axis ([] if None)
-         "mixed":   [(op, line), ...],   # crossing both (miswired grouping)
-         "other":   {axis: [(op, line), ...]},
-         "replica_allreduce_only": bool, # replica hits are 1 all-reduce
-         "assembly_free": bool,          # no crossings outside the levels
-         "inner_sync_ok": bool,
-         "outer_sync_ok": bool}
-
-    Used by tests/mesh_hwa_check.py, tests/test_sync_topology.py and
-    benchmarks/kernel_bench.py / benchmarks/sync_tree.py.
-    """
-    replica = collectives_crossing_axis(hlo_text, mesh, replica_axis)
-    outer = (collectives_crossing_axis(hlo_text, mesh, outer_axis)
-             if outer_axis is not None else [])
-    outer_lines = {line for _, line in outer}
-    replica_lines = {line for _, line in replica}
-    mixed = [h for h in replica if h[1] in outer_lines]
-    inner_only = [h for h in replica if h[1] not in outer_lines]
-    outer_only = [h for h in outer if h[1] not in replica_lines]
-    other = {ax: collectives_crossing_axis(hlo_text, mesh, ax)
-             for ax in mesh.axis_names
-             if ax != replica_axis and ax != outer_axis}
-    assembly_free = not any(hits for hits in other.values())
-    one_ar = lambda hits: len(hits) == 1 and hits[0][0] == "all-reduce"
-    out = {
-        "replica": replica,
-        "outer": outer,
-        "mixed": mixed,
-        "other": other,
-        "replica_allreduce_only": (
-            len(replica) == 1 and replica[0][0] == "all-reduce"),
-        "assembly_free": assembly_free,
-        "inner_sync_ok": (one_ar(inner_only) and not outer
-                          and assembly_free),
-        "outer_sync_ok": (one_ar(inner_only) and one_ar(outer_only)
-                          and not mixed and assembly_free),
-    }
-    if n_groups is not None:
-        out["n_groups"] = n_groups
-        out["grouped_sync_ok"] = (out["replica_allreduce_only"]
-                                  and assembly_free)
-    return out
-
-
-# --------------------------------------------------- kernel-launch counting
-#
-# The packed WA path's contract is O(1) launches per sync regardless of
-# parameter-leaf count. Counted structurally: ``pallas_call`` equations in
-# the jaxpr (robust in interpret mode, where the lowered HLO has no
-# custom-call marker), or ``custom-call`` ops targeting the TPU/Mosaic
-# kernel entry points in compiled HLO text.
-
-_PALLAS_CC_RE = re.compile(
-    r'custom-call.*custom_call_target="(?:tpu_custom_call|mosaic|'
-    r'__gpu\$xla\.gpu\.triton)"')
-
-
-def count_pallas_calls(obj) -> int:
-    """Number of Pallas kernel launches in a jaxpr (or ClosedJaxpr, or
-    anything with a ``.jaxpr``) or in lowered/compiled HLO text."""
-    if isinstance(obj, str):
-        return sum(1 for line in obj.splitlines()
-                   if _PALLAS_CC_RE.search(line))
-    jaxpr = obj
-    while hasattr(jaxpr, "jaxpr"):
-        jaxpr = jaxpr.jaxpr
-    count = 0
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "pallas_call":
-            count += 1
-        for param in eqn.params.values():
-            for sub in (param if isinstance(param, (list, tuple)) else
-                        (param,)):
-                if hasattr(sub, "eqns") or hasattr(sub, "jaxpr"):
-                    count += count_pallas_calls(sub)
-    return count
-
-
-def roofline_terms(flops_per_device: float, bytes_per_device: float,
-                   traffic_bytes: float) -> dict:
-    compute_s = flops_per_device / PEAK_FLOPS
-    memory_s = bytes_per_device / HBM_BW
-    collective_s = traffic_bytes / ICI_BW
-    terms = {"compute_s": compute_s, "memory_s": memory_s,
-             "collective_s": collective_s}
-    dominant = max(terms, key=terms.get)
-    terms["dominant"] = dominant
-    terms["bound_s"] = terms[dominant]
-    return terms
+__all__ = [
+    "PEAK_FLOPS", "HBM_BW", "ICI_BW",
+    "CollectiveStats", "collective_stats", "parse_replica_groups",
+    "axis_coords", "collectives_crossing_axis", "result_bytes",
+    "sync_collective_audit", "count_pallas_calls", "roofline_terms",
+]

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.analysis.contracts import sync_contract, train_contract
 from repro.common.compat import shard_map
 from repro.core.hwa import HWAConfig, hwa_local_inner_step
 from repro.launch.sync.legacy import (check_legacy_assembly,
@@ -29,7 +30,8 @@ from repro.launch.sync.legacy import (check_legacy_assembly,
 from repro.launch.sync.packed import (_local_inner_sync,
                                       _local_packed_sync, _norm_entry,
                                       _packed_pspecs, _packed_shardings,
-                                      choose_resident_spec)
+                                      choose_resident_spec,
+                                      packed_sync_launch_budget)
 from repro.launch.sync.topology import Flat, SyncTopology, TwoLevel
 from repro.models.registry import LM
 from repro.optim import adamw, apply_updates, sgd
@@ -66,6 +68,14 @@ class StepBundle:
     returned W̿) lives in the packed layout of ``repro.common.packing``;
     consumers materialize leaf views with ``packing.unpack(buf,
     bundle.pack_spec)``.
+
+    ``contract`` is the bundle's declarative SPMD contract
+    (:class:`repro.analysis.contracts.BundleContract`), attached by the
+    builder — it knows the topology, kernel gating and pack layout it
+    chose, so the declaration (collective census, Pallas-launch budget,
+    dtype discipline) is exact with no second source of truth.
+    ``tools/hwa_lint.py`` checks it against the compiled program; None
+    means only the universal baseline applies.
     """
     fn: Any
     abstract_args: tuple
@@ -73,6 +83,7 @@ class StepBundle:
     out_shardings: Any
     donate_argnums: tuple = ()
     pack_spec: Any = None
+    contract: Any = None
 
     def lower(self, mesh: Mesh):
         jitted = jax.jit(self.fn, in_shardings=self.in_shardings,
@@ -149,7 +160,8 @@ def make_train_step(lm: LM, rules: ShardingRules, batch_specs, batch_dims,
         fn=step, abstract_args=(params_abs, opt_abs, batch_specs),
         in_shardings=(p_sh, o_sh, b_sh),
         out_shardings=(p_sh, o_sh, m_sh),
-        donate_argnums=(0, 1))
+        donate_argnums=(0, 1),
+        contract=train_contract(notes="plain DP+TP train step"))
 
 
 def make_prefill_step(lm: LM, rules: ShardingRules, batch_specs, batch_dims,
@@ -168,7 +180,8 @@ def make_prefill_step(lm: LM, rules: ShardingRules, batch_specs, batch_dims,
         fn=step, abstract_args=(params_abs, cache_abs, batch_specs),
         in_shardings=(p_sh, c_sh, b_sh),
         out_shardings=(l_sh, c_sh),
-        donate_argnums=(1,))
+        donate_argnums=(1,),
+        contract=train_contract(notes="prefill step"))
 
 
 def make_decode_step(lm: LM, rules: ShardingRules, token_specs, token_dims,
@@ -187,7 +200,8 @@ def make_decode_step(lm: LM, rules: ShardingRules, token_specs, token_dims,
         fn=step, abstract_args=(params_abs, cache_abs, token_specs),
         in_shardings=(p_sh, c_sh, t_sh),
         out_shardings=(l_sh, c_sh),
-        donate_argnums=(1,))
+        donate_argnums=(1,),
+        contract=train_contract(notes="decode step"))
 
 
 # ------------------------------------------------------------- HWA steps
@@ -262,7 +276,10 @@ def make_hwa_train_step(lm: LM, rules: ShardingRules, batch_specs, batch_dims,
         fn=step, abstract_args=(stacked_abs, opt_abs, kbatch_abs),
         in_shardings=(p_sh, o_sh, b_sh),
         out_shardings=(p_sh, o_sh, scalar_sh),
-        donate_argnums=(0, 1))
+        donate_argnums=(0, 1),
+        # vmap path: replica independence is GSPMD-propagated, not
+        # structural, so no replica-axis collective claim is declared
+        contract=train_contract(notes="vmap HWA inner step"))
 
 
 def _resolved_k_axes(rules: ShardingRules, K: int, topology: SyncTopology
@@ -438,13 +455,25 @@ def make_hwa_sync_step(lm: LM, rules: ShardingRules, hwa_cfg: HWAConfig,
         r_sh = _packed_shardings(mesh, spec, lead_dims=1)
         t_sh = _packed_shardings(mesh, spec)
         s_sh = NamedSharding(mesh, P())
+        ring_f32 = ring_dtype == jnp.float32
+        k_local = (K // math.prod(mesh.shape[a] for a in k_axes)
+                   if k_axes else K)
+        budget = packed_sync_launch_budget(
+            hwa_cfg, use_kernel=hwa_cfg.use_kernels,
+            n_groups=spec.n_groups, k_local=k_local,
+            collective=bool(k_axes), with_stride=False, ring_f32=ring_f32)
         return StepBundle(
             fn=step,
             abstract_args=(stacked_abs, ring_abs, total_abs, scalar_i,
                            scalar_i),
             in_shardings=(p_sh, r_sh, t_sh, s_sh, s_sh),
             out_shardings=(p_sh, r_sh, t_sh, s_sh, s_sh, w_sh),
-            donate_argnums=(0, 1, 2), pack_spec=spec)
+            donate_argnums=(0, 1, 2), pack_spec=spec,
+            contract=sync_contract(
+                k_axes, launches=budget,
+                n_collectives=1 if k_axes else 0,
+                float_args=("f32",) if ring_f32 else ("f32", "bf16"),
+                notes="flat vmap-path sync, mesh-resident"))
 
     check_legacy_assembly(mesh)
     return make_legacy_sync_step(lm, rules, hwa_cfg, ring_dtype, use_kernel)
@@ -553,7 +582,11 @@ def make_mesh_hwa_train_step(lm: LM, rules: ShardingRules, batch_specs,
         fn=step, abstract_args=(stacked_abs, opt_abs, kbatch_abs),
         in_shardings=(p_sh, o_sh, b_sh),
         out_shardings=(p_sh, o_sh, losses_sh),
-        donate_argnums=(0, 1))
+        donate_argnums=(0, 1),
+        # THE amortization claim: zero collectives cross the replica
+        # axes in the inner step (checked structurally by hwa-lint)
+        contract=train_contract(replica_axes=rep_axes,
+                                notes="mesh-native HWA inner step"))
 
 
 def _mesh_resident_pack(lm, rules, topology):
@@ -698,13 +731,37 @@ def make_mesh_hwa_sync_step(lm: LM, rules: ShardingRules, hwa_cfg: HWAConfig,
             check_rep=False)
         r_sh = _packed_shardings(mesh, spec, lead_dims=1)
         t_sh = _packed_shardings(mesh, spec)
+        ring_f32 = ring_dtype == jnp.float32
+        psum_axes = tuple(a for g in psum_groups for a in g)
+        k_local = (K // math.prod(mesh.shape[a] for a in psum_axes)
+                   if psum_axes else K)
+        budget = packed_sync_launch_budget(
+            hwa_cfg, use_kernel=hwa_cfg.use_kernels,
+            n_groups=spec.n_groups, k_local=k_local,
+            collective=any(psum_groups), with_stride=True,
+            ring_f32=ring_f32)
+        float_args = ("f32",) if ring_f32 else ("f32", "bf16")
+        if isinstance(topology, TwoLevel):
+            contract = sync_contract(
+                topology.inner_axis, launches=budget,
+                outer_axis=topology.outer_axis,
+                n_collectives=1, outer_collectives=1,
+                float_args=float_args,
+                notes="two-level outer sync: per-pod psum + cross-pod "
+                      "all-reduce")
+        else:
+            contract = sync_contract(
+                k_axes, launches=budget,
+                n_collectives=1 if k_axes else 0,
+                float_args=float_args,
+                notes="mesh-native flat sync, mesh-resident")
         return StepBundle(
             fn=step,
             abstract_args=(stacked_abs, ring_abs, total_abs, scalar_i,
                            scalar_i, scalar_i),
             in_shardings=(p_sh, r_sh, t_sh, s_sh, s_sh, s_sh),
             out_shardings=(p_sh, r_sh, t_sh, s_sh, s_sh, w_sh, s_sh),
-            donate_argnums=(0, 1, 2), pack_spec=spec)
+            donate_argnums=(0, 1, 2), pack_spec=spec, contract=contract)
 
     # ------- legacy fallback: partial-auto pmean + GSPMD-land window push
     if len(topology.replica_axes) != 1:
@@ -760,4 +817,10 @@ def make_mesh_hwa_inner_sync_step(lm: LM, rules: ShardingRules,
     return StepBundle(
         fn=step, abstract_args=(stacked_abs,),
         in_shardings=(p_sh,), out_shardings=p_sh,
-        donate_argnums=(0,), pack_spec=spec)
+        donate_argnums=(0,), pack_spec=spec,
+        contract=sync_contract(
+            topology.inner_axis, launches=0,
+            outer_axis=topology.outer_axis,
+            n_collectives=1, outer_collectives=0,
+            notes="two-level inner sync: one per-pod all-reduce, zero "
+                  "cross-pod traffic, zero kernel launches"))

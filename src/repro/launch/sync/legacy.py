@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.analysis.contracts import (BundleContract, LaunchBudget,
+                                      sync_contract)
 from repro.common.compat import shard_map
 from repro.core.hwa import HWAConfig, window_push_packed
 from repro.launch.sync.packed import _packed_sharding
@@ -126,19 +128,36 @@ def make_legacy_sync_step(lm: LM, rules: ShardingRules, hwa_cfg: HWAConfig,
     p_sh = rules.tree_shardings(stacked_abs, stacked_dims)
     w_sh = rules.tree_shardings(params_abs, param_dims)
     s_sh = NamedSharding(rules.mesh, P())
+    ring_f32 = ring_dtype == jnp.float32
+    float_args = ("f32",) if ring_f32 else ("f32", "bf16")
+    # single device: collective-free by construction, exact launch count
+    # (mean kernel + ring push kernel). Multi-device (escape-hatch only):
+    # the assembly traffic makes the census layout-dependent — unchecked.
     if streaming:
+        launches = 1 if use_kernel else 0
+        contract = (sync_contract((), launches=launches, n_collectives=0,
+                                  float_args=float_args,
+                                  notes="legacy streaming sync")
+                    if rules.mesh.size == 1 else
+                    BundleContract(launch=LaunchBudget.exact(launches)))
         return StepBundle(
             fn=step_streaming,
             abstract_args=(stacked_abs, total_abs, scalar_i),
             in_shardings=(p_sh, t_sh, s_sh),
             out_shardings=(p_sh, t_sh, s_sh, w_sh),
-            donate_argnums=(0, 1), pack_spec=spec)
+            donate_argnums=(0, 1), pack_spec=spec, contract=contract)
+    launches = (1 + (1 if ring_f32 else 0)) if use_kernel else 0
+    contract = (sync_contract((), launches=launches, n_collectives=0,
+                              float_args=float_args,
+                              notes="legacy ring sync, single device")
+                if rules.mesh.size == 1 else
+                BundleContract(launch=LaunchBudget.exact(launches)))
     return StepBundle(
         fn=step_ring,
         abstract_args=(stacked_abs, ring_abs, total_abs, scalar_i, scalar_i),
         in_shardings=(p_sh, r_sh, t_sh, s_sh, s_sh),
         out_shardings=(p_sh, r_sh, t_sh, s_sh, s_sh, w_sh),
-        donate_argnums=(0, 1, 2), pack_spec=spec)
+        donate_argnums=(0, 1, 2), pack_spec=spec, contract=contract)
 
 
 def make_legacy_mesh_sync_step(lm: LM, rules: ShardingRules,
@@ -208,10 +227,16 @@ def make_legacy_mesh_sync_step(lm: LM, rules: ShardingRules,
     p_sh = rules.tree_shardings(stacked_abs, stacked_dims)
     w_sh = rules.tree_shardings(params_abs, param_dims)
     s_sh = NamedSharding(mesh, P())
+    use_k = hwa_cfg.use_kernels and mesh.size == 1
+    launches = 1 if use_k and ring_dtype == jnp.float32 else 0
+    # the pmean + GSPMD assembly all-reduce both cross the mesh in
+    # layout-dependent ways — only the launch budget and dtype baseline
+    # are declared for this escape-hatch path
     return StepBundle(
         fn=step,
         abstract_args=(stacked_abs, ring_abs, total_abs, scalar_i, scalar_i,
                        scalar_i),
         in_shardings=(p_sh, r_sh, t_sh, s_sh, s_sh, s_sh),
         out_shardings=(p_sh, r_sh, t_sh, s_sh, s_sh, w_sh, s_sh),
-        donate_argnums=(0, 1, 2), pack_spec=spec)
+        donate_argnums=(0, 1, 2), pack_spec=spec,
+        contract=BundleContract(launch=LaunchBudget.exact(launches)))

@@ -400,3 +400,29 @@ def _local_inner_sync(lspec, pod_size: int,
     pod_mean = _psum_composition(part, psum_axes)
     outer = unpack(pod_mean, lspec)
     return broadcast_to_replicas(outer, k_local)
+
+
+def packed_sync_launch_budget(hwa_cfg: HWAConfig, *, use_kernel: bool,
+                              n_groups: int, k_local: int,
+                              collective: bool, with_stride: bool,
+                              ring_f32: bool = True) -> int:
+    """Static Pallas-launch count of :func:`_local_packed_sync`.
+
+    The single source of truth the builders' declared
+    ``LaunchBudget`` shares with the kernel gating above — a drifted
+    copy would let ``hwa-lint`` rubber-stamp a regressed launch count.
+    Mirrors the gates exactly: the fused path is one ``hwa_sync_packed``
+    per group; otherwise the mean kernel runs only in the ungrouped
+    ``k_local == 2`` case and the window push costs one launch per group
+    (``cond`` branches under ``window_stride > 1`` included — the budget
+    is a static program property, not a per-call trace).
+    """
+    if not use_kernel:
+        return 0
+    fused = (not collective and ring_f32
+             and (not with_stride or hwa_cfg.window_stride == 1))
+    if fused:
+        return n_groups
+    mean = 1 if (k_local == 2 and n_groups == 1) else 0
+    push = n_groups if ring_f32 else 0
+    return mean + push

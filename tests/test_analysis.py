@@ -1,0 +1,416 @@
+"""Static-analysis package unit tests (single CPU device).
+
+Covers the pieces of ``repro/analysis/`` that need no forced device
+grid: the instruction-level HLO parsing (async ``-start``/``-done``
+pairs — the regression that motivated the rewrite), the donation /
+dtype / hazard passes on synthetic fixtures and tiny real jits, the
+declarative collective contracts on synthetic HLO over a fake mesh, the
+JSON report round-trip, the ``launch.hlo`` facade identity, and a
+seeded contract violation driving the lint runner to a failing report
+(the exit-nonzero path of ``tools/hwa_lint.py``). The real-bundle
+matrix itself runs under ``make hwa-lint`` / the CI lint job with the
+8-device grid.
+"""
+import json
+import types
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.collectives import (check_collective_contract,
+                                        collective_stats,
+                                        collectives_crossing_axis)
+from repro.analysis.contracts import (DEFAULT_CONTRACT, BundleContract,
+                                      CollectiveContract, DtypePolicy,
+                                      LaunchBudget, sync_contract,
+                                      train_contract)
+from repro.analysis.hlo_text import (collective_instructions, dtype_token,
+                                     iter_instructions, line_dtypes,
+                                     parse_input_output_alias,
+                                     parse_instruction)
+from repro.analysis.lint import LintCase, run_case, run_lint
+from repro.analysis.passes import (PASS_NAMES, BundleArtifacts,
+                                   donation_pass, dtype_pass,
+                                   launch_budget_pass, manual_hazard_pass,
+                                   manual_loop_hazards, run_passes)
+from repro.analysis.report import (build_report, bundle_entry, report_ok,
+                                   summarize, to_json)
+from repro.common.compat import shard_map
+from repro.launch.hlo import count_pallas_calls
+
+# ---------------------------------------------------------------- fixtures
+
+
+def _fake_mesh(shape: dict):
+    dims = tuple(shape.values())
+    return types.SimpleNamespace(shape=shape, axis_names=tuple(shape),
+                                 devices=np.empty(dims),
+                                 size=int(np.prod(dims)))
+
+
+_HDR = "HloModule jit_step, entry_computation_layout={()->()}\n"
+
+# async all-reduce pair + a collective CONSUMING the -done value: the old
+# `"-done" in line` substring skip dropped that all-gather entirely
+_AR_START = ('  %all-reduce-start.1 = f32[1024]{0} all-reduce-start('
+             'f32[1024]{0} %p0), replica_groups={{0,1}}, to_apply=%add')
+_AR_DONE = ('  %all-reduce-done.1 = f32[1024]{0} all-reduce-done('
+            'f32[1024]{0} %all-reduce-start.1)')
+_AG_ON_DONE = ('  %all-gather.3 = f32[2048]{0} all-gather(f32[1024]{0} '
+               '%all-reduce-done.1), replica_groups=[1,2], dimensions={0}')
+_ASYNC_HLO = "\n".join([_HDR, _AR_START, _AR_DONE, _AG_ON_DONE, ""])
+
+
+class _TinyBundle:
+    """Minimal StepBundle stand-in for single-device pass tests."""
+
+    def __init__(self, fn, args, donate=(), contract=None):
+        self.fn = fn
+        self.abstract_args = args
+        self.donate_argnums = donate
+        self.contract = contract
+        self.pack_spec = None
+
+    def lower(self, mesh):
+        return jax.jit(self.fn,
+                       donate_argnums=self.donate_argnums).lower(
+                           *self.abstract_args)
+
+
+def _art(fn=None, args=(), donate=(), hlo_text=None):
+    art = BundleArtifacts(_TinyBundle(fn or (lambda: 0), args, donate),
+                          mesh=None)
+    if hlo_text is not None:
+        art._compiled_text = hlo_text
+    return art
+
+
+# ----------------------------------------------- instruction parsing
+
+
+def test_parse_instruction_forms():
+    i = parse_instruction(_AR_START)
+    assert i.opcode == "all-reduce-start" and i.base_op == "all-reduce"
+    assert i.suffix == "-start" and i.result_bytes == 4096
+    i = parse_instruction(_AG_ON_DONE)
+    assert i.opcode == "all-gather" and i.suffix == ""
+    root = parse_instruction(
+        "  ROOT %tuple.9 = (f32[8]{0}, s32[]) tuple(%a, %b)")
+    assert root.opcode == "tuple"
+    assert parse_instruction("// not an instruction") is None
+
+
+def test_async_pair_counted_once_and_consumer_not_dropped():
+    insts = list(collective_instructions(_ASYNC_HLO))
+    # the -start/-done pair is ONE collective; the all-gather consuming
+    # %all-reduce-done.1 is another (the old substring skip lost it)
+    assert sorted(i.base_op for i in insts) == ["all-gather", "all-reduce"]
+    stats = collective_stats(_ASYNC_HLO)
+    assert stats.counts == {"all-reduce": 1, "all-gather": 1}
+    mesh = _fake_mesh({"x": 2})
+    hits = collectives_crossing_axis(_ASYNC_HLO, mesh, "x")
+    assert sorted(h[0] for h in hits) == ["all-gather", "all-reduce"]
+
+
+def test_line_dtypes_no_substring_false_positives():
+    assert set(line_dtypes(_AR_START)) == {"f32"}
+    # bf16 must not also report f16; f8e4m3fn must not report f8/…
+    ln = "  %c = bf16[4]{0} convert(f8e4m3fn[4]{0} %p0)"
+    assert set(line_dtypes(ln)) == {"bf16", "f8e4m3fn"}
+    assert dtype_token(jnp.float32) == "f32"
+    assert dtype_token(jnp.bfloat16) == "bf16"
+    assert dtype_token(np.dtype("int32")) == "s32"
+
+
+# ----------------------------------------------- donation / aliasing
+
+
+def test_input_output_alias_parsing_end_to_end():
+    x = jnp.arange(8.0)
+
+    def f(a, b):
+        return a + b, b * 2
+
+    txt = jax.jit(f, donate_argnums=(0,)).lower(x, x).compile().as_text()
+    aliased = parse_input_output_alias(txt)
+    assert aliased is not None and 0 in aliased and 1 not in aliased
+
+    def g(a):                      # smaller output: donation is DROPPED
+        return a[:4] * 2.0
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        txt2 = jax.jit(g, donate_argnums=(0,)).lower(x).compile().as_text()
+    assert not (parse_input_output_alias(txt2) or set())
+
+
+def test_donation_pass_applied_vs_dropped():
+    x = jax.ShapeDtypeStruct((8,), jnp.float32)
+    ok = donation_pass(_art(lambda a, b: (a + b, b), (x, x), donate=(0,)),
+                       DEFAULT_CONTRACT)
+    assert ok.ok and not ok.violations
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        bad = donation_pass(_art(lambda a: a[:4] * 2.0, (x,), donate=(0,)),
+                            DEFAULT_CONTRACT)
+    assert not bad.ok
+    assert any("dropped" in v for v in bad.violations)
+
+    # rank-0 leaves are exempt by default (optimizer step counters)
+    s = jax.ShapeDtypeStruct((), jnp.int32)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        res = donation_pass(_art(lambda a: a + 1.0, (s,), donate=(0,)),
+                            DEFAULT_CONTRACT)
+    assert res.ok
+
+
+# --------------------------------------------------------------- dtype
+
+
+def test_dtype_pass_forbid_and_payload_and_args():
+    leak = _HDR + "  %c.1 = f64[8]{0} convert(f32[8]{0} %p0)\n"
+    res = dtype_pass(_art(hlo_text=leak), DEFAULT_CONTRACT)
+    assert not res.ok and any("f64" in v for v in res.violations)
+
+    bad_payload = _HDR + (
+        "  %ar.1 = bf16[64]{0} all-reduce(bf16[64]{0} %p0), "
+        "replica_groups={{0,1}}, to_apply=%add\n")
+    pol = BundleContract(dtypes=DtypePolicy(collective_dtypes=("f32",)))
+    res = dtype_pass(_art(hlo_text=bad_payload), pol)
+    assert not res.ok and any("payload" in v for v in res.violations)
+
+    clean = _HDR + _AR_START + "\n"
+    assert dtype_pass(_art(hlo_text=clean), pol).ok
+
+    # floating arg leaves outside the allowed set
+    xb = jax.ShapeDtypeStruct((4,), jnp.bfloat16)
+    pol2 = BundleContract(dtypes=DtypePolicy(float_args=("f32",)))
+    res = dtype_pass(_art(lambda a: a, (xb,), hlo_text=clean), pol2)
+    assert not res.ok and any("bf16" in v for v in res.violations)
+
+
+# ------------------------------------------------------ manual hazards
+
+
+def _one_dev_mesh():
+    return jax.sharding.Mesh(np.asarray(jax.devices()[:1]), ("x",))
+
+
+def test_manual_hazard_scan_flagged_and_unroll_exempt():
+    mesh = _one_dev_mesh()
+    P = jax.sharding.PartitionSpec
+
+    def scan_body(xs):
+        return jax.lax.scan(lambda c, x: (c + x, x), jnp.zeros(()), xs)[0]
+
+    def manual(xs):
+        return shard_map(scan_body, mesh, in_specs=(P(),), out_specs=P(),
+                         check_rep=False)(xs)
+
+    jx = jax.make_jaxpr(manual)(jnp.ones((4,)))
+    hz = manual_loop_hazards(jx)
+    assert len(hz) == 1 and hz[0][0] == "scan"
+    assert hz[0][1]["manual_axes"] == ("x",)
+
+    def unrolled_body(xs):
+        return jax.lax.scan(lambda c, x: (c + x, x), jnp.zeros(()), xs,
+                            unroll=True)[0]
+
+    def manual_unrolled(xs):
+        return shard_map(unrolled_body, mesh, in_specs=(P(),),
+                         out_specs=P(), check_rep=False)(xs)
+
+    # scan_unroll=True lowers loop-free — exactly the workaround the
+    # pass recommends, so it must not be flagged
+    jx2 = jax.make_jaxpr(manual_unrolled)(jnp.ones((4,)))
+    assert manual_loop_hazards(jx2) == []
+
+    # no shard_map: loops are fine anywhere
+    jx3 = jax.make_jaxpr(scan_body)(jnp.ones((4,)))
+    assert manual_loop_hazards(jx3) == []
+
+
+def test_manual_hazard_pallas_body_exempt():
+    mesh = _one_dev_mesh()
+    P = jax.sharding.PartitionSpec
+    from repro.kernels import ops as kops
+
+    def body(xs):
+        return kops.online_mean_packed(xs)
+
+    def manual(xs):
+        return shard_map(body, mesh, in_specs=(P(),), out_specs=P(),
+                         check_rep=False)(xs)
+
+    from repro.kernels.ops import ALIGN
+    jx = jax.make_jaxpr(manual)(jnp.ones((2, ALIGN), jnp.float32))
+    assert count_pallas_calls(jx) == 1
+    # whatever loops live inside the kernel body lower via Mosaic, never
+    # the SPMD partitioner — the walker must not descend into them
+    assert manual_loop_hazards(jx) == []
+
+
+def test_run_passes_hazard_gates_compile():
+    mesh = _one_dev_mesh()
+    P = jax.sharding.PartitionSpec
+
+    def manual(xs):
+        def body(b):
+            return jax.lax.scan(lambda c, x: (c + x, x),
+                                jnp.zeros(()), b)[0]
+        return shard_map(body, mesh, in_specs=(P(),), out_specs=P(),
+                         check_rep=False)(xs)
+
+    bundle = _TinyBundle(manual, (jnp.ones((4,)),))
+    results = run_passes(bundle, mesh)
+    by_name = {r.name: r for r in results}
+    assert tuple(r.name for r in results) == PASS_NAMES
+    assert not by_name["manual_hazard"].ok
+    # the fatal it predicts is a process abort — compile-dependent passes
+    # must be skipped, not run
+    for name in ("collectives", "donation", "dtype"):
+        assert by_name[name].skipped
+
+
+# ------------------------------------------------- collective contracts
+
+
+_MESH_T = _fake_mesh({"pod": 2, "replica": 2, "model": 2})
+_INNER_AR = ('  %ar.0 = f32[1024]{0} all-reduce(f32[1024]{0} %p0), '
+             'replica_groups={{0,2},{1,3},{4,6},{5,7}}, to_apply=%add')
+_OUTER_AR = ('  %ar.1 = f32[1024]{0} all-reduce(f32[1024]{0} %ar.0), '
+             'replica_groups={{0,4},{1,5},{2,6},{3,7}}, to_apply=%add')
+_MODEL_AR = ('  %ar.3 = f32[1024]{0} all-reduce(f32[1024]{0} %p0), '
+             'replica_groups={{0,1},{2,3},{4,5},{6,7}}, to_apply=%add')
+
+
+def test_collective_contract_two_level():
+    contract = CollectiveContract(axis="replica", outer_axis="pod",
+                                  ops={"all-reduce": 1},
+                                  outer_ops={"all-reduce": 1})
+    good = "\n".join([_HDR, _INNER_AR, _OUTER_AR, ""])
+    res = check_collective_contract(good, _MESH_T, contract)
+    assert res["ok"], res["violations"]
+
+    # missing outer level
+    res = check_collective_contract("\n".join([_HDR, _INNER_AR, ""]),
+                                    _MESH_T, contract)
+    assert not res["ok"]
+
+    # assembly traffic (model-axis all-reduce) violates assembly_free
+    res = check_collective_contract(
+        "\n".join([_HDR, _INNER_AR, _OUTER_AR, _MODEL_AR, ""]),
+        _MESH_T, contract)
+    assert not res["ok"]
+    assert any("assembly" in v for v in res["violations"])
+
+
+def test_collective_contract_flat_and_empty():
+    flat = CollectiveContract(axis="replica", ops={"all-reduce": 1})
+    mesh = _fake_mesh({"replica": 2, "data": 2, "model": 2})
+    one = ('  %ar.0 = f32[64]{0} all-reduce(f32[64]{0} %p0), '
+           'replica_groups={{0,4},{1,5},{2,6},{3,7}}, to_apply=%add')
+    assert check_collective_contract(_HDR + one + "\n", mesh, flat)["ok"]
+    # two replica all-reduces breaks the EXACT count
+    two = _HDR + one + "\n" + one.replace("%ar.0", "%ar.1") + "\n"
+    assert not check_collective_contract(two, mesh, flat)["ok"]
+    # "no collectives anywhere"
+    silent = CollectiveContract()
+    assert check_collective_contract(_HDR, mesh, silent)["ok"]
+    assert not check_collective_contract(_HDR + one + "\n", mesh,
+                                         silent)["ok"]
+
+
+def test_contract_factories():
+    c = sync_contract(("replica",), launches=1)
+    assert c.collectives.ops == {"all-reduce": 1}
+    assert c.launch == LaunchBudget.exact(1)
+    assert c.dtypes.collective_dtypes == ("f32",)
+    t = train_contract(replica_axes=("pod", "replica"))
+    assert t.collectives.assembly_free is False
+    assert t.launch is None and t.dtypes.forbid == ("f64",)
+
+
+# ------------------------------------------------------ report + lint
+
+
+def test_report_round_trip_and_ok():
+    x = jax.ShapeDtypeStruct((8,), jnp.float32)
+    results = run_passes(_TinyBundle(lambda a: a * 2, (x,)), None)
+    rep = build_report({"case": bundle_entry(results)})
+    assert rep["ok"] and report_ok(rep)
+    rt = json.loads(to_json(rep))
+    assert report_ok(rt) == report_ok(rep)
+    assert "OK hwa-lint" in summarize(rt)
+    # an empty report is NOT ok (a filtered-to-nothing matrix must fail)
+    assert not report_ok(build_report({}))
+    # a build error fails the report
+    rep2 = build_report({"a": bundle_entry(results),
+                         "b": bundle_entry([], error="boom")})
+    assert not report_ok(rep2) and rep2["n_violations"] == 1
+    assert "ERROR b" in summarize(rep2)
+
+
+def test_seeded_violation_fails_lint():
+    x = jax.ShapeDtypeStruct((8,), jnp.float32)
+    # a bundle that CLAIMS one Pallas launch but compiles to zero
+    bundle = _TinyBundle(lambda a: a * 2, (x,),
+                         contract=BundleContract(
+                             launch=LaunchBudget.exact(1)))
+    case = LintCase("synthetic/seeded-launch-violation",
+                    build=lambda: (bundle, None))
+    report = run_lint([case], log=lambda *_: None)
+    assert not report["ok"] and report["n_violations"] >= 1
+    assert not report_ok(report)     # == hwa_lint exiting nonzero
+    entry = report["bundles"]["synthetic/seeded-launch-violation"]
+    assert not entry["passes"]["launch_budget"]["ok"]
+
+    res = launch_budget_pass(
+        _art(lambda a: a * 2, (x,)),
+        BundleContract(launch=LaunchBudget.exact(0)))
+    assert res.ok
+
+    # a crashing build becomes a failing entry, not a crashed matrix
+    def boom():
+        raise RuntimeError("no such mesh")
+
+    bad = run_case(LintCase("synthetic/crash", build=boom))
+    assert not bad["ok"] and "no such mesh" in bad["error"]
+
+
+def test_hazard_pass_result_mentions_workaround():
+    mesh = _one_dev_mesh()
+    P = jax.sharding.PartitionSpec
+
+    def manual(xs):
+        def body(b):
+            return jax.lax.scan(lambda c, x: (c + x, x),
+                                jnp.zeros(()), b)[0]
+        return shard_map(body, mesh, in_specs=(P(),), out_specs=P(),
+                         check_rep=False)(xs)
+
+    art = BundleArtifacts(_TinyBundle(manual, (jnp.ones((4,)),)), mesh)
+    res = manual_hazard_pass(art, DEFAULT_CONTRACT)
+    assert not res.ok
+    assert any("scan_unroll" in v for v in res.violations)
+
+
+# ------------------------------------------------------------- facade
+
+
+def test_launch_hlo_facade_identity():
+    import repro.analysis as analysis
+    import repro.launch.hlo as hlo
+
+    for name in hlo.__all__:
+        assert getattr(hlo, name) is getattr(analysis, name), name
+    # consumers' exact historical import set
+    from repro.launch.hlo import (ICI_BW, collective_stats,  # noqa: F401
+                                  collectives_crossing_axis,
+                                  count_pallas_calls, result_bytes,
+                                  roofline_terms, sync_collective_audit)

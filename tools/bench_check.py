@@ -54,16 +54,48 @@ def lookup(data, path: str):
     return node
 
 
-def main() -> int:
+#: the sections thresholds.json may contain — anything else is a typo
+#: that would otherwise silently un-guard its checks
+KNOWN_SECTIONS = ("required", "bounds")
+
+
+def block_of(path: str, data) -> str:
+    """The top-level BENCH block a threshold path guards (literal keys
+    with dots win, mirroring :func:`lookup`)."""
+    if path in data or "." not in path:
+        return path
+    best = None
+    for key in data:
+        if path.startswith(key + ".") and \
+                (best is None or len(key) > len(best)):
+            best = key
+    return best if best is not None else path.split(".", 1)[0]
+
+
+def run(bench_path: str = BENCH, thresholds_path: str = THRESHOLDS,
+        log=print) -> int:
+    """Check one bench file against one thresholds file; returns the
+    exit status (0 = every check holds). Paths are parameters so the
+    regression tests can feed synthetic pairs."""
     errors = []
+    warnings = []
     try:
-        with open(BENCH) as f:
+        with open(bench_path) as f:
             data = json.load(f)
     except (OSError, json.JSONDecodeError) as e:
-        print(f"FAIL BENCH_kernels.json unreadable: {e}")
+        log(f"FAIL {os.path.basename(bench_path)} unreadable: {e}")
         return 1
-    with open(THRESHOLDS) as f:
+    with open(thresholds_path) as f:
         th = json.load(f)
+
+    # a misspelled section name would silently skip every check in it
+    # (underscore-prefixed keys are comments by JSON convention)
+    for section in th:
+        if section not in KNOWN_SECTIONS and not section.startswith("_"):
+            errors.append(
+                f"unknown thresholds section {section!r} (known: "
+                f"{', '.join(KNOWN_SECTIONS)}) — its checks would be "
+                "silently ignored")
 
     for path in th.get("required", []):
         try:
@@ -88,14 +120,31 @@ def main() -> int:
         if "max" in bound and v > bound["max"]:
             errors.append(f"{path} = {v} > max {bound['max']}")
 
+    # coverage: a RENAMED bench block leaves its thresholds dangling
+    # (caught above) but ALSO leaves the new block unguarded — warn so
+    # the rename updates thresholds.json instead of shedding the guard
+    guarded = {block_of(p, data) for p in th.get("required", [])}
+    guarded |= {block_of(p, data) for p in th.get("bounds", {})}
+    for block in data:
+        if block not in guarded:
+            warnings.append(f"bench block {block!r} has no threshold "
+                            "guarding it")
+
+    for w in warnings:
+        log(f"  warn: {w}")
     if errors:
-        print(f"FAIL bench-check ({len(errors)} problem(s)):")
+        log(f"FAIL bench-check ({len(errors)} problem(s)):")
         for e in errors:
-            print(f"  - {e}")
+            log(f"  - {e}")
         return 1
     n = len(th.get("required", [])) + len(th.get("bounds", {}))
-    print(f"OK bench-check: {n} structural thresholds hold")
+    log(f"OK bench-check: {n} structural thresholds hold"
+        + (f" ({len(warnings)} unguarded block(s))" if warnings else ""))
     return 0
+
+
+def main() -> int:
+    return run()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,27 @@
+#!/usr/bin/env python
+"""hwa-lint: declarative SPMD contract checker over the compiled bundle
+matrix — collectives, Pallas-launch budgets, donation/aliasing, dtype
+discipline, manual-subgroup hazards.
+
+Thin launcher: the test meshes need 8 host devices, and XLA_FLAGS must
+be set BEFORE jax is first imported, so this wrapper does exactly that
+and then delegates to ``repro.analysis.lint`` (the importable core).
+
+    python tools/hwa_lint.py [--smoke] [--json PATH] [--only SUBSTR]
+    make hwa-lint            # full matrix, report to lint_report.json
+
+Exit status: 0 iff every bundle config satisfies its contract
+(``REPRO_LINT_SMOKE=1`` selects the PR-lane subset, as in CI).
+"""
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
+
+from repro.analysis.lint import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())
