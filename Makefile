@@ -8,7 +8,8 @@ export PYTHONPATH := src:$(PYTHONPATH)
 PYTEST_ARGS ?=
 
 .PHONY: test test-fast spmd mesh-hwa mesh-hwa-fsdp bench bench-kernels \
-	bench-sync bench-check train-smoke docs-check hwa-lint hwa-lint-smoke
+	bench-sync bench-check train-smoke docs-check hwa-lint hwa-lint-smoke \
+	fault-check fault-check-smoke
 
 # tier-1: docs sanity + the full CPU suite (SPMD checks run in their own
 # subprocesses)
@@ -74,3 +75,14 @@ hwa-lint:
 # PR-lane subset (the CI lint job; REPRO_LINT_SMOKE=1 selects the same)
 hwa-lint-smoke:
 	$(PY) tools/hwa_lint.py --smoke --json lint_report.json
+
+# deterministic fault-injection harness: NaN-poisoned replicas, kill-
+# mid-save preemptions, bit-flipped checkpoints, transient IO — each leg
+# an end-to-end scenario with a hard pass/fail verdict. Writes the
+# machine-readable report to fault_report.json.
+fault-check:
+	$(PY) tools/fault_check.py --json fault_report.json
+
+# PR-lane subset (the CI resilience job; REPRO_FAULT_SMOKE=1 likewise)
+fault-check-smoke:
+	$(PY) tools/fault_check.py --smoke --json fault_report.json

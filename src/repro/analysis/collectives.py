@@ -203,10 +203,12 @@ def check_collective_contract(hlo_text: str, mesh, contract) -> dict:
     verdicts: the contract states exact per-op counts for the collectives
     crossing the replica axes (``ops``), optionally a second level over
     ``outer_axis`` (``outer_ops``) where a group spanning BOTH levels is
-    always a miswiring, and whether every remaining mesh axis must be
-    crossed by nothing at all (``assembly_free`` — the zero-assembly
-    claim). ``axis=()`` with ``assembly_free=True`` therefore means "no
-    collectives anywhere" (single-device / K-resident syncs).
+    always a miswiring, and exact per-op counts for collectives crossing
+    ONLY the remaining mesh axes (``assembly_free`` + ``other_ops`` — the
+    zero-assembly claim by default, a budgeted exception list for e.g.
+    the resilient sync's health-stats all-reduce otherwise). ``axis=()``
+    with ``assembly_free=True`` and empty ``other_ops`` therefore means
+    "no collectives anywhere" (single-device / K-resident syncs).
 
     Returns ``{"ok": bool, "violations": [str], "counts": {op: n},
     "outer_counts": {op: n}, "evidence": [str]}`` — evidence lines are
@@ -260,14 +262,31 @@ def check_collective_contract(hlo_text: str, mesh, contract) -> dict:
     if contract.assembly_free:
         level_axes = set(axes) | ({contract.outer_axis}
                                   if contract.outer_axis else set())
+        level_lines = set(inner_hits) | set(outer_hits)
+        other_hits: dict[str, str] = {}    # line -> op, dedup joint axes
         for ax in mesh.axis_names:
             if ax in level_axes:
                 continue
             for op, line in collectives_crossing_axis(hlo_text, mesh, ax):
+                if line in level_lines:
+                    # spans a level axis AND a non-level axis: miswired
+                    # level traffic, never a budgeted "other" collective
+                    if line not in evidence:
+                        violations.append(
+                            f"assembly traffic: {op} crosses both the "
+                            f"level axes and non-level axis {ax!r}")
+                        evidence.append(line)
+                else:
+                    other_hits[line] = op
+        want_other = dict(getattr(contract, "other_ops", {}) or {})
+        got_other = _count(other_hits)
+        for op in sorted(set(got_other) | set(want_other)):
+            g, w = got_other.get(op, 0), want_other.get(op, 0)
+            if g != w:
                 violations.append(
-                    f"assembly traffic: {op} crosses non-replica axis "
-                    f"{ax!r}")
-                evidence.append(line)
+                    f"assembly traffic: expected {w} × {op} crossing "
+                    f"non-level axes, found {g}")
+        evidence.extend(ln for ln in other_hits if ln not in evidence)
     evidence.extend(ln for ln in inner_hits if ln not in evidence)
     evidence.extend(ln for ln in outer_only if ln not in evidence)
     return {"ok": not violations, "violations": violations,

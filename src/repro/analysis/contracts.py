@@ -30,15 +30,22 @@ class CollectiveContract:
     With ``outer_axis`` set, ``ops`` constrains the inner-only crossings,
     ``outer_ops`` the outer-only ones, and any group spanning both levels
     is a miswired composition (always a violation). ``assembly_free``
-    demands ZERO collectives crossing any remaining mesh axis — the
-    packed-assembly claim. ``axis=()`` + ``assembly_free=True`` =
-    "no collectives anywhere".
+    demands the collectives crossing the remaining (non-level) mesh axes
+    match ``other_ops`` EXACTLY — the default ``{}`` keeps the historical
+    zero-assembly claim. ``other_ops`` exists for budgeted exceptions
+    like the resilient sync's replica-health all-reduce, which crosses
+    the data/model axes (to aggregate per-replica finiteness stats over
+    each replica's shards) but never the replica population; a collective
+    spanning BOTH a level axis and a non-level axis stays a violation
+    regardless. ``axis=()`` + ``assembly_free=True`` + empty
+    ``other_ops`` = "no collectives anywhere".
     """
     axis: str | tuple[str, ...] = ()
     ops: Mapping[str, int] = dataclasses.field(default_factory=dict)
     outer_axis: str | None = None
     outer_ops: Mapping[str, int] = dataclasses.field(default_factory=dict)
     assembly_free: bool = True
+    other_ops: Mapping[str, int] = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -136,12 +143,15 @@ SYNC_DTYPES_F32 = DtypePolicy(collective_dtypes=("f32",),
 
 def sync_contract(axis, *, launches: int, outer_axis=None,
                   n_collectives: int = 1, outer_collectives: int = 0,
+                  other_ops: Mapping[str, int] | None = None,
                   float_args: tuple[str, ...] = ("f32",),
                   notes: str = "") -> BundleContract:
     """Contract factory for WA sync bundles: ``n_collectives`` weight
-    all-reduces over ``axis`` (0 when the replica stack is device-local),
-    optionally one level up over ``outer_axis``, zero assembly traffic,
-    an exact launch budget, and the strict f32 discipline."""
+    all-reduces over ``axis`` (0 when the replica stack is device-local;
+    2 for the resilient alive-masked sync — k_alive + masked weights),
+    optionally one level up over ``outer_axis``, non-level crossings
+    pinned to ``other_ops`` (default: zero assembly traffic), an exact
+    launch budget, and the strict f32 discipline."""
     return BundleContract(
         collectives=CollectiveContract(
             axis=axis,
@@ -149,7 +159,8 @@ def sync_contract(axis, *, launches: int, outer_axis=None,
             outer_axis=outer_axis,
             outer_ops=({"all-reduce": outer_collectives}
                        if outer_collectives else {}),
-            assembly_free=True),
+            assembly_free=True,
+            other_ops=dict(other_ops) if other_ops else {}),
         launch=LaunchBudget.exact(launches),
         dtypes=DtypePolicy(collective_dtypes=("f32",),
                            float_args=float_args),

@@ -79,6 +79,9 @@ def default_cases() -> list[LintCase]:
     hwa4k = HWAConfig(n_replicas=4, window=3, use_kernels=True)
     hwa4t = HWAConfig(n_replicas=4, window=3, use_kernels=True,
                       outer_every=2)
+    hwa2r = HWAConfig(n_replicas=2, window=3, resilient=True)
+    hwa4tr = HWAConfig(n_replicas=4, window=3, outer_every=2,
+                       resilient=True)
     topo = TwoLevel("replica", "pod", outer_every=2)
 
     return [
@@ -109,6 +112,21 @@ def default_cases() -> list[LintCase]:
             "sync/two-level-outer-kernel@tree",
             build=lambda: (make_mesh_hwa_sync_step(
                 lm, rules_t, hwa4t, topology=topo), mesh_t)),
+        # resilient (alive-masked) sync: exactly 2 replica-level
+        # all-reduces (k_alive + masked weights) plus the budgeted
+        # non-replica health-stats psum — still zero assembly traffic
+        LintCase(
+            "sync/flat-resident-resilient@2x2x2", smoke=True,
+            build=lambda: (make_mesh_hwa_sync_step(lm, rules, hwa2r),
+                           mesh)),
+        LintCase(
+            "sync/fsdp-grouped-resilient@2x2x2",
+            build=lambda: (make_mesh_hwa_sync_step(lm, rules_f, hwa2r),
+                           mesh)),
+        LintCase(
+            "sync/two-level-outer-resilient@tree",
+            build=lambda: (make_mesh_hwa_sync_step(
+                lm, rules_t, hwa4tr, topology=topo), mesh_t)),
         LintCase(
             "sync/two-level-inner@tree",
             build=lambda: (make_mesh_hwa_inner_sync_step(

@@ -7,6 +7,7 @@ from __future__ import annotations
 
 import json
 import os
+import uuid
 from typing import Any
 
 import jax
@@ -50,12 +51,42 @@ def save_pytree(path: str, tree: Any) -> None:
         arrays[name] = arr
         keys.append(_keystr(kpath))
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    tmp = path + ".tmp"
-    with open(tmp, "wb") as f:
-        np.savez(f, __keys__=np.asarray(json.dumps(keys)),
-                 __dtypes__=np.asarray(json.dumps(dtypes)),
-                 __treedef__=np.asarray(str(treedef)), **arrays)
-    os.replace(tmp, path)
+    # unique tmp name: a fixed `path + ".tmp"` collides under concurrent
+    # writers (one writer's os.replace publishes the other's half-written
+    # file); fsync before the atomic rename, or a crash right after
+    # replace can publish a name pointing at un-flushed (truncated) data
+    tmp = f"{path}.tmp.{os.getpid()}.{uuid.uuid4().hex[:8]}"
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, __keys__=np.asarray(json.dumps(keys)),
+                     __dtypes__=np.asarray(json.dumps(dtypes)),
+                     __treedef__=np.asarray(str(treedef)), **arrays)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+        _fsync_dir(os.path.dirname(os.path.abspath(path)))
+    finally:
+        if os.path.exists(tmp):
+            try:
+                os.remove(tmp)
+            except OSError:
+                pass
+
+
+def _fsync_dir(dirname: str) -> None:
+    """Make a just-completed rename durable (the entry lives in the
+    directory, not the file). Best effort — not every platform allows
+    opening a directory."""
+    try:
+        fd = os.open(dirname or ".", os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
 
 
 def _read_raw(path: str) -> tuple[list, list]:

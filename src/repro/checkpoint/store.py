@@ -10,17 +10,26 @@ from __future__ import annotations
 
 import os
 import re
+import warnings
 from typing import Any
 
 import jax
 
-from repro.checkpoint.io import load_pytree, save_pytree
+from repro.checkpoint.io import _read_raw, load_pytree, save_pytree
 from repro.common.pytree import tree_add, tree_scale, tree_zeros_like
 
 
 class OuterWeightStore:
-    def __init__(self, directory: str):
+    """``keep_last`` bounds the store: after every save, cycles older
+    than the newest N are deleted (long runs would otherwise grow one
+    full parameter set per sync cycle, unboundedly). ``None`` keeps
+    everything (the post-hoc window-sweep use case needs history)."""
+
+    def __init__(self, directory: str, keep_last: int | None = None):
+        if keep_last is not None and keep_last < 1:
+            raise ValueError(f"keep_last must be >= 1, got {keep_last}")
         self.directory = directory
+        self.keep_last = keep_last
         os.makedirs(directory, exist_ok=True)
 
     def _path(self, cycle: int) -> str:
@@ -28,6 +37,24 @@ class OuterWeightStore:
 
     def save(self, cycle: int, outer_weights: Any) -> None:
         save_pytree(self._path(cycle), outer_weights)
+        if self.keep_last is not None:
+            for old in self.cycles()[:-self.keep_last]:
+                try:
+                    os.remove(self._path(old))
+                except OSError as e:          # pragma: no cover - racey FS
+                    warnings.warn(f"retention: could not remove outer "
+                                  f"checkpoint {old}: {e}")
+
+    def verify(self) -> dict[int, str]:
+        """``{cycle: problem}`` for every stored checkpoint that cannot
+        be read back (truncated/corrupted npz). Empty dict == all good."""
+        bad: dict[int, str] = {}
+        for c in self.cycles():
+            try:
+                _read_raw(self._path(c))
+            except Exception as e:
+                bad[c] = f"{type(e).__name__}: {e}"
+        return bad
 
     def load(self, cycle: int, like: Any) -> Any:
         return load_pytree(self._path(cycle), like)
@@ -46,6 +73,12 @@ class OuterWeightStore:
 
         ``stride`` implements the paper's sparse-window remark (§III-B):
         average only cycles with index in multiples of ``stride``.
+
+        A partial or unparsable ``outer_*.npz`` inside the window (torn
+        write, bit rot) is skipped with a warning instead of poisoning
+        the whole sweep; the average renormalizes over the cycles that
+        actually loaded. Raises only when NO cycle in the window is
+        readable.
         """
         cycles = [c for c in self.cycles()
                   if end_cycle - window * stride < c <= end_cycle
@@ -53,8 +86,20 @@ class OuterWeightStore:
         if not cycles:
             raise ValueError(f"no checkpoints in window ending at {end_cycle}")
         acc = tree_zeros_like(jax.tree.map(lambda x: x.astype("float32"), like))
+        n_used = 0
         for c in cycles:
-            w = self.load(c, like)
+            try:
+                w = self.load(c, like)
+            except Exception as e:
+                warnings.warn(f"skipping unreadable outer checkpoint "
+                              f"{c} ({self._path(c)}): "
+                              f"{type(e).__name__}: {e}")
+                continue
             acc = tree_add(acc, jax.tree.map(lambda x: x.astype("float32"), w))
-        avg = tree_scale(acc, 1.0 / len(cycles))
+            n_used += 1
+        if not n_used:
+            raise ValueError(f"no READABLE checkpoints in window ending at "
+                             f"{end_cycle} ({len(cycles)} present, all "
+                             f"corrupt — see warnings)")
+        avg = tree_scale(acc, 1.0 / n_used)
         return jax.tree.map(lambda a, t: a.astype(t.dtype), avg, like)

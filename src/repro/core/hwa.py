@@ -44,6 +44,20 @@ class HWAConfig:
                                  # the cross-pod all-reduce + window push
                                  # run (launch/sync/topology.py TwoLevel).
                                  # 1 ≡ flat sync (every sync is global).
+    resilient: bool = False      # elastic membership: exclude NaN'd /
+                                 # diverged replicas from the K-mean via
+                                 # an alive-mask with renormalized
+                                 # 1/K_alive (bitwise identical to the
+                                 # plain mean when all alive); the dead
+                                 # replica restarts from W̄ with a fresh
+                                 # optimizer (repro.resilience.health).
+    max_param_rms: float | None = None
+                                 # resilient-only divergence probe: a
+                                 # replica whose overall parameter RMS
+                                 # exceeds this is quarantined even if
+                                 # finite (approximate on the packed
+                                 # path — padding/replication counted;
+                                 # None = finiteness check only).
 
 
 @dataclasses.dataclass
@@ -184,10 +198,29 @@ def hwa_sync(cfg: HWAConfig, state: HWAState) -> tuple[HWAState, PyTree]:
     path with a dense f32 ring window the sync is one fused launch
     (:func:`_sync_fused`); otherwise mean and window update run as two
     packed single-launch steps.
+
+    With ``cfg.resilient`` the mean is the alive-masked elastic mean
+    (``repro.resilience.health``): a NaN'd or diverged replica is
+    excluded from W̄, restarts from W̄ like everyone else, and gets its
+    per-replica optimizer slots zeroed (fresh init) instead of carrying
+    poisoned moments into the next cycle. Bitwise identical to the
+    non-resilient jnp path when every replica is healthy; the Pallas
+    kernels are bypassed (they cannot mask) and the alive count is
+    reported as the ``k_alive`` metric.
     """
     div = replica_divergence(state.inner)
     ws = state.window_state
-    if (cfg.use_kernels and ws.kind == "ring" and cfg.window_stride == 1
+    alive = None
+    if cfg.resilient:
+        from repro.resilience.health import (masked_mean_axis0,
+                                             quarantine_opt_state,
+                                             replica_alive_mask)
+        alive = replica_alive_mask(state.inner, max_rms=cfg.max_param_rms)
+        outer = masked_mean_axis0(state.inner, alive)
+        window_state, wa, cycle = _window_push(cfg, outer,
+                                               state.window_state,
+                                               state.cycle)
+    elif (cfg.use_kernels and ws.kind == "ring" and cfg.window_stride == 1
             and ws.ring is not None and ws.ring.dtype == jnp.float32):
         outer, window_state, wa, cycle = _sync_fused(cfg, state)
     elif cfg.use_kernels and jax.tree.leaves(state.inner):
@@ -207,14 +240,25 @@ def hwa_sync(cfg: HWAConfig, state: HWAState) -> tuple[HWAState, PyTree]:
                                                state.cycle)
     inner = broadcast_to_replicas(outer, cfg.n_replicas)
     if cfg.avg_opt_state:
-        opt_mean = tree_mean_axis0(state.inner_opt)
+        if alive is not None:
+            from repro.resilience.health import masked_mean_axis0
+            opt_mean = masked_mean_axis0(state.inner_opt, alive)
+        else:
+            opt_mean = tree_mean_axis0(state.inner_opt)
         inner_opt = broadcast_to_replicas(opt_mean, cfg.n_replicas)
+    elif alive is not None:
+        # quarantine: dead replicas restart from W̄ (the broadcast above)
+        # with fresh — zeroed — optimizer slots
+        inner_opt = quarantine_opt_state(state.inner_opt, alive)
     else:
         inner_opt = state.inner_opt
     new_state = HWAState(inner=inner, inner_opt=inner_opt,
                          window_state=window_state, wa=wa,
                          cycle=cycle, step=state.step)
-    return new_state, {"replica_divergence": div, "cycle": cycle}
+    metrics = {"replica_divergence": div, "cycle": cycle}
+    if alive is not None:
+        metrics["k_alive"] = jnp.sum(alive.astype(jnp.int32))
+    return new_state, metrics
 
 
 # ------------------------------------------------- mesh-native (per-replica)

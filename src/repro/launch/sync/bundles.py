@@ -27,7 +27,7 @@ from repro.core.hwa import HWAConfig, hwa_local_inner_step
 from repro.launch.sync.legacy import (check_legacy_assembly,
                                       make_legacy_mesh_sync_step,
                                       make_legacy_sync_step)
-from repro.launch.sync.packed import (_local_inner_sync,
+from repro.launch.sync.packed import (_axes_entry, _local_inner_sync,
                                       _local_packed_sync, _norm_entry,
                                       _packed_pspecs, _packed_shardings,
                                       choose_resident_spec,
@@ -433,28 +433,47 @@ def make_hwa_sync_step(lm: LM, rules: ShardingRules, hwa_cfg: HWAConfig,
                          "(no single-super-axis OR grouped layout found)")
 
     if mesh_resident:
+        resilient = hwa_cfg.resilient
         ring_abs, total_abs = _window_abs(spec, I, ring_dtype)
         stacked_pspecs = rules.tree_specs(stacked_abs, stacked_dims)
+        # health stats are replicated over every non-replica axis the
+        # params are NOT sharded over; psum over the sharded ones and let
+        # health_scale cancel the replication overcount (packed.py doc).
+        health_axes = tuple(a for a in mesh.axis_names
+                            if a not in k_axes and mesh.shape[a] > 1)
+        health_scale = math.prod(mesh.shape[a] for a in health_axes) or 1
         body = functools.partial(_local_packed_sync, hwa_cfg,
                                  spec.local_spec(), K, (k_axes,),
-                                 hwa_cfg.use_kernels, False)
+                                 hwa_cfg.use_kernels, False,
+                                 health_axes=health_axes if resilient else (),
+                                 health_scale=health_scale)
 
-        def local_step(inner, ring, total, count, next_idx):
-            return body(inner, ring, total, count, next_idx,
-                        jnp.zeros((), jnp.int32))[:6]
+        if resilient:
+            def local_step(inner, ring, total, count, next_idx):
+                r = body(inner, ring, total, count, next_idx,
+                         jnp.zeros((), jnp.int32))
+                return (*r[:6], r[7])
+        else:
+            def local_step(inner, ring, total, count, next_idx):
+                return body(inner, ring, total, count, next_idx,
+                            jnp.zeros((), jnp.int32))[:6]
 
+        alive_spec = (P(_axes_entry(k_axes)),) if resilient else ()
         step = shard_map(
             local_step, mesh,
             in_specs=(stacked_pspecs, _packed_pspecs(spec, 1),
                       _packed_pspecs(spec), P(), P()),
             out_specs=(stacked_pspecs, _packed_pspecs(spec, 1),
-                       _packed_pspecs(spec), P(), P(), pspec_tree),
+                       _packed_pspecs(spec), P(), P(), pspec_tree,
+                       *alive_spec),
             check_rep=False)
         p_sh = rules.tree_shardings(stacked_abs, stacked_dims)
         w_sh = rules.tree_shardings(params_abs, param_dims)
         r_sh = _packed_shardings(mesh, spec, lead_dims=1)
         t_sh = _packed_shardings(mesh, spec)
         s_sh = NamedSharding(mesh, P())
+        alive_sh = (tuple(NamedSharding(mesh, s) for s in alive_spec)
+                    if resilient else ())
         ring_f32 = ring_dtype == jnp.float32
         k_local = (K // math.prod(mesh.shape[a] for a in k_axes)
                    if k_axes else K)
@@ -462,19 +481,38 @@ def make_hwa_sync_step(lm: LM, rules: ShardingRules, hwa_cfg: HWAConfig,
             hwa_cfg, use_kernel=hwa_cfg.use_kernels,
             n_groups=spec.n_groups, k_local=k_local,
             collective=bool(k_axes), with_stride=False, ring_f32=ring_f32)
+        if resilient:
+            # two replica-level all-reduces (k_alive, then the masked
+            # weight psum — the inv data dependency keeps XLA from
+            # merging them) plus one health-stats psum over the
+            # non-replica axes when any exist.
+            contract = sync_contract(
+                k_axes, launches=budget,
+                n_collectives=2 if k_axes else 0,
+                other_ops={"all-reduce": 1} if health_axes else None,
+                float_args=("f32",) if ring_f32 else ("f32", "bf16"),
+                notes="flat vmap-path sync, mesh-resident, resilient "
+                      "(alive-masked mean)")
+        else:
+            contract = sync_contract(
+                k_axes, launches=budget,
+                n_collectives=1 if k_axes else 0,
+                float_args=("f32",) if ring_f32 else ("f32", "bf16"),
+                notes="flat vmap-path sync, mesh-resident")
         return StepBundle(
             fn=step,
             abstract_args=(stacked_abs, ring_abs, total_abs, scalar_i,
                            scalar_i),
             in_shardings=(p_sh, r_sh, t_sh, s_sh, s_sh),
-            out_shardings=(p_sh, r_sh, t_sh, s_sh, s_sh, w_sh),
+            out_shardings=(p_sh, r_sh, t_sh, s_sh, s_sh, w_sh, *alive_sh),
             donate_argnums=(0, 1, 2), pack_spec=spec,
-            contract=sync_contract(
-                k_axes, launches=budget,
-                n_collectives=1 if k_axes else 0,
-                float_args=("f32",) if ring_f32 else ("f32", "bf16"),
-                notes="flat vmap-path sync, mesh-resident"))
+            contract=contract)
 
+    if hwa_cfg.resilient:
+        raise ValueError("resilient HWA requires the mesh-resident packed "
+                         "sync path (the legacy GSPMD fallback has no "
+                         "alive-masked formulation); use a layout the "
+                         "packed chooser accepts or the core hwa_sync")
     check_legacy_assembly(mesh)
     return make_legacy_sync_step(lm, rules, hwa_cfg, ring_dtype, use_kernel)
 
@@ -717,20 +755,36 @@ def make_mesh_hwa_sync_step(lm: LM, rules: ShardingRules, hwa_cfg: HWAConfig,
                          "formulation of grouped psums exists)")
 
     if mesh_resident:
+        resilient = hwa_cfg.resilient
         stacked_pspecs = rules.tree_specs(stacked_abs, stacked_dims)
         ring_abs, total_abs = _window_abs(spec, I, ring_dtype)
+        rep_axes = tuple(topology.replica_axes)
+        health_axes = tuple(a for a in mesh.axis_names
+                            if a not in rep_axes and mesh.shape[a] > 1)
+        health_scale = math.prod(mesh.shape[a] for a in health_axes) or 1
+        body = functools.partial(_local_packed_sync, hwa_cfg,
+                                 spec.local_spec(), K, psum_groups,
+                                 hwa_cfg.use_kernels, True,
+                                 health_axes=health_axes if resilient else (),
+                                 health_scale=health_scale)
+        if resilient:
+            local_step = body          # all 8 outputs, alive last
+        else:
+            def local_step(*args):
+                return body(*args)[:7]
+        alive_spec = (P(_axes_entry(k_axes)),) if resilient else ()
         step = shard_map(
-            functools.partial(_local_packed_sync, hwa_cfg,
-                              spec.local_spec(), K, psum_groups,
-                              hwa_cfg.use_kernels, True),
-            mesh,
+            local_step, mesh,
             in_specs=(stacked_pspecs, _packed_pspecs(spec, 1),
                       _packed_pspecs(spec), P(), P(), P()),
             out_specs=(stacked_pspecs, _packed_pspecs(spec, 1),
-                       _packed_pspecs(spec), P(), P(), pspec_tree, P()),
+                       _packed_pspecs(spec), P(), P(), pspec_tree, P(),
+                       *alive_spec),
             check_rep=False)
         r_sh = _packed_shardings(mesh, spec, lead_dims=1)
         t_sh = _packed_shardings(mesh, spec)
+        alive_sh = (tuple(NamedSharding(mesh, s) for s in alive_spec)
+                    if resilient else ())
         ring_f32 = ring_dtype == jnp.float32
         psum_axes = tuple(a for g in psum_groups for a in g)
         k_local = (K // math.prod(mesh.shape[a] for a in psum_axes)
@@ -741,29 +795,46 @@ def make_mesh_hwa_sync_step(lm: LM, rules: ShardingRules, hwa_cfg: HWAConfig,
             collective=any(psum_groups), with_stride=True,
             ring_f32=ring_f32)
         float_args = ("f32",) if ring_f32 else ("f32", "bf16")
+        # Resilient doubles each level's replica collectives: k_alive
+        # first, then the masked weight psum (the inv dependency chains
+        # them so the AllReduceCombiner cannot merge); the health-stats
+        # psum crosses only the non-replica axes and is budgeted as an
+        # `other_ops` exception rather than loosening the level counts.
+        other = ({"all-reduce": 1} if (resilient and health_axes)
+                 else None)
         if isinstance(topology, TwoLevel):
             contract = sync_contract(
                 topology.inner_axis, launches=budget,
                 outer_axis=topology.outer_axis,
-                n_collectives=1, outer_collectives=1,
+                n_collectives=2 if resilient else 1,
+                outer_collectives=2 if resilient else 1,
+                other_ops=other,
                 float_args=float_args,
                 notes="two-level outer sync: per-pod psum + cross-pod "
-                      "all-reduce")
+                      "all-reduce"
+                      + (", resilient (alive-masked)" if resilient else ""))
         else:
             contract = sync_contract(
                 k_axes, launches=budget,
-                n_collectives=1 if k_axes else 0,
+                n_collectives=(2 if resilient else 1) if k_axes else 0,
+                other_ops=other,
                 float_args=float_args,
-                notes="mesh-native flat sync, mesh-resident")
+                notes="mesh-native flat sync, mesh-resident"
+                      + (", resilient (alive-masked)" if resilient else ""))
         return StepBundle(
             fn=step,
             abstract_args=(stacked_abs, ring_abs, total_abs, scalar_i,
                            scalar_i, scalar_i),
             in_shardings=(p_sh, r_sh, t_sh, s_sh, s_sh, s_sh),
-            out_shardings=(p_sh, r_sh, t_sh, s_sh, s_sh, w_sh, s_sh),
+            out_shardings=(p_sh, r_sh, t_sh, s_sh, s_sh, w_sh, s_sh,
+                           *alive_sh),
             donate_argnums=(0, 1, 2), pack_spec=spec, contract=contract)
 
     # ------- legacy fallback: partial-auto pmean + GSPMD-land window push
+    if hwa_cfg.resilient:
+        raise ValueError("resilient HWA requires the mesh-resident packed "
+                         "sync path (the legacy GSPMD fallback has no "
+                         "alive-masked formulation)")
     if len(topology.replica_axes) != 1:
         raise ValueError("the legacy GSPMD fallback handles a single "
                          f"replica axis only, got {topology.replica_axes}")

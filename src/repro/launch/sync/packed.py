@@ -273,7 +273,9 @@ def _push_window_groups(hwa_cfg: HWAConfig, bounds, rings, totals, mean,
 def _local_packed_sync(hwa_cfg: HWAConfig, lspec, K: int,
                        psum_axes: tuple[tuple[str, ...], ...],
                        use_kernel: bool, with_stride: bool, inner, ring,
-                       total, count, next_idx, cycle):
+                       total, count, next_idx, cycle, *,
+                       health_axes: tuple[str, ...] = (),
+                       health_scale: int = 1):
     """Per-device body of the mesh-resident packed sync.
 
     Runs under a FULLY-MANUAL shard_map (every mesh axis manual), so the
@@ -301,6 +303,26 @@ def _local_packed_sync(hwa_cfg: HWAConfig, lspec, K: int,
     bit-identical to the flat mean (``core.online.halving_sum_axis0``).
     With K resident on a single device (all groups empty) even the psum
     disappears and the whole sync fuses into one kernel launch.
+
+    With ``hwa_cfg.resilient`` the K-mean becomes the alive-masked
+    elastic mean (``repro.resilience.health``): per-replica health stats
+    are aggregated over each replica's parameter shards with ONE psum
+    over ``health_axes`` (the non-replica mesh axes of size > 1;
+    ``health_scale`` is their device-count product, used for the static
+    RMS denominator), the alive count crosses the replica levels as its
+    own tiny psum, and the weight psum reduces
+    ``halving_sum_axis0(where(alive, sbuf, 0)) * (1/k_alive)`` — bitwise
+    identical to the plain path when everyone is alive (the inv pins to
+    the trace-time ``f32(1/K)``; see ``resilience.health``). The
+    k_alive→inv→weight-partial data dependency deliberately keeps the
+    two replica-level all-reduces unmergeable by XLA's combiner, so the
+    resilient collective contract is an exact count (2 per level + 1
+    health crossing). Kernels are bypassed when resilient (they cannot
+    mask); the returned alive mask is the 8th output.
+
+    Returns ``(new_inner, ring, total, count, next_idx, wa, cycle,
+    alive)`` — alive is the per-device ``(k_local,)`` bool mask of its
+    resident replicas (all-true when not resilient).
     """
     from repro.common.packing import pack_stacked, unpack
     from repro.core.online import broadcast_to_replicas, halving_sum_axis0
@@ -314,8 +336,10 @@ def _local_packed_sync(hwa_cfg: HWAConfig, lspec, K: int,
     sbuf = pack_stacked(inner, lspec)            # (K_local, P_local) f32
     k_local = sbuf.shape[0]
     collective = any(psum_axes)
+    resilient = hwa_cfg.resilient
+    alive = jnp.ones((k_local,), jnp.bool_)
     ring_f32 = all(r.dtype == jnp.float32 for r in rings)
-    fused = (use_kernel and not collective and ring_f32
+    fused = (use_kernel and not collective and ring_f32 and not resilient
              and (not with_stride or hwa_cfg.window_stride == 1))
     if fused:
         # whole sync in ONE launch per group on its local slice: K-mean +
@@ -337,6 +361,33 @@ def _local_packed_sync(hwa_cfg: HWAConfig, lspec, K: int,
             avgs.append(a)
         new_nidx = jnp.mod(idx + 1, I)
         new_cycle = cycle + 1
+    elif resilient:
+        from repro.resilience.health import (alive_from_stats,
+                                             packed_health_stats,
+                                             renormalized_inv)
+        stats = packed_health_stats(sbuf)        # (k_local, 2) f32
+        if health_axes:
+            # aggregate each resident replica's stats over its parameter
+            # shards — crosses ONLY non-replica axes (the contract's
+            # budgeted `other_ops` all-reduce)
+            stats = jax.lax.psum(stats, health_axes)
+        n_elems = float(sbuf.shape[1] * health_scale)
+        alive = alive_from_stats(stats, n_elems, hwa_cfg.max_param_rms)
+        k_alive = _psum_composition(jnp.sum(alive.astype(jnp.float32)),
+                                    psum_axes)
+        # all-dead: drop the mask, degrade to today's plain mean (the
+        # run is unsalvageable; k_alive==0 makes it observable instead
+        # of silently restarting everyone from zeros)
+        alive = alive | (k_alive == 0.0)
+        k_eff = jnp.where(k_alive > 0.0, k_alive, jnp.float32(K))
+        inv = renormalized_inv(k_eff, K)
+        part = halving_sum_axis0(
+            jnp.where(alive[:, None], sbuf, jnp.float32(0.0))) * inv
+        mean = _psum_composition(part, psum_axes)
+        rs2, ts2, avgs, new_count, new_nidx, new_cycle = \
+            _push_window_groups(hwa_cfg, bounds, rings, totals, mean,
+                                count, next_idx, cycle, use_kernel,
+                                with_stride)
     else:
         if use_kernel and k_local == 2 and len(gt) == 1:
             # the kernel's row reduction is jnp.sum order — a single IEEE
@@ -372,7 +423,7 @@ def _local_packed_sync(hwa_cfg: HWAConfig, lspec, K: int,
     ring_out = tuple(rs2) if grouped else rs2[0]
     total_out = tuple(ts2) if grouped else ts2[0]
     return (new_inner, ring_out, total_out, new_count, new_nidx, wa,
-            new_cycle)
+            new_cycle, alive)
 
 
 def _local_inner_sync(lspec, pod_size: int,
@@ -405,7 +456,8 @@ def _local_inner_sync(lspec, pod_size: int,
 def packed_sync_launch_budget(hwa_cfg: HWAConfig, *, use_kernel: bool,
                               n_groups: int, k_local: int,
                               collective: bool, with_stride: bool,
-                              ring_f32: bool = True) -> int:
+                              ring_f32: bool = True,
+                              resilient: bool | None = None) -> int:
     """Static Pallas-launch count of :func:`_local_packed_sync`.
 
     The single source of truth the builders' declared
@@ -415,14 +467,18 @@ def packed_sync_launch_budget(hwa_cfg: HWAConfig, *, use_kernel: bool,
     per group; otherwise the mean kernel runs only in the ungrouped
     ``k_local == 2`` case and the window push costs one launch per group
     (``cond`` branches under ``window_stride > 1`` included — the budget
-    is a static program property, not a per-call trace).
+    is a static program property, not a per-call trace). The resilient
+    (alive-masked) sync bypasses the fused and mean kernels — they
+    cannot mask — leaving only the per-group window pushes.
     """
+    if resilient is None:
+        resilient = hwa_cfg.resilient
     if not use_kernel:
         return 0
-    fused = (not collective and ring_f32
+    fused = (not collective and ring_f32 and not resilient
              and (not with_stride or hwa_cfg.window_stride == 1))
     if fused:
         return n_groups
-    mean = 1 if (k_local == 2 and n_groups == 1) else 0
+    mean = 1 if (k_local == 2 and n_groups == 1 and not resilient) else 0
     push = n_groups if ring_f32 else 0
     return mean + push

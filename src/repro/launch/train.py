@@ -49,6 +49,7 @@ def run_mesh_native(args) -> dict:
     """
     import jax
     import jax.numpy as jnp
+    import numpy as np
 
     from repro.common.compat import make_mesh, use_mesh
     from repro.launch.specs import input_specs
@@ -89,7 +90,9 @@ def run_mesh_native(args) -> dict:
                          "families only")
     lm = build_model(cfg)
     hwa_cfg = HWAConfig(n_replicas=K, window=args.window,
-                        outer_every=args.outer_every if tree else 1)
+                        outer_every=args.outer_every if tree else 1,
+                        resilient=args.resilient,
+                        max_param_rms=args.max_param_rms or None)
     shape = InputShape("mesh_native", seq_len=args.seq_len,
                        global_batch=args.batch_size, kind="train")
     specs, dims = input_specs(cfg, shape)
@@ -113,6 +116,28 @@ def run_mesh_native(args) -> dict:
     ring, total = window_buffers(spec, args.window)
     count = nidx = cycle = jnp.zeros((), jnp.int32)
 
+    inject = None
+    if args.inject_nan:
+        s, _, r = args.inject_nan.partition(":")
+        inject = (int(s), int(r))
+        if not 0 <= inject[1] < K:
+            raise SystemExit(f"--inject-nan replica {inject[1]} out of "
+                             f"range [0, {K})")
+
+    session = None
+    if args.checkpoint_dir and args.checkpoint_every > 0:
+        from repro.resilience.session import CheckpointSession
+        session = CheckpointSession(args.checkpoint_dir, keep=args.keep)
+    if session is None and args.resume:
+        raise SystemExit("--resume needs --checkpoint-dir and "
+                         "--checkpoint-every")
+
+    def _window_like(ring, total, count, nidx):
+        from repro.core.offline import WindowState
+        return WindowState(ring=ring, total=total, count=count,
+                           next_idx=nidx, window=args.window, kind="ring",
+                           spec=spec)
+
     train_c = train.lower(mesh).compile()
     sync_c = sync.lower(mesh).compile()
     inner_sync_c = inner_sync.lower(mesh).compile() if inner_sync else None
@@ -120,8 +145,42 @@ def run_mesh_native(args) -> dict:
     loss = float("nan")
     history = []
     sync_idx = 0
+    start_step = 0
+    k_alive_min = K
+    if session is not None and args.resume:
+        latest = session.latest_intact()
+        if latest is not None:
+            # everything else about the run — batches, schedules — is a
+            # stateless function of (seed, step): restoring the arrays
+            # and the step counter IS a bit-exact resume
+            inner = jax.device_put(session.load(latest, "inner", inner),
+                                   train.in_shardings[0])
+            inner_opt = jax.device_put(
+                session.load(latest, "inner_opt", inner_opt),
+                train.in_shardings[1])
+            wa = jax.device_put(session.load(latest, "wa", wa),
+                                sync.out_shardings[5])
+            ws = session.load_window(
+                latest, _window_like(ring, total, count, nidx))
+            ring = jax.device_put(ws.ring, sync.in_shardings[1])
+            total = jax.device_put(ws.total, sync.in_shardings[2])
+            count, nidx = ws.count, ws.next_idx
+            meta = session.meta(latest)
+            start_step = int(meta["step"])
+            cycle = jnp.asarray(meta["cycle"], jnp.int32)
+            sync_idx = int(meta["sync_idx"])
+            loss = float(meta["loss"])
+            history = list(meta.get("history", []))
+            print(f"[mesh-native] resumed from step {start_step} "
+                  f"({session.step_dir(latest)})")
     with use_mesh(mesh):
-        for step in range(args.steps):
+        for step in range(start_step, args.steps):
+            if inject is not None and step == inject[0]:
+                from repro.resilience.faults import poison_replica
+                inner = jax.device_put(poison_replica(inner, inject[1]),
+                                       train.in_shardings[0])
+                print(f"[mesh-native] step {step}: injected NaN into "
+                      f"replica {inject[1]}")
             ks = jax.random.split(jax.random.key(1000 + step), 2)
             batch = {
                 "tokens": jax.random.randint(
@@ -132,7 +191,12 @@ def run_mesh_native(args) -> dict:
                     cfg.vocab_size),
             }
             inner, inner_opt, losses = train_c(inner, inner_opt, batch)
-            loss = float(jnp.mean(losses))
+            # reduce on host: jnp.mean over the replica-sharded losses
+            # would launch a tiny all-reduce executable whose straggler
+            # groups keep holding collective threads after float() reads
+            # device 0's shard — the next dispatched step then deadlocks
+            # the CPU rendezvous pool. device_get drains every shard.
+            loss = float(np.mean(jax.device_get(losses)))
             if (step + 1) % H == 0:
                 if inner_sync_c is not None and not topo.is_outer(sync_idx):
                     # pod-internal restart: zero cross-pod traffic, no
@@ -143,19 +207,58 @@ def run_mesh_native(args) -> dict:
                     print(f"[mesh-native] step {step + 1} loss {loss:.4f} "
                           f"inner sync (pods avg internally)")
                 else:
-                    inner, ring, total, count, nidx, wa, cycle = sync_c(
-                        inner, ring, total, count, nidx, cycle)
-                    history.append({"step": step + 1, "loss": loss,
-                                    "sync": "outer", "cycle": int(cycle)})
-                    print(f"[mesh-native] step {step + 1} loss {loss:.4f} "
-                          f"cycle {int(cycle)} (K={K}, "
-                          f"mesh={dict(mesh.shape)})")
+                    if args.resilient:
+                        (inner, ring, total, count, nidx, wa, cycle,
+                         alive) = sync_c(inner, ring, total, count, nidx,
+                                         cycle)
+                        k_alive = int(np.sum(jax.device_get(alive)))
+                        k_alive_min = min(k_alive_min, k_alive)
+                        if k_alive < K:
+                            # the sync already restarted the dead replica
+                            # from W̄; its stale momentum goes too
+                            from repro.resilience.health import \
+                                quarantine_opt_state
+                            inner_opt = jax.device_put(
+                                quarantine_opt_state(inner_opt, alive),
+                                train.in_shardings[1])
+                        history.append({"step": step + 1, "loss": loss,
+                                        "sync": "outer",
+                                        "cycle": int(cycle),
+                                        "k_alive": k_alive})
+                        print(f"[mesh-native] step {step + 1} loss "
+                              f"{loss:.4f} cycle {int(cycle)} "
+                              f"k_alive {k_alive}/{K}")
+                    else:
+                        inner, ring, total, count, nidx, wa, cycle = sync_c(
+                            inner, ring, total, count, nidx, cycle)
+                        history.append({"step": step + 1, "loss": loss,
+                                        "sync": "outer",
+                                        "cycle": int(cycle)})
+                        print(f"[mesh-native] step {step + 1} loss "
+                              f"{loss:.4f} cycle {int(cycle)} (K={K}, "
+                              f"mesh={dict(mesh.shape)})")
                 sync_idx += 1
+            if session is not None and \
+                    (step + 1) % args.checkpoint_every == 0:
+                session.save(
+                    step + 1,
+                    {"inner": inner, "inner_opt": inner_opt, "wa": wa},
+                    window=_window_like(ring, total, count, nidx),
+                    meta={"step": step + 1, "cycle": int(cycle),
+                          "sync_idx": sync_idx, "loss": loss,
+                          "history": history})
+    wa_finite = all(bool(np.all(np.isfinite(jax.device_get(x))))
+                    for x in jax.tree.leaves(wa)
+                    if jnp.issubdtype(x.dtype, jnp.floating))
     out = {"final_loss": loss, "cycles": int(cycle), "syncs": sync_idx,
            "history": history, "sync_tree": args.sync_tree,
-           "mesh": {k: int(v) for k, v in mesh.shape.items()}}
+           "wa_finite": wa_finite, "k_alive_min": k_alive_min,
+           "mesh": {k: int(v) for k, v in mesh.shape.items()},
+           "_state": {"inner": inner, "wa": wa, "ring": ring,
+                      "total": total}}
     print(f"[mesh-native] done: {out['cycles']} outer cycles / "
-          f"{sync_idx} syncs, final loss {out['final_loss']:.4f}")
+          f"{sync_idx} syncs, final loss {out['final_loss']:.4f}, "
+          f"wa_finite {wa_finite}")
     return out
 
 
@@ -199,7 +302,34 @@ def main():
                     help="mesh-native only: model (tensor-parallel) axis "
                          "size; with --fsdp this yields true mixed "
                          "data×model leaf tilings")
+    ap.add_argument("--resilient", action="store_true",
+                    help="alive-masked sync: a replica whose weights go "
+                         "non-finite (or whose RMS exceeds "
+                         "--max-param-rms) is excluded from the K-mean "
+                         "and re-seeded from W̄ at the next sync")
+    ap.add_argument("--max-param-rms", type=float, default=0.0,
+                    help="resilient only: divergence threshold on a "
+                         "replica's parameter RMS (0 = finiteness only)")
+    ap.add_argument("--inject-nan", default="",
+                    help="fault injection (mesh-native only): STEP:REPLICA "
+                         "— poison that replica's weights with NaN before "
+                         "that step")
+    ap.add_argument("--checkpoint-dir", default="",
+                    help="preemption-safe checkpoint session directory "
+                         "(manifest-last + CRC-verified)")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="steps between checkpoints (0 = off)")
+    ap.add_argument("--keep", type=int, default=3,
+                    help="checkpoints retained (older ones are GC'd)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the newest INTACT checkpoint in "
+                         "--checkpoint-dir (bit-exact: torn/corrupted "
+                         "saves are skipped)")
     args = ap.parse_args()
+
+    if args.inject_nan and not args.mesh_native:
+        raise SystemExit("--inject-nan needs --mesh-native (use "
+                         "tools/fault_check.py for the in-process legs)")
 
     if args.mesh_native:
         out = run_mesh_native(args)
@@ -207,7 +337,10 @@ def main():
             os.makedirs(os.path.dirname(os.path.abspath(args.out)),
                         exist_ok=True)
             with open(args.out, "w") as f:
-                json.dump(out, f, indent=2)
+                # "_"-prefixed keys carry device arrays for in-process
+                # callers (fault harness) — not JSON material
+                json.dump({k: v for k, v in out.items()
+                           if not k.startswith("_")}, f, indent=2)
         return
 
     cfg = get_smoke_config(args.arch)
@@ -224,7 +357,11 @@ def main():
         method=args.method, total_steps=args.steps,
         batch_size=args.batch_size, base_lr=args.lr, seed=args.seed,
         hwa=HWAConfig(n_replicas=K, sync_period=args.sync_period,
-                      window=args.window))
+                      window=args.window, resilient=args.resilient,
+                      max_param_rms=args.max_param_rms or None),
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every,
+        checkpoint_keep=args.keep, resume=args.resume)
     out = Trainer(lm_task(lm, pipe), tc).run(log=True)
     print(f"[train] {args.arch}/{args.method}: final {out['final']}, "
           f"best {out['best']}")

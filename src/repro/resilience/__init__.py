@@ -1,0 +1,45 @@
+"""Fault tolerance for HWA: replica health + elastic degradation,
+preemption-safe checkpoint sessions, and deterministic fault injection.
+
+Three layers (docs/ARCHITECTURE.md §6):
+
+- :mod:`repro.resilience.health` — the alive-mask math: per-replica
+  finiteness/divergence probes over the packed sync buffer (mesh path)
+  and over stacked pytrees (core path), and the renormalized
+  ``1/K_alive`` masked mean that is bitwise identical to today's plain
+  mean when every replica is healthy.
+- :mod:`repro.resilience.session` — :class:`CheckpointSession`: a
+  versioned checkpoint directory (per-step subdirs, manifest written
+  last with per-array CRC32s, retention/GC, ``latest`` hint) layered on
+  the atomic npz writers in ``checkpoint/io.py``; ``latest_intact()``
+  falls back past torn or corrupted checkpoints.
+- :mod:`repro.resilience.faults` — deterministic fault injectors
+  (NaN-poisoned replicas, kill-mid-save, bit flips, transient IO
+  errors) used by ``tools/fault_check.py`` / ``make fault-check``.
+"""
+from repro.resilience.faults import (InjectedIOError, KillAt,
+                                     SimulatedCrash, TransientIO,
+                                     flip_bit, poison_replica,
+                                     truncate_file)
+from repro.resilience.health import (alive_from_stats, masked_mean_axis0,
+                                     packed_health_stats,
+                                     quarantine_opt_state,
+                                     replica_alive_mask, renormalized_inv)
+from repro.resilience.session import CheckpointSession
+
+__all__ = [
+    "CheckpointSession",
+    "InjectedIOError",
+    "KillAt",
+    "SimulatedCrash",
+    "TransientIO",
+    "alive_from_stats",
+    "flip_bit",
+    "masked_mean_axis0",
+    "packed_health_stats",
+    "poison_replica",
+    "quarantine_opt_state",
+    "renormalized_inv",
+    "replica_alive_mask",
+    "truncate_file",
+]

@@ -1,0 +1,143 @@
+"""Replica health probes and the alive-masked (elastic) K-mean.
+
+Two formulations, each 0 ULP identical to the path it degrades from
+when every replica is alive:
+
+- **Packed / mesh path** (used inside ``launch/sync/packed.py``'s
+  fully-manual shard_map body): the probe runs over the packed f32
+  ``(k_local, P_local)`` sync buffer. The masked partial is
+  ``halving_sum_axis0(where(alive, sbuf, 0)) * inv`` with ``inv``
+  pinned to the trace-time ``float32(1/K)`` whenever ``k_alive == K``
+  — a ``where`` with an all-true mask is the identity and the
+  multiplier is the exact same f32 scalar today's path uses, so the
+  all-healthy output is bitwise identical to the non-resilient sync.
+- **Core / stacked path** (used by ``core.hwa.hwa_sync``): the target
+  is ``jnp.mean(x, axis=0)`` (a sum *divided* by the count, possibly
+  computed in a wider dtype), so instead of replaying its internals the
+  masked mean computes both and selects —
+  ``where(all_alive, jnp.mean(x, 0), masked)`` — which guarantees exact
+  equality in the healthy case for every leaf dtype.
+
+Divergence (RMS) thresholds are APPROXIMATE by design: the packed
+buffer counts padding zeros and replicated leaves once per shard copy,
+so ``max_param_rms`` is a coarse blow-up detector, not a norm. The
+finiteness verdict is exact in both formulations.
+
+All-dead degradation: when every replica trips the probe there is
+nothing left to average, so the mask is dropped and the sync degrades
+to today's plain mean (the run is unsalvageable either way; the
+``k_alive == 0`` metric makes it observable instead of silently
+restarting from zeros).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def packed_health_stats(sbuf: jax.Array) -> jax.Array:
+    """Per-replica ``(k_local, 2)`` f32 health stats of a packed buffer:
+    ``[:, 0]`` = non-finite element count, ``[:, 1]`` = finite-masked
+    sum of squares. Both are sums, so aggregating a replica's stats over
+    its parameter shards is a single psum over the non-replica axes."""
+    finite = jnp.isfinite(sbuf)
+    nonfinite = jnp.sum((~finite).astype(jnp.float32), axis=1)
+    masked = jnp.where(finite, sbuf, jnp.float32(0.0))
+    sumsq = jnp.sum(masked * masked, axis=1)
+    return jnp.stack([nonfinite, sumsq], axis=1)
+
+
+def alive_from_stats(stats: jax.Array, n_elems: float,
+                     max_rms: float | None) -> jax.Array:
+    """``(k_local,)`` bool alive mask from (already psum-aggregated)
+    health stats. ``n_elems`` is the static per-replica element count
+    the sumsq was accumulated over (local width × number of devices the
+    stats psum crossed — replication factors cancel, see module doc)."""
+    alive = stats[:, 0] == 0.0
+    if max_rms is not None:
+        ms = stats[:, 1] / jnp.float32(n_elems)
+        alive = alive & (ms <= jnp.float32(max_rms) ** 2)
+    return alive
+
+
+def renormalized_inv(k_alive: jax.Array, n_replicas: int) -> jax.Array:
+    """The masked-mean multiplier ``1/k_alive`` as an f32 scalar.
+
+    Pinned to the trace-time ``float32(1/K)`` when all replicas are
+    alive — a runtime ``1.0 / float(K)`` could differ by 1 ULP from the
+    constant the non-resilient path folds in, which would break the
+    all-healthy bitwise-parity guarantee."""
+    return jnp.where(k_alive >= n_replicas,
+                     jnp.float32(1.0 / n_replicas),
+                     jnp.float32(1.0) / jnp.maximum(k_alive,
+                                                    jnp.float32(1.0)))
+
+
+def replica_alive_mask(stacked, max_rms: float | None = None) -> jax.Array:
+    """``(K,)`` bool alive mask of a stacked (leading replica dim)
+    pytree: a replica is alive iff every one of its leaves is finite
+    (and, with ``max_rms``, its overall RMS is below the threshold)."""
+    leaves = [l for l in jax.tree.leaves(stacked)
+              if jnp.issubdtype(jnp.asarray(l).dtype, jnp.floating)]
+    if not leaves:
+        raise ValueError("replica_alive_mask: no floating leaves")
+    k = leaves[0].shape[0]
+    nonfinite = jnp.zeros((k,), jnp.float32)
+    sumsq = jnp.zeros((k,), jnp.float32)
+    n_elems = 0
+    for leaf in leaves:
+        x = jnp.asarray(leaf)
+        axes = tuple(range(1, x.ndim))
+        finite = jnp.isfinite(x)
+        nonfinite = nonfinite + jnp.sum((~finite).astype(jnp.float32),
+                                        axis=axes)
+        xf = jnp.where(finite, x, 0).astype(jnp.float32)
+        sumsq = sumsq + jnp.sum(xf * xf, axis=axes)
+        n_elems += int(x.size // x.shape[0])
+    stats = jnp.stack([nonfinite, sumsq], axis=1)
+    return alive_from_stats(stats, float(n_elems), max_rms)
+
+
+def masked_mean_axis0(stacked, alive: jax.Array):
+    """Alive-masked mean over the leading replica dim of a stacked
+    pytree, bitwise identical to ``jnp.mean(x, axis=0)`` per leaf when
+    every replica is alive (computed via select, so the parity holds
+    for any leaf dtype / accumulation width ``jnp.mean`` picks). Dead
+    replicas contribute nothing; the divisor renormalizes to the alive
+    count. All-dead degrades to the plain mean (module doc)."""
+    k = int(alive.shape[0])
+    k_alive = jnp.sum(alive.astype(jnp.float32))
+    all_alive = k_alive >= k
+    # all-dead: drop the mask entirely (plain mean of everyone)
+    use = alive | (k_alive == 0.0)
+    denom = jnp.where(k_alive > 0.0, jnp.maximum(k_alive, 1.0),
+                      jnp.float32(k))
+
+    def one(x):
+        x = jnp.asarray(x)
+        mean_all = jnp.mean(x, axis=0)
+        mask = use.reshape((k,) + (1,) * (x.ndim - 1))
+        s = jnp.sum(jnp.where(mask, x.astype(jnp.float32), 0.0), axis=0)
+        masked = (s / denom).astype(mean_all.dtype)
+        return jnp.where(all_alive, mean_all, masked)
+
+    return jax.tree.map(one, stacked)
+
+
+def quarantine_opt_state(opt_state, alive: jax.Array):
+    """Zero the per-replica optimizer slots of dead replicas (zeros ==
+    the fresh-init moments/counters of this repo's sgd/adamw states), so
+    a quarantined replica restarts from W̄ with a clean optimizer instead
+    of NaN momentum. Leaves whose leading dim is not the replica dim
+    pass through untouched; with all replicas alive every ``where`` is
+    the identity."""
+    k = int(alive.shape[0])
+
+    def one(o):
+        o = jnp.asarray(o)
+        if o.ndim == 0 or o.shape[0] != k:
+            return o
+        mask = alive.reshape((k,) + (1,) * (o.ndim - 1))
+        return jnp.where(mask, o, jnp.zeros_like(o))
+
+    return jax.tree.map(one, opt_state)

@@ -57,6 +57,13 @@ class TrainConfig:
     sam_rho: float = 0.05
     eval_every: int = 0             # 0 → every sync cycle
     seed: int = 0
+    # preemption-safe checkpointing (resilience.CheckpointSession); the
+    # data pipeline and schedules are stateless functions of (seed, step),
+    # so restoring the saved state + step resumes bit-exactly
+    checkpoint_dir: str = ""        # "" → no checkpointing
+    checkpoint_every: int = 0       # steps between saves (0 → off)
+    checkpoint_keep: int = 3        # retained checkpoints
+    resume: bool = False            # restart from the newest intact save
 
 
 @dataclasses.dataclass
@@ -192,10 +199,36 @@ class Trainer:
                       f"test {rec['test_loss']:.4f} acc {rec['test_acc']:.4f}")
             return rec
 
+        session = None
+        if tc.checkpoint_dir and tc.checkpoint_every > 0:
+            from repro.resilience.session import CheckpointSession
+            session = CheckpointSession(tc.checkpoint_dir,
+                                        keep=tc.checkpoint_keep)
+        if session is None and tc.resume:
+            raise ValueError("resume=True needs checkpoint_dir and "
+                             "checkpoint_every set")
+        if session is not None and not self.is_parallel:
+            raise ValueError("checkpointing covers the K-replica methods "
+                             f"(hwa/online/pmsgd), not {tc.method!r}")
+
         if self.is_parallel:
             state = hwa_init(self.hwa_cfg, params, self.optimizer)
             train_loss = jnp.zeros(())
-            for step in range(tc.total_steps):
+            start_step = 0
+            if session is not None and tc.resume:
+                latest = session.latest_intact()
+                if latest is not None:
+                    state = session.load(latest, "hwa", state)
+                    meta = session.meta(latest)
+                    start_step = int(meta["step"])
+                    history = list(meta.get("history", []))
+                    best.update(meta.get("best", {}))
+                    train_loss = jnp.asarray(meta.get("train_loss", 0.0))
+                    if log:
+                        print(f"[{self.task.name}/{tc.method}] resumed "
+                              f"from step {start_step} "
+                              f"({session.step_dir(start_step)})")
+            for step in range(start_step, tc.total_steps):
                 state, metrics = self._hwa_step(state, step)
                 train_loss = metrics["loss"]
                 if (step + 1) % self.sync_period == 0:
@@ -213,6 +246,15 @@ class Trainer:
                     if ((step + 1) // self.sync_period) % max(
                             eval_every // self.sync_period, 1) == 0:
                         record(step + 1, train_loss, state.wa, views)
+                if session is not None and \
+                        (step + 1) % tc.checkpoint_every == 0:
+                    # HWAState is one registered-dataclass pytree (the
+                    # WindowState layout rides in its meta fields), so a
+                    # single named tree round-trips everything bit-exactly
+                    session.save(step + 1, {"hwa": state},
+                                 meta={"step": step + 1, "history": history,
+                                       "best": dict(best),
+                                       "train_loss": float(train_loss)})
             final_params = state.wa
         else:
             opt_state = self.optimizer.init(params)

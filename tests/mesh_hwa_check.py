@@ -328,6 +328,76 @@ check(f"fsdp sync: pallas launches ≤ n_groups "
       f"({n_launch_f} ≤ {spec_f.n_groups})",
       1 <= n_launch_f <= spec_f.n_groups)
 
+# ---- resilient (alive-masked) sync ----------------------------------------
+# With hwa_cfg.resilient the K-mean becomes the alive-masked elastic
+# mean (repro.resilience.health). Contract checked here: (a) with every
+# replica healthy it is BITWISE identical to the plain packed sync —
+# masking with an all-true mask adds exact zeros and the renormalized
+# inverse pins the trace-time f32(1/K); (b) a NaN-poisoned replica is
+# excluded and re-seeded from the finite W̄ of the survivors; (c) the
+# lowered HLO carries exactly 2 replica-crossing all-reduces (k_alive +
+# masked weights, unmergeable by construction) plus the budgeted
+# non-replica health-stats psum — audited via the bundle's own contract.
+from repro.analysis.collectives import check_collective_contract
+from repro.resilience.faults import poison_replica
+
+hwa_cfg_r = HWAConfig(n_replicas=K, window=3, resilient=True)
+sync_r = make_mesh_hwa_sync_step(lm, rules, hwa_cfg_r)
+sync_rc = sync_r.lower(mesh).compile()
+spec_r = sync_r.pack_spec
+check("resilient sync: same packed layout as the plain sync",
+      spec_r.padded == spec.padded)
+
+
+def fresh_window_r():
+    return (jnp.zeros((hwa_cfg_r.window, spec_r.padded), jnp.float32),
+            jnp.zeros((spec_r.padded,), jnp.float32))
+
+
+ring_r, total_r = fresh_window_r()
+with use_mesh(mesh):
+    (r_inner, r_ring, r_total, r_count, r_nidx, r_wa, r_cycle,
+     r_alive) = sync_rc(jax.tree.map(jnp.array, a_host), ring_r, total_r,
+                        zero, zero, zero)
+check("resilient sync (all healthy): alive mask is all-true",
+      bool(jnp.all(r_alive)) and r_alive.shape == (K,))
+check("resilient sync (all healthy): restart BIT-equal to plain sync",
+      tree_equal(to_host(r_inner), to_host(s_inner)))
+check("resilient sync (all healthy): W̿ BIT-equal to plain sync",
+      tree_equal(to_host(r_wa), to_host(s_wa)))
+check("resilient sync (all healthy): ring/total BIT-equal to plain sync",
+      tree_equal(to_host((r_ring, r_total)), to_host((s_ring, s_total))))
+check("resilient sync (all healthy): counters match plain sync",
+      int(r_count) == int(s_count) and int(r_cycle) == int(s_cycle))
+
+# (b) poison replica 1: survivors' mean is replica 0 exactly (K=2), so
+# every replica restarts bit-equal to replica 0's pre-sync weights
+poisoned = jax.tree.map(jnp.array, poison_replica(a_host, 1))
+ring_r, total_r = fresh_window_r()
+with use_mesh(mesh):
+    (p_inner, _, _, _, _, p_wa, _, p_alive) = sync_rc(
+        poisoned, ring_r, total_r, zero, zero, zero)
+check("resilient sync (poisoned): alive mask excludes replica 1",
+      bool(p_alive[0]) and not bool(p_alive[1]))
+check("resilient sync (poisoned): W̿ finite",
+      all(bool(jnp.all(jnp.isfinite(x))) for x in jax.tree.leaves(p_wa)))
+rep0 = jax.tree.map(lambda x: x[0], a_host)
+check("resilient sync (poisoned): restart bit-equal to the lone "
+      "survivor's weights",
+      tree_equal(to_host(jax.tree.map(lambda x: x[0], p_inner)), rep0)
+      and tree_equal(to_host(jax.tree.map(lambda x: x[1], p_inner)), rep0))
+
+# (c) collective structure: the bundle's declarative contract (2 replica
+# all-reduces + 1 budgeted non-replica health psum, zero assembly)
+r_contract = check_collective_contract(sync_rc.as_text(), mesh,
+                                       sync_r.contract.collectives)
+check(f"resilient sync: collective contract holds "
+      f"(violations={r_contract['violations']})", r_contract["ok"])
+n_rep_r = len(collectives_crossing_axis(sync_rc.as_text(), mesh,
+                                        "replica"))
+check(f"resilient sync: exactly 2 replica-crossing collectives "
+      f"(found {n_rep_r})", n_rep_r == 2)
+
 # vmap-path train step, for contrast, is *allowed* replica traffic (GSPMD
 # may or may not insert it) — we only report it, the guarantee is the
 # shard_map path's.

@@ -326,6 +326,52 @@ def test_collective_contract_flat_and_empty():
                                          silent)["ok"]
 
 
+def test_collective_contract_other_ops_budget():
+    """The resilient sync's health-stats psum crosses ONLY non-replica
+    axes; ``other_ops`` budgets it EXACTLY instead of tripping (or
+    silencing) the zero-assembly claim."""
+    mesh = _fake_mesh({"replica": 2, "data": 2, "model": 2})
+    rep = ('  %ar.0 = f32[64]{0} all-reduce(f32[64]{0} %p0), '
+           'replica_groups={{0,4},{1,5},{2,6},{3,7}}, to_apply=%add')
+    # health stats: one all-reduce joint over data×model, replica-local
+    stats = ('  %ar.1 = f32[4]{0} all-reduce(f32[4]{0} %p1), '
+             'replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add')
+    plain = CollectiveContract(axis="replica", ops={"all-reduce": 1})
+    res = check_collective_contract(
+        "\n".join([_HDR, rep, stats, ""]), mesh, plain)
+    assert not res["ok"]
+    assert any("assembly" in v for v in res["violations"])
+
+    budgeted = CollectiveContract(axis="replica", ops={"all-reduce": 1},
+                                  other_ops={"all-reduce": 1})
+    res = check_collective_contract(
+        "\n".join([_HDR, rep, stats, ""]), mesh, budgeted)
+    assert res["ok"], res["violations"]
+    # a joint data×model group is still ONE budgeted collective, not two
+    assert sum("%ar.1" in ln for ln in res["evidence"]) == 1
+
+    # the budget is EXACT both ways: a vanished health psum is a drifted
+    # program, not a win
+    res = check_collective_contract("\n".join([_HDR, rep, ""]), mesh,
+                                    budgeted)
+    assert not res["ok"]
+    # and a collective spanning replica AND a non-level axis is miswired
+    # level traffic — never absorbed by the other_ops budget
+    mixed = ('  %ar.2 = f32[64]{0} all-reduce(f32[64]{0} %p0), '
+             'replica_groups={{0,1,4,5},{2,3,6,7}}, to_apply=%add')
+    res = check_collective_contract(
+        "\n".join([_HDR, rep, stats, mixed, ""]), mesh, budgeted)
+    assert not res["ok"]
+    assert any("both the" in v for v in res["violations"])
+
+    # factory plumbing: sync_contract pins the budget on the contract
+    c = sync_contract(("replica",), launches=0,
+                      other_ops={"all-reduce": 1})
+    assert c.collectives.other_ops == {"all-reduce": 1}
+    assert sync_contract(("replica",), launches=0) \
+        .collectives.other_ops == {}
+
+
 def test_contract_factories():
     c = sync_contract(("replica",), launches=1)
     assert c.collectives.ops == {"all-reduce": 1}

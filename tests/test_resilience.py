@@ -1,0 +1,296 @@
+"""Resilience stack: alive-mask math, fault injectors, checkpoint
+sessions, and bit-exact resume.
+
+The plain (stacked) trainer's resume-exactness is checked in-process
+here; the mesh-native path needs 8 forced host devices, so it runs as a
+subprocess through ``tools/fault_check.py --only resume-exact`` (the
+same leg `make fault-check` runs in CI)."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.resilience import (CheckpointSession, InjectedIOError, KillAt,
+                              SimulatedCrash, TransientIO, flip_bit,
+                              masked_mean_axis0, poison_replica,
+                              quarantine_opt_state, renormalized_inv,
+                              replica_alive_mask, truncate_file)
+
+
+# ------------------------------------------------------- alive-mask math
+
+
+def _stacked(k=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": jnp.asarray(rng.standard_normal((k, 3, 5)).astype(np.float32)),
+        "b": jnp.asarray(rng.standard_normal((k, 7)).astype(np.float32)
+                         ).astype(jnp.bfloat16),
+        "count": jnp.full((k,), 3, jnp.int32),
+    }
+
+
+def _bits_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        xa, ya = np.asarray(x), np.asarray(y)
+        assert xa.dtype == ya.dtype and xa.shape == ya.shape
+        assert np.array_equal(xa, ya), (xa, ya)
+
+
+def test_masked_mean_all_alive_is_plain_mean_bitwise():
+    from repro.common.pytree import tree_mean_axis0
+    tree = _stacked()
+    alive = jnp.ones((4,), jnp.bool_)
+    _bits_equal(jax.jit(masked_mean_axis0)(tree, alive),
+                tree_mean_axis0(tree))
+
+
+def test_masked_mean_excludes_dead_replica():
+    tree = _stacked()
+    dead = 1
+    tree["w"] = tree["w"].at[dead].set(jnp.nan)
+    alive = jnp.ones((4,), jnp.bool_).at[dead].set(False)
+    got = masked_mean_axis0(tree, alive)
+    assert bool(jnp.all(jnp.isfinite(got["w"])))
+    keep = [i for i in range(4) if i != dead]
+    ref = np.asarray(_stacked()["w"], np.float64)[keep].mean(0)
+    np.testing.assert_allclose(np.asarray(got["w"], np.float64), ref,
+                               atol=1e-6)
+
+
+def test_masked_mean_all_dead_degrades_to_plain_mean():
+    """Nothing left to average: the mask is dropped (plain mean of
+    everyone) instead of restarting from zeros."""
+    from repro.common.pytree import tree_mean_axis0
+    tree = _stacked()
+    got = masked_mean_axis0(tree, jnp.zeros((4,), jnp.bool_))
+    want = tree_mean_axis0(tree)
+    _bits_equal(got["count"], want["count"])
+    np.testing.assert_allclose(np.asarray(got["w"]), np.asarray(want["w"]),
+                               atol=1e-6)
+
+
+def test_replica_alive_mask_finiteness_and_rms():
+    tree = _stacked()
+    assert bool(jnp.all(replica_alive_mask(tree)))
+    poisoned = dict(tree)
+    poisoned["w"] = tree["w"].at[2, 0, 0].set(jnp.inf)
+    mask = replica_alive_mask(poisoned)
+    assert [bool(m) for m in mask] == [True, True, False, True]
+    # divergence probe: blow one replica up past the RMS threshold
+    blown = dict(tree)
+    blown["w"] = tree["w"].at[0].mul(1e4)
+    mask = replica_alive_mask(blown, max_rms=100.0)
+    assert not bool(mask[0]) and bool(jnp.all(mask[1:]))
+
+
+def test_renormalized_inv_pins_trace_time_constant():
+    for k in (2, 3, 4, 6, 8):
+        pinned = renormalized_inv(jnp.float32(k), k)
+        assert np.asarray(pinned).tobytes() == \
+            np.float32(1.0 / k).tobytes()
+    # degraded: exact 1/k_alive (and never a division by zero)
+    assert float(renormalized_inv(jnp.float32(2.0), 4)) == 0.5
+    assert np.isfinite(float(renormalized_inv(jnp.float32(0.0), 4)))
+
+
+def test_quarantine_opt_state_zeros_dead_slots_only():
+    opt = {"mu": jnp.ones((4, 3, 5)), "nu": jnp.full((4, 7), 2.0),
+           "count": jnp.ones((), jnp.int32)}   # scalar: not per-replica
+    alive = jnp.array([True, False, True, True])
+    got = quarantine_opt_state(opt, alive)
+    assert bool(jnp.all(got["mu"][1] == 0)) and bool(jnp.all(got["nu"][1] == 0))
+    assert bool(jnp.all(got["mu"][0] == 1))
+    assert int(got["count"]) == 1              # passed through untouched
+    _bits_equal(quarantine_opt_state(opt, jnp.ones((4,), jnp.bool_)), opt)
+
+
+def test_poison_replica_targets_floating_leaves():
+    tree = _stacked()
+    got = poison_replica(tree, 2)
+    assert bool(jnp.all(jnp.isnan(got["w"][2])))
+    assert bool(jnp.all(jnp.isfinite(got["w"][0])))
+    _bits_equal(got["count"], tree["count"])   # int leaf untouched
+
+
+# --------------------------------------------------------- fault injectors
+
+
+def test_kill_at_fires_on_nth_occurrence(tmp_path):
+    p = str(tmp_path / "victim.bin")
+    with open(p, "wb") as f:
+        f.write(b"x" * 100)
+    kill = KillAt("manifest_write", occurrence=2, truncate_frac=0.5)
+    kill("array_write", p)                      # wrong point: no-op
+    kill("manifest_write", p)                   # occurrence 1: no-op
+    assert os.path.getsize(p) == 100
+    with pytest.raises(SimulatedCrash):
+        kill("manifest_write", p)               # occurrence 2: truncate+die
+    assert os.path.getsize(p) == 50
+    # SimulatedCrash models a preemption: it must escape `except Exception`
+    assert not issubclass(SimulatedCrash, Exception)
+    assert issubclass(SimulatedCrash, BaseException)
+
+
+def test_transient_io_raises_then_clears(tmp_path):
+    t = TransientIO("array_write", times=2)
+    for _ in range(2):
+        with pytest.raises(InjectedIOError):
+            t("array_write", "whatever")
+    t("array_write", "whatever")                # healed
+    assert issubclass(InjectedIOError, OSError)  # the retried class
+
+
+def test_truncate_and_flip_bit(tmp_path):
+    p = str(tmp_path / "blob.bin")
+    payload = bytes(range(256))
+    with open(p, "wb") as f:
+        f.write(payload)
+    truncate_file(p, frac=0.25)
+    assert os.path.getsize(p) == 64
+    flip_bit(p)
+    with open(p, "rb") as f:
+        got = f.read()
+    diff = [i for i in range(64) if got[i] != payload[i]]
+    assert len(diff) == 1                        # exactly one byte, one bit
+    assert bin(got[diff[0]] ^ payload[diff[0]]).count("1") == 1
+
+
+# ------------------------------------------------------ checkpoint session
+
+
+def _demo(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.standard_normal((5, 7)).astype(np.float32),
+            "b": rng.standard_normal((11,)).astype(np.float32)}
+
+
+def test_session_roundtrip_meta_and_gc(tmp_path):
+    sess = CheckpointSession(str(tmp_path), keep=2)
+    for step in (4, 8, 12):
+        sess.save(step, {"state": _demo(step)},
+                  meta={"step": step, "note": "hi"})
+    assert sess.steps() == [8, 12]               # keep=2 GC'd step 4
+    assert sess.latest_intact() == 12
+    assert sess.meta(12)["step"] == 12
+    _bits_equal(sess.load(12, "state", _demo(0)), _demo(12))
+    ok, problems = sess.verify(12)
+    assert ok, problems
+
+
+def test_session_falls_back_past_corruption(tmp_path):
+    sess = CheckpointSession(str(tmp_path), keep=3)
+    sess.save(4, {"state": _demo(4)})
+    sess.save(8, {"state": _demo(8)})
+    flip_bit(os.path.join(sess.step_dir(8), "state.npz"))
+    ok, problems = sess.verify(8)       # CRC mismatch or unreadable zip
+    assert not ok and problems, problems
+    assert sess.latest_intact() == 4
+    # a torn dir (no manifest) is not a checkpoint at all
+    os.remove(os.path.join(sess.step_dir(4), "manifest.json"))
+    assert sess.latest_intact() is None
+
+
+def test_session_retries_transient_io(tmp_path):
+    sess = CheckpointSession(str(tmp_path), retries=3, backoff=0.0,
+                             fault_injector=TransientIO("array_write",
+                                                        times=2),
+                             sleep=lambda s: None)
+    sess.save(4, {"state": _demo(1)})
+    assert sess.io_retries == 2
+    assert sess.latest_intact() == 4
+
+
+def test_session_kill_mid_manifest_keeps_previous(tmp_path):
+    sess = CheckpointSession(str(tmp_path),
+                             fault_injector=KillAt("manifest_write",
+                                                   occurrence=2,
+                                                   truncate_frac=0.4))
+    sess.save(4, {"state": _demo(4)})
+    with pytest.raises(SimulatedCrash):
+        sess.save(8, {"state": _demo(8)})
+    fresh = CheckpointSession(str(tmp_path))
+    assert fresh.latest_intact() == 4
+    _bits_equal(fresh.load(4, "state", _demo(0)), _demo(4))
+
+
+# -------------------------------------------------- bit-exact resume (plain)
+
+
+def _trainer(tmp_path=None, *, steps, resume=False, every=0):
+    from repro.core import HWAConfig
+    from repro.data import DataPipeline, make_markov_lm_dataset
+    from repro.models import build_model
+    from repro.models.types import ModelConfig
+    from repro.train import TrainConfig, Trainer, lm_task
+
+    tiny = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=32,
+                       n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=32,
+                       attn_impl="naive", remat="none", dtype="float32")
+    lm = build_model(tiny)
+    ds = make_markov_lm_dataset(vocab=32, seq_len=32, n_train=256,
+                                n_test=64, seed=0)
+    pipe = DataPipeline(ds, batch_size=8, n_replicas=2, seed=0)
+    tc = TrainConfig(method="hwa", total_steps=steps, batch_size=8,
+                     base_lr=0.5, eval_every=8,
+                     hwa=HWAConfig(n_replicas=2, sync_period=4, window=3),
+                     checkpoint_dir=str(tmp_path) if tmp_path else "",
+                     checkpoint_every=every, resume=resume)
+    return Trainer(lm_task(lm, pipe), tc)
+
+
+def test_trainer_resume_bit_exact(tmp_path):
+    """N steps, checkpoint, kill, resume: the resumed run's final W̿ (and
+    history) is bit-identical to the uninterrupted run's."""
+    clean = _trainer(steps=16).run()
+    # checkpointing must be observation-free on the training math
+    first = _trainer(tmp_path, steps=16, every=8).run()
+    _bits_equal(clean["params"], first["params"])
+    # "preemption": the newest (step-16) checkpoint is corrupted on disk;
+    # resume falls back to step 8 and recomputes 8..16 bit-exactly
+    flip_bit(os.path.join(str(tmp_path), "step_00000016", "hwa.npz"))
+    resumed = _trainer(tmp_path, steps=16, every=8, resume=True).run()
+    _bits_equal(clean["params"], resumed["params"])
+    assert [h["step"] for h in clean["history"]] == \
+        [h["step"] for h in resumed["history"]]
+    assert clean["history"][-1]["test_loss"] == \
+        resumed["history"][-1]["test_loss"]
+
+
+def test_trainer_resume_config_validation(tmp_path):
+    import dataclasses
+
+    with pytest.raises(ValueError, match="resume"):
+        _trainer(None, steps=4, resume=True).run()
+    bad = _trainer(tmp_path, steps=4, every=4)
+    bad.tc = dataclasses.replace(bad.tc, method="base")
+    bad.is_parallel = False
+    with pytest.raises(ValueError, match="K-replica"):
+        bad.run()
+
+
+# ------------------------------------------- mesh-native resume (subprocess)
+
+
+@pytest.mark.timeout(900)
+def test_mesh_native_resume_subprocess():
+    """`tools/fault_check.py --only resume-exact`: checkpoint at step 4 of
+    a mesh-native run, resume to 8, final state bit-identical to the
+    uninterrupted 8-step run (8 forced host devices)."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    script = os.path.join(root, "tools", "fault_check.py")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)       # the launcher sets the 8 host devices
+    proc = subprocess.run([sys.executable, script, "--only", "resume-exact"],
+                          capture_output=True, text=True, env=env,
+                          timeout=850)
+    print(proc.stdout)
+    print(proc.stderr[-2000:] if proc.stderr else "")
+    assert proc.returncode == 0, proc.stdout + proc.stderr[-2000:]
+    assert "ALL_OK" in proc.stdout

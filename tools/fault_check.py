@@ -1,0 +1,28 @@
+#!/usr/bin/env python
+"""fault-check: deterministic fault-injection harness over the
+resilience stack — NaN-poisoned replicas, kill-mid-save preemptions,
+bit-flipped checkpoints, transient IO errors — each leg an end-to-end
+scenario with a hard pass/fail verdict.
+
+Thin launcher: the mesh legs need 8 host devices, and XLA_FLAGS must be
+set BEFORE jax is first imported, so this wrapper does exactly that and
+then delegates to ``repro.resilience.check`` (the importable core).
+
+    python tools/fault_check.py [--smoke] [--json PATH] [--only SUBSTR]
+    make fault-check         # full set, report to fault_report.json
+
+Exit status: 0 iff every leg passes (``REPRO_FAULT_SMOKE=1`` selects
+the PR-lane subset, as in CI).
+"""
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
+
+from repro.resilience.check import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())
