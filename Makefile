@@ -8,8 +8,8 @@ export PYTHONPATH := src:$(PYTHONPATH)
 PYTEST_ARGS ?=
 
 .PHONY: test test-fast spmd mesh-hwa mesh-hwa-fsdp bench bench-kernels \
-	bench-sync bench-check train-smoke docs-check hwa-lint hwa-lint-smoke \
-	fault-check fault-check-smoke
+	bench-attn bench-sync bench-check train-smoke docs-check hwa-lint \
+	hwa-lint-smoke fault-check fault-check-smoke
 
 # tier-1: docs sanity + the full CPU suite (SPMD checks run in their own
 # subprocesses)
@@ -51,6 +51,12 @@ bench:
 # repo root (cross-PR perf trajectory)
 bench-kernels:
 	$(PY) -m benchmarks.run --only kernels
+
+# attention blocks only (fwd + custom-vjp bwd + train-step comparison),
+# print-only: BENCH_kernels.json merging stays with bench-kernels so a
+# partial run can't drop the other kernel blocks
+bench-attn:
+	$(PY) -m benchmarks.kernel_bench --attn-only
 
 # flat-vs-two-level sync-tree traffic on the pod-carved (2,2,2) mesh;
 # appends the sync/tree block to BENCH_kernels.json

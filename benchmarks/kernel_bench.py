@@ -301,15 +301,35 @@ def main(print_fn=print):
 
     out["packed_vs_per_leaf"] = packed_vs_per_leaf(print_fn)
     out["mesh_sync_gated_vs_resident"] = gated_vs_mesh_resident(print_fn)
+    out.update(attention_suite(print_fn))
+    return out
 
+
+def attention_suite(print_fn=print):
+    """Attention fwd + bwd + train-step blocks.
+
+    Forward wall times compare the XLA implementations (naive O(S^2) ref
+    vs blockwise flash_jnp) at full size; the Pallas pipeline runs in
+    interpret mode on CPU, so its wall time is measured at a CAPPED size
+    (a tracer-speed number, not a kernel speed — TPU is the target) and
+    its real contract here is STRUCTURAL: exactly 1 forward launch and 2
+    recompute-backward sweep launches (dq k-innermost; dk/dv q-innermost)
+    under ``jax.grad``, guarded by thresholds.json. The train-step block
+    times one jitted value_and_grad+SGD step of the smoke model with
+    flash_pallas vs flash_jnp attention and pins the same 3-launch
+    budget through the model's layer scan (structural: the scan body
+    traces once, so the jaxpr count is depth-independent)."""
+    from repro.kernels.flash_attention import flash_attention_pallas
+    from repro.models.attention import flash_attention_jnp
+
+    out = {}
     B, S, H, D = (2, 256, 4, 64) if SMOKE else (2, 1024, 4, 64)
-    ks = jax.random.split(jax.random.key(0), 3)
+    ks = jax.random.split(jax.random.key(0), 4)
     q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
     k = jax.random.normal(ks[1], (B, S, H, D), jnp.float32)
     v = jax.random.normal(ks[2], (B, S, H, D), jnp.float32)
     naive = jax.jit(lambda q, k, v: kref.attention_ref(q, k, v))
     us_naive = _time(naive, q, k, v, iters=5)
-    from repro.models.attention import flash_attention_jnp
     flash = jax.jit(lambda q, k, v: flash_attention_jnp(q, k, v))
     us_flash = _time(flash, q, k, v, iters=5)
     out["attention_naive_ref"] = {"us": us_naive}
@@ -318,11 +338,97 @@ def main(print_fn=print):
                      f"S={S};mem=O(S^2)"))
     print_fn(csv_row("kernel/attention_flash_jnp", us_flash,
                      f"S={S};mem=O(S*block)"))
+
+    # --- backward: jax.grad wall times at full size (XLA refs) ---------
+    w = jax.random.normal(ks[3], (B, S, H, D), jnp.float32)
+    g_naive = jax.jit(jax.grad(
+        lambda q, k, v: jnp.sum(kref.attention_ref(q, k, v) * w),
+        (0, 1, 2)))
+    us_naive_bwd = _time(g_naive, q, k, v, iters=5)
+    g_flash = jax.jit(jax.grad(
+        lambda q, k, v: jnp.sum(flash_attention_jnp(q, k, v) * w),
+        (0, 1, 2)))
+    us_flash_bwd = _time(g_flash, q, k, v, iters=5)
+
+    # Pallas custom-vjp leg, capped (interpret mode pays tracer overhead
+    # per block — the structural launch counts are the portable claim)
+    Sp, Hkv = 128, 2
+    kp = jax.random.split(jax.random.key(1), 4)
+    qs = jax.random.normal(kp[0], (B, Sp, H, D), jnp.float32)
+    ks_ = jax.random.normal(kp[1], (B, Sp, Hkv, D), jnp.float32)
+    vs = jax.random.normal(kp[2], (B, Sp, Hkv, D), jnp.float32)
+    ws = jax.random.normal(kp[3], (B, Sp, H, D), jnp.float32)
+
+    def fwd(q, k, v):
+        return flash_attention_pallas(q, k, v, block_q=64, block_k=64,
+                                      interpret=True)
+
+    g_pallas = jax.jit(jax.grad(
+        lambda q, k, v: jnp.sum(fwd(q, k, v) * ws), (0, 1, 2)))
+    us_pallas_bwd = _time(g_pallas, qs, ks_, vs, iters=3)
+
+    fwd_launches = count_pallas_calls(
+        jax.make_jaxpr(fwd)(qs, ks_, vs))
+    fwd_bwd_launches = count_pallas_calls(jax.make_jaxpr(jax.grad(
+        lambda q, k, v: jnp.sum(fwd(q, k, v) * ws), (0, 1, 2)))(
+            qs, ks_, vs))
+    out["attention_bwd"] = {
+        "us_naive_ref": us_naive_bwd,
+        "us_flash_jnp": us_flash_bwd,
+        "us_pallas_interp": us_pallas_bwd,
+        "S": S, "S_pallas_interp": Sp,
+        "fwd_launches": fwd_launches,
+        "bwd_launches": fwd_bwd_launches - fwd_launches,
+        "fwd_bwd_launches": fwd_bwd_launches,
+    }
+    print_fn(csv_row(
+        "kernel/attention_bwd", us_flash_bwd,
+        f"S={S};naive_us={us_naive_bwd:.0f};"
+        f"pallas_interp_us@S{Sp}={us_pallas_bwd:.0f};"
+        f"fwd_launches={fwd_launches};"
+        f"bwd_launches={fwd_bwd_launches - fwd_launches}"))
+
+    # --- train step: the smoke model end-to-end, both attention paths --
+    from repro.configs import get_smoke_config
+    from repro.launch.specs import input_specs
+    from repro.models.registry import build_model
+    from repro.models.types import InputShape
+
+    cfg = get_smoke_config("granite-3-2b")
+    shape = InputShape("tiny", seq_len=16, global_batch=2, kind="train")
+    specs, _ = input_specs(cfg, shape)
+    batch = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs)
+    rec = {}
+    for impl in ("flash_jnp", "flash_pallas"):
+        lm = build_model(cfg.with_(attn_impl=impl))
+        params = lm.init(jax.random.key(0))
+
+        def step(p, b, lm=lm):
+            (loss, _), grads = jax.value_and_grad(
+                lm.loss, has_aux=True)(p, b)
+            return jax.tree.map(lambda x, g: x - 0.01 * g, p, grads), loss
+
+        rec[f"{impl}_us"] = _time(jax.jit(step), params, batch, iters=3)
+        if impl == "flash_pallas":
+            rec["flash_pallas_structural_launches"] = count_pallas_calls(
+                jax.make_jaxpr(step)(params, batch))
+            rec["n_layers"] = lm.cfg.n_layers
+    out["attention_train_step"] = rec
+    print_fn(csv_row(
+        "kernel/attention_train_step", rec["flash_pallas_us"],
+        f"flash_jnp_us={rec['flash_jnp_us']:.0f};"
+        f"structural_launches={rec['flash_pallas_structural_launches']};"
+        f"n_layers={rec['n_layers']}"))
     return out
 
 
 if __name__ == "__main__":
     if _WORKER_FLAG in sys.argv:
         _mesh_sync_worker()
+    elif "--attn-only" in sys.argv:
+        # print-only lane (`make bench-attn`): benchmarks.run owns
+        # BENCH_kernels.json merging; a partial dict would drop the other
+        # kernel blocks, so this path never writes JSON
+        attention_suite()
     else:
         main()

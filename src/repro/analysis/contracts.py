@@ -167,14 +167,22 @@ def sync_contract(axis, *, launches: int, outer_axis=None,
         notes=notes)
 
 
-def train_contract(replica_axes=None, notes: str = "") -> BundleContract:
+def train_contract(replica_axes=None, *, launches: int | None = None,
+                   notes: str = "") -> BundleContract:
     """Contract factory for train steps: collective-free over the replica
     axes when given (the mesh-native H-fold amortization guarantee —
     data/model collectives unconstrained), no f64, loops-under-manual
-    hazard-clean. Launches and collective payload dtypes unchecked (the
-    model may legitimately use attention kernels / integer gathers)."""
+    hazard-clean. Collective payload dtypes unchecked (the model may
+    legitimately use attention kernels / integer gathers). ``launches``
+    pins the exact structural Pallas-launch count when the builder knows
+    it — the flash-pallas train step declares 3 (1 attention fwd + 2
+    recompute-bwd sweeps inside the single layer-scan eqn; the compiled
+    HLO physically carries 3 × n_layers), valid only when remat is off
+    (recompute remat would re-run forwards inside the backward)."""
     collectives = None
     if replica_axes is not None:
         collectives = CollectiveContract(axis=replica_axes, ops={},
                                          assembly_free=False)
-    return BundleContract(collectives=collectives, notes=notes)
+    launch = LaunchBudget.exact(launches) if launches is not None else None
+    return BundleContract(collectives=collectives, launch=launch,
+                          notes=notes)

@@ -63,6 +63,7 @@ def default_cases() -> list[LintCase]:
 
     cfg = get_smoke_config("granite-3-2b")
     lm = build_model(cfg)
+    lm_fp = build_model(cfg.with_(attn_impl="flash_pallas"))
     shape = InputShape("tiny", seq_len=16, global_batch=8, kind="train")
     specs, dims = input_specs(cfg, shape)
 
@@ -89,6 +90,13 @@ def default_cases() -> list[LintCase]:
             "train/mesh-native@2x2x2", smoke=True,
             build=lambda: (make_mesh_hwa_train_step(
                 lm, rules, specs, dims, hwa2, optimizer="sgd"), mesh)),
+        # flash-pallas train step: fully-manual shard_map (Pallas is
+        # opaque to GSPMD) with an EXACT LaunchBudget — 1 attention fwd
+        # + 2 recompute-bwd sweeps inside the single layer-scan eqn
+        LintCase(
+            "train/mesh-native-flash-pallas@2x2x2", smoke=True,
+            build=lambda: (make_mesh_hwa_train_step(
+                lm_fp, rules, specs, dims, hwa2, optimizer="sgd"), mesh)),
         LintCase(
             "train/hwa-vmap@2x2x2",
             build=lambda: (make_hwa_train_step(

@@ -136,17 +136,33 @@ def online_mean(stacked):
 def flash_attention(q, k, v, q_pos=None, k_pos=None, *, window=None,
                     logit_softcap=0.0, block_q=128, block_k=128):
     """run_attention-compatible wrapper (training/prefill layout:
-    contiguous positions starting at 0). Pads head_dim to 128."""
-    D = q.shape[-1]
+    contiguous positions starting at 0). Pads head_dim to 128 and ragged
+    sequence lengths up to a block multiple; differentiable end-to-end
+    (the kernel's custom VJP composes with the pad/slice here).
+
+    Padding is grad-exact: padded key positions sit ABOVE every real
+    query position, so the causal mask hides them; padded query rows are
+    sliced off, their cotangent is zero, and zero dO contributes zero to
+    dk/dv. Zero head-dim columns likewise produce zero gradient columns.
+    """
+    D, S, T = q.shape[-1], q.shape[1], k.shape[1]
     sm_scale = 1.0 / (D ** 0.5)
-    pad = (-D) % 128
-    if pad:
-        padw = [(0, 0)] * 3 + [(0, pad)]
+    pad_d = (-D) % 128
+    if pad_d:
+        padw = [(0, 0)] * 3 + [(0, pad_d)]
         q = jnp.pad(q, padw)
         k = jnp.pad(k, padw)
         v = jnp.pad(v, padw)
+    bq, bk = min(block_q, S), min(block_k, T)
+    pad_s, pad_t = (-S) % bq, (-T) % bk
+    seqpad = lambda x, n: jnp.pad(x, ((0, 0), (0, n), (0, 0), (0, 0)))
+    if pad_s:
+        q = seqpad(q, pad_s)
+    if pad_t:
+        k = seqpad(k, pad_t)
+        v = seqpad(v, pad_t)
     out = flash_attention_pallas(
         q, k, v, causal=True, window=window, logit_softcap=logit_softcap,
-        block_q=block_q, block_k=block_k, sm_scale=sm_scale,
+        block_q=bq, block_k=bk, sm_scale=sm_scale,
         interpret=_interpret())
-    return out[..., :D]
+    return out[:, :S, :, :D]

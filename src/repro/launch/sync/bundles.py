@@ -556,6 +556,13 @@ def make_mesh_hwa_train_step(lm: LM, rules: ShardingRules, batch_specs,
     sync. Returns per-replica losses as a (K,) array sharded over the
     replica axes — averaging them to a replicated scalar would itself be
     a replica collective, so the caller takes the mean after fetching.
+
+    With ``lm.cfg.attn_impl == "flash_pallas"`` the step runs under a
+    FULLY-manual shard_map instead (every axis manual — Pallas kernels
+    are opaque to GSPMD, see the inline comment), with data parallelism
+    as an explicit grad pmean and an exact Pallas LaunchBudget
+    (1 attention fwd + 2 bwd sweeps per layer) in the contract when
+    remat is off.
     """
     from repro.launch.sync.topology import _norm_axes
 
@@ -595,6 +602,74 @@ def make_mesh_hwa_train_step(lm: LM, rules: ShardingRules, batch_specs,
     # so the math is unchanged.
     def loss_fn(params, batch):
         return lm.loss(params, batch, rules=None)
+
+    if lm.cfg.attn_impl == "flash_pallas":
+        # Fully-manual variant: a bare pallas_call is OPAQUE to the GSPMD
+        # partitioner — under the partial-auto map below XLA would run
+        # the attention kernel per-shard with global-shape semantics and
+        # silently corrupt values (the same playbook as the mesh-resident
+        # sync, launch/sync/packed.py). So the flash-pallas train step
+        # goes manual over EVERY mesh axis: the kernel sees true local
+        # shapes, data parallelism becomes an explicit grad/loss pmean
+        # over the data axes, and the model axis is redundantly
+        # replicated (DP-only — TP sharding of the attention kernel is a
+        # ROADMAP item). Params/opt live replicated over the non-replica
+        # axes at rest, matching the manual specs (no boundary reshard).
+        data_axes = tuple(a for a in rules.rules.get("batch", ())
+                          if a in mesh.shape and a not in rep_axes)
+        data_size = math.prod(mesh.shape[a] for a in data_axes)
+        per_rep_b = jax.tree.leaves(batch_specs)[0].shape[0]
+        assert not data_axes or per_rep_b % data_size == 0, \
+            f"per-replica batch {per_rep_b} must divide over the data " \
+            f"axes {data_axes} (size {data_size}) for the fully-manual " \
+            f"flash-pallas step"
+        data_entry = (data_axes if len(data_axes) > 1
+                      else (data_axes[0] if data_axes else None))
+
+        def local_step(inner, inner_opt, batch):
+            params, opt_state = _squeeze0(inner), _squeeze0(inner_opt)
+            (loss, _), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, _squeeze0(batch))
+            if data_axes:
+                grads = jax.lax.pmean(grads, data_axes)
+                loss = jax.lax.pmean(loss, data_axes)
+            updates, opt_state = opt.update(grads, opt_state, params, lr)
+            return (_expand0(apply_updates(params, updates)),
+                    _expand0(opt_state), loss[None])
+
+        batch_pspecs = jax.tree.map(
+            lambda _: (P(rep_entry, data_entry) if data_entry is not None
+                       else P(rep_entry)), kbatch_abs)
+        step = shard_map(
+            local_step, mesh,
+            in_specs=(stacked_replica_specs(stacked_abs, rep_entry),
+                      stacked_replica_specs(opt_abs, rep_entry),
+                      batch_pspecs),
+            out_specs=(stacked_replica_specs(stacked_abs, rep_entry),
+                       stacked_replica_specs(opt_abs, rep_entry),
+                       P(rep_entry)),
+            check_rep=False)
+        to_sh = lambda specs: jax.tree.map(
+            lambda s: NamedSharding(mesh, s), specs)
+        p_sh = to_sh(stacked_replica_specs(stacked_abs, rep_entry))
+        o_sh = to_sh(stacked_replica_specs(opt_abs, rep_entry))
+        b_sh = to_sh(batch_pspecs)
+        # Structural budget: the layer scan (unroll=True) is ONE jaxpr
+        # eqn whose body holds 1 attention fwd + 2 recompute-bwd
+        # launches, so the jaxpr count is 3 at any depth; the compiled
+        # HLO carries the physical 3 × n_layers custom calls
+        # (tests/mesh_hwa_check.py asserts both). Exact only when remat
+        # is off (remat re-runs forwards inside the backward).
+        launches = 3 if lm.cfg.remat == "none" else None
+        return StepBundle(
+            fn=step, abstract_args=(stacked_abs, opt_abs, kbatch_abs),
+            in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh, NamedSharding(mesh, P(rep_entry))),
+            donate_argnums=(0, 1),
+            contract=train_contract(
+                replica_axes=rep_axes, launches=launches,
+                notes="mesh-native HWA inner step, flash-pallas "
+                      "attention (fully-manual, DP over data axes)"))
 
     def local_step(inner, inner_opt, batch):
         params, opt_state, loss, _ = hwa_local_inner_step(

@@ -85,6 +85,11 @@ def run_mesh_native(args) -> dict:
         topo = None
     rules = make_tp_rules(mesh, replica_axis=replica_axis, fsdp=args.fsdp)
     cfg = get_smoke_config(args.arch)
+    if args.attn_impl:
+        cfg = cfg.with_(attn_impl=args.attn_impl)
+    if cfg.attn_impl == "flash_pallas" and tp > 1:
+        raise SystemExit("--attn-impl flash_pallas runs the fully-manual "
+                         "DP-only train step; --tp must stay 1")
     if cfg.family in ("vlm", "audio"):
         raise SystemExit(f"{args.arch}: mesh-native driver supports LM "
                          "families only")
@@ -276,6 +281,12 @@ def main():
     ap.add_argument("--sync-period", type=int, default=0, help="H (0=epoch)")
     ap.add_argument("--window", type=int, default=10, help="I")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--attn-impl", default="",
+                    choices=["", "naive", "flash_jnp", "flash_pallas"],
+                    help="override the arch's attention implementation; "
+                         "flash_pallas selects the Pallas custom-vjp "
+                         "kernels (fully-manual DP train step under "
+                         "--mesh-native; interpret mode off-TPU)")
     ap.add_argument("--out", default="")
     ap.add_argument("--mesh-native", action="store_true",
                     help="run the shard_map SPMD HWA path on the local "
@@ -344,6 +355,8 @@ def main():
         return
 
     cfg = get_smoke_config(args.arch)
+    if args.attn_impl:
+        cfg = cfg.with_(attn_impl=args.attn_impl)
     if cfg.family in ("vlm", "audio"):
         raise SystemExit(f"{args.arch}: use examples/serve_decode.py-style "
                          "drivers for modality-frontend archs")

@@ -72,9 +72,9 @@ def _mesh_args(**kw):
     ns = argparse.Namespace(
         arch="granite-3-2b", k=2, tp=1, fsdp=False, sync_tree="flat",
         pods=0, outer_every=2, window=3, seq_len=16, batch_size=4,
-        lr=0.3, seed=0, steps=8, sync_period=2, resilient=False,
-        max_param_rms=0.0, inject_nan="", checkpoint_dir="",
-        checkpoint_every=0, keep=3, resume=False)
+        lr=0.3, seed=0, steps=8, sync_period=2, attn_impl="",
+        resilient=False, max_param_rms=0.0, inject_nan="",
+        checkpoint_dir="", checkpoint_every=0, keep=3, resume=False)
     for k, v in kw.items():
         setattr(ns, k, v)
     return ns
