@@ -8,8 +8,8 @@ export PYTHONPATH := src:$(PYTHONPATH)
 PYTEST_ARGS ?=
 
 .PHONY: test test-fast spmd mesh-hwa mesh-hwa-fsdp bench bench-kernels \
-	bench-attn bench-sync bench-check train-smoke docs-check hwa-lint \
-	hwa-lint-smoke fault-check fault-check-smoke
+	bench-attn bench-sync bench-serve bench-check train-smoke docs-check \
+	hwa-lint hwa-lint-smoke fault-check fault-check-smoke serve-demo
 
 # tier-1: docs sanity + the full CPU suite (SPMD checks run in their own
 # subprocesses)
@@ -62,6 +62,18 @@ bench-attn:
 # appends the sync/tree block to BENCH_kernels.json
 bench-sync:
 	$(PY) -m benchmarks.run --only sync_tree
+
+# continuous batching vs static batching at ragged occupancy (tokens/s,
+# token-slot work ratio, step-trace count); appends the serve block to
+# BENCH_kernels.json
+bench-serve:
+	$(PY) -m benchmarks.run --only serve
+
+# paged serving engine end-to-end: continuous batching + paged KV cache
+# on a smoke model (block tables, single fixed-shape jitted decode step)
+serve-demo:
+	$(PY) -m repro.launch.serve --arch granite-3-2b --engine paged \
+	    --batch 4 --prompt-len 12 --new-tokens 12
 
 # regression-guard BENCH_kernels.json against the committed structural
 # thresholds (launch counts, collective counts, padding waste) — wall

@@ -26,14 +26,17 @@ BENCHES = [
     ("mesh_comm", "benchmarks.mesh_comm"),
     ("kernels", "benchmarks.kernel_bench"),
     ("sync_tree", "benchmarks.sync_tree"),
+    ("serve", "benchmarks.serve_bench"),
     ("roofline", "benchmarks.roofline"),
 ]
 
 # Benchmarks whose structured result is persisted into BENCH_kernels.json
 # at the repo root (cross-PR perf trajectory). "kernels" merges its
-# record at the top level (historical layout); "sync_tree" appends under
-# the "sync/tree" key — existing keys from other benchmarks survive.
-_BENCH_JSON_KEY = {"kernels": None, "sync_tree": "sync/tree"}
+# record at the top level (historical layout); "sync_tree" and "serve"
+# append under their own keys — existing keys from other benchmarks
+# survive.
+_BENCH_JSON_KEY = {"kernels": None, "sync_tree": "sync/tree",
+                   "serve": "serve"}
 
 
 def _merge_bench_json(name: str, result: dict) -> None:

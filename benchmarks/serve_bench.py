@@ -1,0 +1,148 @@
+"""Serving-tier benchmark: continuous batching vs static batching at
+ragged occupancy.
+
+The workload is the shape continuous batching exists for: a few long
+generations pinning the batch while many short ones come and go (here
+4×48-token + 12×2-token requests). The baseline is STATIC batching at
+the same concurrency budget (``MAX_BATCH`` slots — the same KV memory
+both engines get): requests are grouped FIFO (generation lengths are
+not known up front — they are EOS-dependent in real serving) and every
+group runs to its longest member's step count, ``Σ_groups max(n_new) ×
+MAX_BATCH`` token-slots for ``Σ n_new`` useful tokens. The paged engine
+admits a new request into a slot the moment one finishes, so its
+token-slot count tracks the useful work.
+
+Decode on CPU (as on accelerators) is weight-streaming bound — a step's
+cost is nearly independent of batch width — so the smoke config is
+widened (d_model 256, 4 layers) until device work dominates the host
+scheduling loop; the tiny test width would measure dispatch overhead.
+
+Recorded (merged into BENCH_kernels.json under ``"serve"``):
+
+- ``static.tok_s`` / ``paged.tok_s``: useful tokens per wall-second
+  (compile excluded — both engines measured on their second run) and
+  ``speedup_tok_s``. Wall numbers are machine-dependent: recorded for
+  the trajectory, NOT bounded by thresholds.json.
+- ``work_ratio``: static token-slots / paged token-slots — the
+  STRUCTURAL occupancy win, machine-independent; thresholds pin it ≥ 2.
+- ``paged.decode_step_traces``: must be exactly 1 — admissions,
+  evictions and ragged lengths never retrace the fixed-shape step.
+- ``parity_mismatches``: must be 0 — the measured runs are also a
+  bit-parity check (greedy tokens equal per request).
+"""
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row
+
+ARCH = "granite-3-2b"
+WIDTH = dict(d_model=256, d_ff=1024, n_layers=4, n_heads=8, n_kv_heads=4)
+PROMPT_LEN = 12
+N_NEW = [48, 2, 2, 2] * 4          # ragged: 4 long pins, 12 short riders
+MAX_BATCH = 4                      # concurrency budget for BOTH engines
+MAX_SEQ = 64
+PAGE_SIZE = 4
+
+
+def serve_record() -> dict:
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.models.registry import build_model
+    from repro.serve.engine import DecodeEngine, PagedDecodeEngine
+    from repro.serve.scheduler import ContinuousScheduler, Request
+
+    cfg = get_smoke_config(ARCH).with_(**WIDTH)
+    lm = build_model(cfg)
+    params = lm.init(jax.random.key(0))
+    rng = np.random.RandomState(0)
+    prompts = rng.randint(0, cfg.vocab_size,
+                          size=(len(N_NEW), PROMPT_LEN)).astype(np.int32)
+    useful = int(sum(N_NEW))
+    max_new = max(N_NEW)
+    groups = [list(range(g, g + MAX_BATCH))
+              for g in range(0, len(N_NEW), MAX_BATCH)]
+
+    # static batching: FIFO groups of MAX_BATCH, each to its longest rider
+    ref = DecodeEngine(lm=lm, params=params, max_seq_len=MAX_SEQ)
+
+    def run_static():
+        outs = {}
+        for grp in groups:
+            nmax = max(N_NEW[i] for i in grp)
+            out = jax.block_until_ready(ref.generate(
+                {"tokens": jax.numpy.asarray(prompts[grp])}, nmax))
+            for j, i in enumerate(grp):
+                outs[i] = np.asarray(out[j, :N_NEW[i]])
+        return outs
+    run_static()                                 # compile
+    t0 = time.time()
+    want = run_static()
+    t_static = time.time() - t0
+    slots_static = sum(max(N_NEW[i] for i in g) for g in groups) * MAX_BATCH
+
+    # paged continuous batching: same budget, admit-on-evict
+    eng = PagedDecodeEngine(lm=lm, params=params, max_batch=MAX_BATCH,
+                            max_seq_len=MAX_SEQ, max_new=max_new,
+                            page_size=PAGE_SIZE, prefill_chunk=16)
+    reqs = [Request(rid=i, tokens=prompts[i], n_new=n)
+            for i, n in enumerate(N_NEW)]
+    n_steps = 0
+    orig_step = eng.step
+
+    def counted_step(ctrl):
+        nonlocal n_steps
+        n_steps += 1
+        return orig_step(ctrl)
+
+    eng.step = counted_step
+
+    def run_paged():
+        return ContinuousScheduler(eng).run(reqs, max_steps=5000)
+    run_paged()                                  # compile
+    n_steps = 0
+    t0 = time.time()
+    outs = run_paged()
+    t_paged = time.time() - t0
+    slots_paged = n_steps * MAX_BATCH
+
+    mismatches = sum(int(not np.array_equal(outs[i], want[i]))
+                     for i in range(len(N_NEW)))
+
+    return {
+        "arch": ARCH,
+        "width": dict(WIDTH),
+        "n_requests": len(N_NEW),
+        "useful_tokens": useful,
+        "max_new": max_new,
+        "static": {"wall_s": t_static, "tok_s": useful / t_static,
+                   "token_slots": slots_static},
+        "paged": {"wall_s": t_paged, "tok_s": useful / t_paged,
+                  "token_slots": slots_paged, "steps": n_steps,
+                  "max_batch": MAX_BATCH,
+                  "decode_step_traces": eng.step_traces},
+        "speedup_tok_s": t_static / t_paged,
+        "work_ratio": slots_static / slots_paged,
+        "parity_mismatches": mismatches,
+    }
+
+
+def main(print_fn=print):
+    rec = serve_record()
+    for name in ("static", "paged"):
+        r = rec[name]
+        print_fn(csv_row(f"serve/{name}", r["wall_s"] * 1e6,
+                         f"tok_s={r['tok_s']:.1f};"
+                         f"token_slots={r['token_slots']}"))
+    print_fn(csv_row(
+        "serve/summary", 0.0,
+        f"speedup_tok_s={rec['speedup_tok_s']:.2f};"
+        f"work_ratio={rec['work_ratio']:.2f};"
+        f"decode_step_traces={rec['paged']['decode_step_traces']};"
+        f"parity_mismatches={rec['parity_mismatches']}"))
+    return rec
+
+
+if __name__ == "__main__":
+    main()

@@ -167,6 +167,20 @@ def sync_contract(axis, *, launches: int, outer_axis=None,
         notes=notes)
 
 
+def decode_contract(*, launches: int, notes: str = "") -> BundleContract:
+    """Contract factory for serving decode steps: NO collectives anywhere
+    (the paged engine is a single-device fixed-shape program — any
+    collective means the serving mesh leaked into the hot path), an exact
+    structural Pallas-launch budget (the paged-attention gather kernel
+    per pattern attention spec, counted once inside the layer-scan eqn),
+    donated cache/token/output buffers, and no f64. Collective payload
+    dtypes are trivially unconstrained (there are none)."""
+    return BundleContract(
+        collectives=CollectiveContract(axis=(), ops={}, assembly_free=True),
+        launch=LaunchBudget.exact(launches),
+        notes=notes)
+
+
 def train_contract(replica_axes=None, *, launches: int | None = None,
                    notes: str = "") -> BundleContract:
     """Contract factory for train steps: collective-free over the replica

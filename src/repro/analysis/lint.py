@@ -143,7 +143,19 @@ def default_cases() -> list[LintCase]:
             "sync/legacy-kernel@1dev", smoke=True,
             build=lambda: (make_hwa_sync_step(lm, rules_1, hwa2k),
                            mesh_1)),
+        # serving decode step: no collectives anywhere, exactly 1 paged-
+        # attention launch (one pattern attention spec under flash_pallas,
+        # counted once inside the layer-scan eqn), donated state buffers
+        LintCase(
+            "serve/paged-decode@1dev", smoke=True,
+            build=lambda: (_paged_bundle(lm_fp), mesh_1)),
     ]
+
+
+def _paged_bundle(lm):
+    from repro.serve.engine import make_paged_decode_bundle
+    return make_paged_decode_bundle(lm, max_batch=2, max_seq_len=64,
+                                    max_new=4, page_size=4)
 
 
 def run_case(case: LintCase) -> dict:

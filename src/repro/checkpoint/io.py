@@ -177,6 +177,30 @@ def save_window_state(path: str, state: Any) -> None:
     save_pytree(path, tree)
 
 
+def load_wa_snapshot(path: str):
+    """W̿ snapshot source for the serving tier: (packed f32 buffer,
+    PackSpec) straight from a window-state checkpoint, with NO template
+    — the serving publisher repacks into its own layout
+    (``repro.serve.publish.WeightPublisher``). Ring checkpoints store
+    the running sum (divide by count); streaming ones store the mean."""
+    from repro.common.packing import spec_from_json
+
+    keys, leaves = _read_raw(path)
+    tree = {k: v for k, v in zip(keys, leaves)}
+    if "spec_json" not in tree:
+        raise ValueError(f"{path}: not a layout-described window-state "
+                         f"checkpoint (keys: {keys})")
+    spec = spec_from_json(str(tree["spec_json"]))
+    total = np.asarray(tree["total"], np.float32)
+    if total.shape != (spec.padded,):
+        raise ValueError(f"{path}: packed total {total.shape} does not "
+                         f"match its stored layout ({spec.padded})")
+    count = max(int(tree["count"]), 1)
+    if "ring" in tree and tree["ring"] is not None:
+        total = total / count                 # ring kind: running sum
+    return jnp.asarray(total), spec
+
+
 def load_window_state(path: str, like: Any) -> Any:
     """Load a WindowState saved by :func:`save_window_state` — repacking
     across layout changes, or migrating an old per-leaf checkpoint — into

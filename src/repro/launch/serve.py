@@ -2,6 +2,10 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch musicgen-medium \
       --batch 4 --prompt-len 16 --new-tokens 16
+
+``--engine paged`` routes through the production tier (paged KV cache +
+continuous-batching scheduler + single fixed-shape jitted step); the
+default ``naive`` engine is the whole-batch parity reference.
 """
 from __future__ import annotations
 
@@ -13,15 +17,17 @@ import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, get_smoke_config
 from repro.models.registry import build_model
-from repro.serve.engine import DecodeEngine
+from repro.serve.engine import DecodeEngine, PagedDecodeEngine
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-2b", choices=ARCH_IDS)
+    ap.add_argument("--engine", default="naive", choices=["naive", "paged"])
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--page-size", type=int, default=4)
     ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args()
 
@@ -40,13 +46,25 @@ def main():
         batch["vis_embeds"] = jax.random.normal(
             key, (B, cfg.n_vis_tokens, cfg.d_vis), jnp.float32)
 
-    engine = DecodeEngine(lm, params, max_seq_len=S + args.new_tokens)
-    t0 = time.time()
-    out = engine.generate(batch, args.new_tokens,
-                          temperature=args.temperature)
-    dt = time.time() - t0
-    print(f"[serve] {args.arch}: generated {out.shape} in {dt:.2f}s "
-          f"({args.new_tokens * B / dt:.1f} tok/s)")
+    if args.engine == "paged":
+        engine = PagedDecodeEngine(
+            lm=lm, params=params, max_batch=B,
+            max_seq_len=S + args.new_tokens + 16,
+            max_new=args.new_tokens, page_size=args.page_size,
+            prefill_chunk=max(S, 8), temperature=args.temperature)
+        t0 = time.time()
+        out = engine.generate(batch, args.new_tokens)
+        dt = time.time() - t0
+        extra = f" step_traces={engine.step_traces}"
+    else:
+        engine = DecodeEngine(lm, params, max_seq_len=S + args.new_tokens)
+        t0 = time.time()
+        out = engine.generate(batch, args.new_tokens,
+                              temperature=args.temperature)
+        dt = time.time() - t0
+        extra = ""
+    print(f"[serve:{args.engine}] {args.arch}: generated {out.shape} in "
+          f"{dt:.2f}s ({args.new_tokens * B / dt:.1f} tok/s){extra}")
     print(out[0].tolist()[:8])
 
 

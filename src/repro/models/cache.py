@@ -51,3 +51,69 @@ def cache_positions(cache_len: int, pos):
     rem = jnp.mod(pos, cache_len)
     p = jnp.where(slots <= rem, pos - rem + slots, pos - rem + slots - cache_len)
     return jnp.where(p >= 0, p, -1)
+
+
+# ------------------------------------------------------------------
+# paged KV cache (serving tier)
+# ------------------------------------------------------------------
+#
+# The serving engine replaces the contiguous (L, B, C, Hkv, D) cache with
+# a PAGE POOL of shape (L, n_pages, page_size, Hkv, D) plus a per-sequence
+# block table (table_width,) of physical page indices. The table is a
+# *logical ring* at page granularity — slot j of a sequence at logical
+# page m holds the largest page m' <= m with m' % table_width == j —
+# the exact ``cache_positions`` recurrence lifted from tokens to pages,
+# so sliding-window eviction is ring reuse (overwrite in place, zero
+# copy traffic) and the table width is fixed at trace time. Physical
+# page 0 is reserved as the TRASH page: inactive batch slots write/read
+# it and are masked out by their zero sequence length.
+
+#: physical page index reserved for masked writes of inactive slots
+TRASH_PAGE = 0
+
+
+def paged_table_width(max_seq: int, window, page_size: int) -> int:
+    """Block-table slots needed so ring reuse never evicts a live key.
+
+    Windowed: positions (pos-W, pos] span at most ceil(W/ps)+1 pages;
+    ring reuse of slot (m % TW) evicts page m-TW, whose last position
+    (m-TW+1)*ps-1 must already be outside the window when page m opens
+    at pos = m*ps — i.e. TW >= (W-1)/ps + 1, satisfied by ceil(W/ps)+1.
+    """
+    n_total = -(-max_seq // page_size)
+    if window is None:
+        return n_total
+    return min(n_total, -(-window // page_size) + 1)
+
+
+def paged_slot_pages(table_width: int, cur_page):
+    """Logical page held by each table slot when the sequence is at
+    logical page ``cur_page`` (= pos // page_size). -1 = never written.
+    ``cur_page`` may be batched: (...,) -> (..., table_width)."""
+    slots = jnp.arange(table_width)
+    cur = jnp.asarray(cur_page)[..., None]
+    rem = jnp.mod(cur, table_width)
+    p = jnp.where(slots <= rem, cur - rem + slots,
+                  cur - rem + slots - table_width)
+    return jnp.where(p >= 0, p, -1)
+
+
+def init_paged_pool(n_layers, n_pages, page_size, n_kv, head_dim, dtype):
+    """Per-layer-spec page pool; physical page indices are shared across
+    the stacked layers (index [l, page] addresses layer l's copy)."""
+    shape = (n_layers, n_pages, page_size, n_kv, head_dim)
+    pool = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    dims = {"k": ("layers", "pages", "page_slot", "kv_heads", "head_dim"),
+            "v": ("layers", "pages", "page_slot", "kv_heads", "head_dim")}
+    return pool, dims
+
+
+def paged_phys_pages(tables, pos_b, page_size: int):
+    """Physical page + in-page slot for writing position ``pos_b``.
+
+    tables: (B, TW) int32; pos_b: (B,). Returns (phys (B,), slot (B,)).
+    """
+    TW = tables.shape[1]
+    tj = jnp.mod(pos_b // page_size, TW)
+    phys = jnp.take_along_axis(tables, tj[:, None], axis=1)[:, 0]
+    return phys, jnp.mod(pos_b, page_size)

@@ -275,6 +275,90 @@ def lm_decode_step(cfg: ModelConfig, params, cache, tokens, rules=None):
     return logits, {"layers": new_layers, "pos": pos + 1}
 
 
+# ------------------------------------------------------------------
+# paged serving path (see docs/ARCHITECTURE.md §8)
+# ------------------------------------------------------------------
+
+
+def lm_init_paged_cache(cfg: ModelConfig, max_batch: int, n_pages: int,
+                        page_size: int, dtype=None):
+    """Serving caches: per-spec page pools + stacked recurrent states."""
+    dtype = dtype or _dtype(cfg)
+    return tfm.init_stack_paged_cache(cfg, max_batch, n_pages, page_size,
+                                      dtype)
+
+
+def lm_paged_decode_step(cfg: ModelConfig, params, caches, tokens, pos_b,
+                         tables, page_size: int):
+    """One fixed-shape continuous-batching token step.
+
+    tokens: (B,) int32 ((B, CB) for audio); pos_b: (B,) per-sequence
+    positions (tokens already cached — inactive slots carry pos 0 and
+    write the trash page); tables: (B, TW) block tables. Returns
+    (logits (B, V) or (B, CB, V), new_caches).
+    """
+    tok = tokens[:, None] if cfg.family != "audio" else tokens[:, None, :]
+    x = _embed_tokens(cfg, params, tok)                # (B, 1, D)
+    x, new_caches = tfm.apply_stack_decode_paged(
+        cfg, params["stack"], caches, x, pos_b, tables, page_size)
+    x = apply_norm(cfg, params["ln_f"], x)[:, 0]
+    if cfg.family == "audio":
+        logits = jnp.einsum("bd,cdv->bcv", x, params["head"])
+    else:
+        logits = x @ params["head"]
+    logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    return logits, new_caches
+
+
+def lm_paged_prefill_chunk(cfg: ModelConfig, params, caches, batch, n_valid,
+                           slot, tables, page_size: int):
+    """Prefill ONE batch slot's prompt chunk into its pages.
+
+    batch: single-sequence batch dict (tokens (1, S_pad), + vis_embeds)
+    padded to the engine's static chunk length; n_valid: real token
+    count INCLUDING the meta/vis prefix; slot: batch-slot index (traced
+    ok). Exact for attention-only stacks at any n_valid (pad K/V goes to
+    the trash page, causal masking hides pad queries); recurrent stacks
+    additionally require n_valid == S_total — the engine routes those
+    through :func:`lm_paged_prefix_fill` + step-prefill instead.
+    Returns (next-token logits (1, V)/(1, CB, V), new_caches).
+    """
+    x, _ = _assemble_input(cfg, params, batch)         # (1, S_total, D)
+    table_row = jnp.take(tables, slot, axis=0)         # (TW,)
+    x, new_caches = tfm.apply_stack_prefill_paged(
+        cfg, params["stack"], caches, x, n_valid, slot, table_row, page_size)
+    x = apply_norm(cfg, params["ln_f"], x)
+    x_last = jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)[:, 0]
+    if cfg.family == "audio":
+        logits = jnp.einsum("bd,cdv->bcv", x_last, params["head"])
+    else:
+        logits = x_last @ params["head"]
+    logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    return logits, new_caches
+
+
+def lm_paged_prefix_fill(cfg: ModelConfig, params, caches, slot, tables,
+                         page_size: int, vis_embeds=None):
+    """Run the learned/stub prefix (meta tokens, vis embeds) for one slot
+    — static exact length, so recurrent states stay bit-exact. The
+    engine then feeds the prompt itself through the decode step
+    (step-prefill). No-op (error) when the model has no prefix."""
+    npre = _prefix_len(cfg)
+    assert npre > 0, "prefix fill on a model without a prefix"
+    parts = []
+    if cfg.n_meta_tokens:
+        parts.append(jnp.broadcast_to(params["meta"],
+                                      (1,) + params["meta"].shape))
+    if cfg.family == "vlm":
+        parts.append(vis_embeds.astype(_dtype(cfg)) @ params["vis_proj"])
+    x = jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+    table_row = jnp.take(tables, slot, axis=0)
+    _, new_caches = tfm.apply_stack_prefill_paged(
+        cfg, params["stack"], caches, x, jnp.asarray(npre, jnp.int32), slot,
+        table_row, page_size)
+    return new_caches
+
+
 @dataclasses.dataclass
 class LM:
     cfg: ModelConfig
@@ -319,6 +403,27 @@ class LM:
 
     def decode_step(self, params, cache, tokens, rules=None):
         return lm_decode_step(self.cfg, params, cache, tokens, rules=rules)
+
+    # -- paged serving path --------------------------------------------
+
+    def init_paged_cache(self, max_batch, n_pages, page_size, dtype=None):
+        return lm_init_paged_cache(self.cfg, max_batch, n_pages, page_size,
+                                   dtype)
+
+    def paged_decode_step(self, params, caches, tokens, pos_b, tables,
+                          page_size):
+        return lm_paged_decode_step(self.cfg, params, caches, tokens, pos_b,
+                                    tables, page_size)
+
+    def paged_prefill_chunk(self, params, caches, batch, n_valid, slot,
+                            tables, page_size):
+        return lm_paged_prefill_chunk(self.cfg, params, caches, batch,
+                                      n_valid, slot, tables, page_size)
+
+    def paged_prefix_fill(self, params, caches, slot, tables, page_size,
+                          vis_embeds=None):
+        return lm_paged_prefix_fill(self.cfg, params, caches, slot, tables,
+                                    page_size, vis_embeds=vis_embeds)
 
 
 def build_model(cfg: ModelConfig) -> LM:

@@ -27,7 +27,8 @@ import jax.numpy as jnp
 from repro.models import ssm
 from repro.models.attention import run_attention
 from repro.models.cache import (attn_cache_len, cache_positions,
-                                init_attn_cache, update_attn_cache)
+                                init_attn_cache, init_paged_pool,
+                                paged_phys_pages, update_attn_cache)
 from repro.models.common import (activation, apply_norm, init_norm,
                                  normal_init, apply_rope, softcap)
 from repro.models.moe import (init_moe, moe_forward, moe_forward_ep,
@@ -481,6 +482,241 @@ def apply_stack_decode(cfg: ModelConfig, stack_params, caches, x, pos,
         new_caches = []
         for spec, p, c in zip(pattern, layer_params, layer_caches):
             x, nc = apply_layer_decode(cfg, spec, p, c, x, pos, rules=rules)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    x, new_caches = jax.lax.scan(body, x, (tuple(stack_params), tuple(caches)))
+    return x, list(new_caches)
+
+
+# ------------------------------------------------------------------
+# paged decode path (serving tier; see docs/ARCHITECTURE.md §8)
+# ------------------------------------------------------------------
+#
+# Same scanned super-block structure as the contiguous decode path, with
+# three serving-grade differences: (1) K/V lives in a shared page pool
+# addressed through per-sequence block tables, (2) positions are
+# PER-SEQUENCE (pos_b: (B,)) so ragged continuous batches decode in one
+# fixed-shape step, and (3) attention runs the paged gather kernel
+# (repro.kernels.paged_attention). Recurrent layers (mamba/mLSTM/sLSTM)
+# keep their constant-size per-slot states and pass through unchanged.
+
+from repro.models.cache import TRASH_PAGE  # noqa: E402  (section import)
+
+
+def _paged_impl(cfg) -> str:
+    return "pallas" if cfg.attn_impl == "flash_pallas" else "jnp"
+
+
+def _paged_attn(cfg, q, pages, tables, lens, window):
+    from repro.kernels.paged_attention import paged_attention
+    return paged_attention(q, pages["k"], pages["v"], tables, lens,
+                           window=window, logit_softcap=cfg.logit_softcap,
+                           impl=_paged_impl(cfg))
+
+
+def init_stack_paged_cache(cfg: ModelConfig, max_batch, n_pages, page_size,
+                           dtype):
+    """Per-spec serving caches: attention layers get a page pool (the
+    physical page index space is shared across specs — one block-table
+    entry is valid in every layer's pool); recurrent layers keep stacked
+    constant-size per-slot states."""
+    pattern = block_pattern(cfg)
+    n_blocks = cfg.n_layers // len(pattern)
+
+    def stack_state(state, state_dims):
+        stacked = jax.tree.map(
+            lambda l: jnp.broadcast_to(l, (n_blocks,) + l.shape).copy(),
+            state)
+        d = jax.tree.map(
+            lambda t: ("layers",) + t, state_dims,
+            is_leaf=lambda t: isinstance(t, tuple) and all(
+                isinstance(e, (str, type(None))) for e in t))
+        return stacked, d
+
+    caches, dims = [], []
+    for spec in pattern:
+        c, d = {}, {}
+        if spec.kind in ("attn", "hybrid"):
+            c["pages"], d["pages"] = init_paged_pool(
+                n_blocks, n_pages, page_size, cfg.n_kv_heads,
+                cfg.resolved_head_dim, dtype)
+        if spec.kind == "hybrid":
+            c["mamba"], d["mamba"] = stack_state(
+                ssm.init_mamba_state(cfg, max_batch, dtype),
+                ssm.mamba_state_dims(cfg))
+        if spec.kind == "mlstm":
+            c["cell"], d["cell"] = stack_state(
+                ssm.init_mlstm_state(cfg, max_batch, dtype),
+                ssm.mlstm_state_dims(cfg))
+        if spec.kind == "slstm":
+            c["cell"], d["cell"] = stack_state(
+                ssm.init_slstm_state(cfg, max_batch, dtype),
+                ssm.slstm_state_dims(cfg))
+        caches.append(c)
+        dims.append(d)
+    return caches, dims
+
+
+def reset_paged_states(caches, reset_mask):
+    """Zero the recurrent per-slot states where ``reset_mask`` (B,) is
+    set — run at admission so a reused batch slot starts clean. Page
+    pools need no reset: stale pages are hidden by the lens masking."""
+    out = []
+    for c in caches:
+        nc = dict(c)
+        for key in ("mamba", "cell"):
+            if key in c:
+                nc[key] = jax.tree.map(
+                    lambda s: s * (1.0 - reset_mask.astype(s.dtype)).reshape(
+                        (1, -1) + (1,) * (s.ndim - 2)), c[key])
+        out.append(nc)
+    return out
+
+
+def apply_layer_decode_paged(cfg, spec: LayerSpec, p, cache, x, pos_b,
+                             tables, page_size: int):
+    """One-token layer step with per-sequence positions.
+
+    x: (B, 1, D); pos_b: (B,) tokens already cached per sequence;
+    tables: (B, TW) physical page per ring slot. Returns (x, new_cache).
+    """
+    new_cache = dict(cache)
+    if spec.kind in ("attn", "hybrid"):
+        h = apply_norm(cfg, p["ln1"], x)
+        q_pos = pos_b[:, None]                        # (B, 1) per-sequence
+        k_new, v_new = _project_kv(cfg, p["attn"], h, q_pos)
+        phys, slot = paged_phys_pages(tables, pos_b, page_size)
+        pages = {"k": cache["pages"]["k"].at[phys, slot].set(k_new[:, 0]),
+                 "v": cache["pages"]["v"].at[phys, slot].set(v_new[:, 0])}
+        new_cache["pages"] = pages
+        q = jnp.einsum("bsd,dhp->bshp", h, p["attn"]["wq"])
+        q = apply_rope(q, q_pos, cfg.rope_theta)
+        out = _paged_attn(cfg, q[:, 0], pages, tables, pos_b + 1,
+                          spec.window)
+        attn_out = jnp.einsum("bhp,hpd->bd", out, p["attn"]["wo"])[:, None]
+        if spec.kind == "hybrid":
+            m_out, new_cache["mamba"] = ssm.mamba_scan(
+                cfg, p["mamba"], h, cache["mamba"])
+            w = jax.nn.softmax(p["fuse"])
+            attn_out = (w[0] * attn_out.astype(jnp.float32)
+                        + w[1] * m_out.astype(jnp.float32)).astype(x.dtype)
+        if "ln1_post" in p:
+            attn_out = apply_norm(cfg, p["ln1_post"], attn_out)
+        x = x + attn_out
+        h = apply_norm(cfg, p["ln2"], x)
+        if spec.use_moe:
+            mlp_out, _ = moe_forward(cfg, p["moe"], h)
+        else:
+            mlp_out = _apply_mlp(cfg, p["mlp"], h)
+        if "ln2_post" in p:
+            mlp_out = apply_norm(cfg, p["ln2_post"], mlp_out)
+        x = x + mlp_out
+    elif spec.kind in ("mlstm", "slstm"):
+        h = apply_norm(cfg, p["ln1"], x)
+        scan_fn = ssm.mlstm_scan if spec.kind == "mlstm" else ssm.slstm_scan
+        y, new_cache["cell"] = scan_fn(cfg, p["cell"], h, cache["cell"])
+        x = x + y
+    return x, new_cache
+
+
+def apply_stack_decode_paged(cfg: ModelConfig, stack_params, caches, x,
+                             pos_b, tables, page_size: int):
+    """One fixed-shape continuous-batching step through all layers."""
+    pattern = block_pattern(cfg)
+
+    def body(carry, xs):
+        x = carry
+        layer_params, layer_caches = xs
+        new_caches = []
+        for spec, p, c in zip(pattern, layer_params, layer_caches):
+            x, nc = apply_layer_decode_paged(cfg, spec, p, c, x, pos_b,
+                                             tables, page_size)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    x, new_caches = jax.lax.scan(body, x, (tuple(stack_params), tuple(caches)))
+    return x, list(new_caches)
+
+
+def apply_layer_prefill_paged(cfg, spec: LayerSpec, p, cache, x, n_valid,
+                              slot_id, table_row, page_size: int):
+    """Chunked prefill of ONE batch slot, writing K/V into its pages.
+
+    x: (1, S, D) — the slot's prompt padded to the static chunk length S;
+    n_valid: real token count (pad tail's K/V is routed to the trash
+    page; causal masking makes pad queries invisible to real rows).
+    Recurrent sub-layers scan from a FRESH zero state and store the
+    result at ``slot_id`` — exact only when n_valid == S, which the
+    engine guarantees by routing recurrent families through static
+    exact-length chunks (prefix fill) + step-prefill.
+    """
+    new_cache = dict(cache)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    if spec.kind in ("attn", "hybrid"):
+        h = apply_norm(cfg, p["ln1"], x)
+        k, v = _project_kv(cfg, p["attn"], h, positions)
+        TW = table_row.shape[0]
+        tok_page = jnp.take(table_row, (positions // page_size) % TW)
+        # only the last TW*ps positions can survive the ring (mirrors
+        # _write_prefill_cache); dropping older writes also keeps the
+        # scatter free of duplicate (page, slot) pairs
+        valid = (positions < n_valid) & (positions >= n_valid - TW * page_size)
+        phys = jnp.where(valid, tok_page, TRASH_PAGE)
+        pslot = jnp.where(valid, positions % page_size, 0)
+        new_cache["pages"] = {
+            "k": cache["pages"]["k"].at[phys, pslot].set(k[0]),
+            "v": cache["pages"]["v"].at[phys, pslot].set(v[0])}
+        attn_out = _attn_call(cfg, p["attn"], h, positions, k, v, positions,
+                              spec.window)
+        if spec.kind == "hybrid":
+            m_out, m_state = ssm.mamba_scan(
+                cfg, p["mamba"], h, ssm.init_mamba_state(cfg, 1, x.dtype))
+            new_cache["mamba"] = jax.tree.map(
+                lambda full, new: jax.lax.dynamic_update_slice_in_dim(
+                    full, new.astype(full.dtype), slot_id, 0),
+                cache["mamba"], m_state)
+            w = jax.nn.softmax(p["fuse"])
+            attn_out = (w[0] * attn_out.astype(jnp.float32)
+                        + w[1] * m_out.astype(jnp.float32)).astype(x.dtype)
+        if "ln1_post" in p:
+            attn_out = apply_norm(cfg, p["ln1_post"], attn_out)
+        x = x + attn_out
+        h = apply_norm(cfg, p["ln2"], x)
+        if spec.use_moe:
+            mlp_out, _ = moe_forward(cfg, p["moe"], h)
+        else:
+            mlp_out = _apply_mlp(cfg, p["mlp"], h)
+        if "ln2_post" in p:
+            mlp_out = apply_norm(cfg, p["ln2_post"], mlp_out)
+        x = x + mlp_out
+    elif spec.kind in ("mlstm", "slstm"):
+        h = apply_norm(cfg, p["ln1"], x)
+        scan_fn = ssm.mlstm_scan if spec.kind == "mlstm" else ssm.slstm_scan
+        init_fn = (ssm.init_mlstm_state if spec.kind == "mlstm"
+                   else ssm.init_slstm_state)
+        y, state = scan_fn(cfg, p["cell"], h, init_fn(cfg, 1, x.dtype))
+        new_cache["cell"] = jax.tree.map(
+            lambda full, new: jax.lax.dynamic_update_slice_in_dim(
+                full, new.astype(full.dtype), slot_id, 0),
+            cache["cell"], state)
+        x = x + y
+    return x, new_cache
+
+
+def apply_stack_prefill_paged(cfg: ModelConfig, stack_params, caches, x,
+                              n_valid, slot_id, table_row, page_size: int):
+    """Chunk-prefill one slot through all layers. Returns (y, new_caches)."""
+    pattern = block_pattern(cfg)
+
+    def body(carry, xs):
+        x = carry
+        layer_params, layer_caches = xs
+        new_caches = []
+        for spec, p, c in zip(pattern, layer_params, layer_caches):
+            x, nc = apply_layer_prefill_paged(cfg, spec, p, c, x, n_valid,
+                                              slot_id, table_row, page_size)
             new_caches.append(nc)
         return x, tuple(new_caches)
 

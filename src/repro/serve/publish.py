@@ -1,0 +1,95 @@
+"""Zero-copy WA weight publishing: trainer W̿ → serving params, bit-exact.
+
+The trainer's offline-WA state (``repro.core.offline.WindowState``) holds
+W̿ as ONE packed, layout-described buffer. Publishing to the serving
+engine is therefore a LAYOUT problem, not a data problem:
+
+    repack(src_buf, src_spec, dst_spec)   # one device-side gather,
+    unpack(dst_buf, dst_spec, like=params)  # zero-copy leaf views
+
+``PackSpec.repack`` is bit-exact by contract (packing never touches
+values — the training-side parity harness in tests/test_packing.py
+pins this), so the served weights are bitwise the trainer's W̿ even when
+the snapshot was written under a different mesh's shard-aware layout.
+
+Publishing is double-buffered: the repack lands in the standby buffer
+while the engine keeps decoding from the live one; the swap itself is a
+host pointer update between steps (``engine.set_params``) — the jitted
+step takes params as an argument, so there is no retrace and no skipped
+step. The previous params are kept alive until the next publish so an
+in-flight dispatch can never read freed memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.packing import PackSpec, pack_spec, repack, unpack
+
+
+@jax.jit
+def _cast_like(leaf, like):
+    return leaf.astype(like.dtype)
+
+
+@dataclasses.dataclass
+class WeightPublisher:
+    """Publishes packed WA snapshots into a serving engine's params.
+
+    ``engine`` is any engine whose jitted steps take params as an
+    argument and which exposes ``params`` + ``set_params`` (both serving
+    engines do).
+    """
+    engine: object
+
+    def __post_init__(self):
+        self.dst_spec: PackSpec = pack_spec(self.engine.params)
+        self._repack = jax.jit(repack, static_argnums=(1, 2))
+        self._standby = None          # params kept alive across one swap
+        self.n_published = 0
+
+    def publish_packed(self, buf, src_spec: PackSpec):
+        """Repack ``buf`` (the trainer's packed W̿ under ``src_spec``)
+        into the serving layout and swap it in. Returns the new params.
+        """
+        if src_spec.same_layout(self.dst_spec):
+            dst_buf = jnp.asarray(buf, jnp.float32)   # already our layout
+        else:
+            dst_buf = self._repack(jnp.asarray(buf, jnp.float32),
+                                   src_spec, self.dst_spec)
+        new_params = unpack(dst_buf, self.dst_spec, like=self.engine.params)
+        new_params = jax.tree.map(_cast_like, new_params, self.engine.params)
+        # rotate: previous live params become the standby kept alive
+        # until the NEXT publish (no in-flight dispatch reads freed mem)
+        self._standby = self.engine.params
+        self.engine.set_params(new_params)
+        self.n_published += 1
+        return new_params
+
+    def publish_window_state(self, state):
+        """Publish W̿ from a live (or freshly loaded) WindowState."""
+        buf, spec = wa_snapshot(state)
+        return self.publish_packed(buf, spec)
+
+    def publish_checkpoint(self, path: str):
+        """Publish W̿ straight from a window-state checkpoint file."""
+        from repro.checkpoint.io import load_wa_snapshot
+        buf, spec = load_wa_snapshot(path)
+        return self.publish_packed(buf, spec)
+
+
+def wa_snapshot(state):
+    """(packed W̿ f32 buffer, PackSpec) from a WindowState: ring states
+    hold a running SUM (divide by count), streaming states hold the mean
+    directly. Grouped runtime states (per-group buffer tuples) are merged
+    to the canonical single logical buffer."""
+    total = state.total
+    if isinstance(total, (tuple, list)):
+        from repro.common.packing import merge_groups
+        total = merge_groups(total, state.spec)
+    if state.kind == "streaming":
+        return jnp.asarray(total, jnp.float32), state.spec
+    count = jnp.maximum(state.count, 1).astype(jnp.float32)
+    return jnp.asarray(total, jnp.float32) / count, state.spec

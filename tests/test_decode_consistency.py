@@ -1,12 +1,16 @@
 """Cached decode must match teacher forcing exactly (all cache kinds:
-KV ring buffers, sliding windows, SSM states, hybrid, multi-codebook)."""
+KV ring buffers, sliding windows, SSM states, hybrid, multi-codebook),
+and the paged serving engine must match the whole-batch engine bitwise
+on every family while compiling its decode step exactly once."""
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from conftest import make_lm_batch
 from repro.configs import get_smoke_config
 from repro.models.registry import build_model
+from repro.serve.engine import DecodeEngine, PagedDecodeEngine
 
 ARCHS = ["granite-3-2b", "gemma2-27b", "xlstm-125m", "hymba-1.5b",
          "musicgen-medium", "internvl2-1b", "qwen2-moe-a2.7b"]
@@ -33,3 +37,24 @@ def test_prefill_decode_matches_teacher_forcing(arch):
         logits, cache = lm.decode_step(params, cache, tok)
         errs.append(float(jnp.max(jnp.abs(logits - tf_logits[:, t]))))
     assert max(errs) < 2e-4, errs
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_paged_engine_matches_whole_batch_engine(arch):
+    """The paged serving path (block-table cache, chunk/step prefill,
+    fixed-shape continuous step) must emit BIT-equal greedy tokens to the
+    whole-batch reference engine, with exactly one step trace."""
+    cfg = get_smoke_config(arch)
+    lm = build_model(cfg)
+    params = lm.init(jax.random.key(0))
+    batch = make_lm_batch(cfg, B=2, S=9)
+
+    ref = DecodeEngine(lm=lm, params=params, max_seq_len=64)
+    want = np.asarray(ref.generate(batch, 6))
+
+    eng = PagedDecodeEngine(lm=lm, params=params, max_batch=2,
+                            max_seq_len=64, max_new=6, page_size=4,
+                            prefill_chunk=16)
+    got = np.asarray(eng.generate(batch, 6))
+    np.testing.assert_array_equal(got, want)
+    assert eng.step_traces == 1, "paged decode step retraced"

@@ -776,6 +776,55 @@ def test_window_state_migration_rejects_mismatched_keys(tmp_path):
         load_window_state(path, window_init(tmpl, I))
 
 
+# ------------------------------------------------- serving publish path
+
+
+def test_wa_snapshot_matches_window_mean(tmp_path):
+    """The serving-tier snapshot (live state AND checkpoint file) is the
+    bitwise packed W̿ for both window kinds."""
+    from repro.checkpoint.io import load_wa_snapshot, save_window_state
+    from repro.serve.publish import wa_snapshot
+    for kind in ("ring", "streaming"):
+        ws = window_init(params_like(), 3, kind=kind)
+        want = None
+        for t in range(2):
+            ws, want = window_update(ws, params_like(10 + t))
+        buf, spec = wa_snapshot(ws)
+        np.testing.assert_array_equal(
+            np.asarray(unpack(buf, spec, like=params_like())["w"]),
+            np.asarray(want["w"]))
+        path = str(tmp_path / f"ws_{kind}.npz")
+        save_window_state(path, ws)
+        buf2, spec2 = load_wa_snapshot(path)
+        assert spec2.same_layout(spec)
+        np.testing.assert_array_equal(np.asarray(buf2), np.asarray(buf))
+
+
+def test_weight_publisher_repack_is_bit_exact():
+    """Publishing from a foreign (shard-aware) layout is a pure layout
+    move: served params are bitwise the source tree, double-buffered."""
+    from repro.serve.publish import WeightPublisher
+
+    class FakeEngine:
+        def __init__(self, params):
+            self.params = params
+
+        def set_params(self, new):
+            self.params = new
+
+    eng = FakeEngine(params_like(0))
+    pub = WeightPublisher(engine=eng)
+    src_tree = params_like(5)
+    src_spec = pack_spec(src_tree, align=16, shards=3,
+                         shard_dims=[None, 1], axes=("model",))
+    old = eng.params
+    new = pub.publish_packed(pack(src_tree, src_spec), src_spec)
+    assert eng.params is new and pub._standby is old
+    for a, b in zip(jax.tree.leaves(new), jax.tree.leaves(src_tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert pub.n_published == 1
+
+
 # ------------------------------------------------------------------ TPU
 
 

@@ -1,0 +1,321 @@
+"""Serving tier: paged-attention op matrix (jnp gather reference AND the
+Pallas scalar-prefetch kernel vs the contiguous naive oracle), the page
+manager's allocation/reservation/defrag invariants, the continuous
+scheduler's bit-parity with the whole-batch engine under random ragged
+admit/finish traces, and zero-downtime WA weight hot-swap."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_lm_batch
+from repro.configs import get_smoke_config
+from repro.kernels.paged_attention import paged_attention
+from repro.models.attention import naive_attention
+from repro.models.cache import TRASH_PAGE, paged_table_width
+from repro.models.registry import build_model
+from repro.serve.engine import DecodeEngine, PagedDecodeEngine
+from repro.serve.pages import PageManager
+from repro.serve.publish import WeightPublisher
+from repro.serve.scheduler import ContinuousScheduler, Request
+
+
+# ------------------------------------------------------------ op matrix
+
+
+def _ring_fill(ks, vs, lens, ps, TW):
+    """Host simulation of the engine's write path: allocate a page the
+    first time a ring slot is touched, reuse it in place after the ring
+    wraps (sliding-window eviction), write every token's K/V."""
+    B, Smax = ks.shape[:2]
+    NP = 1 + B * TW
+    k_pages = np.zeros((NP, ps) + ks.shape[2:], ks.dtype)
+    v_pages = np.zeros_like(k_pages)
+    tables = np.full((B, TW), TRASH_PAGE, np.int32)
+    nxt = 1
+    for b in range(B):
+        for pos in range(int(lens[b])):
+            j = (pos // ps) % TW
+            if tables[b, j] == TRASH_PAGE:
+                tables[b, j] = nxt
+                nxt += 1
+            k_pages[tables[b, j], pos % ps] = ks[b, pos]
+            v_pages[tables[b, j], pos % ps] = vs[b, pos]
+    return k_pages, v_pages, tables
+
+
+# (page_size, window, Hkv, G, dtype, lens): ragged lengths cross page
+# boundaries; lens > window exercises in-place ring eviction; len 1 and
+# exact-multiple lens hit the boundary cases; G spans the GQA matrix.
+CASES = [
+    (4, None, 2, 2, "float32", (12, 7)),
+    (2, None, 2, 1, "float32", (9, 2)),
+    (8, None, 1, 4, "float32", (17, 8)),
+    (4, 5, 2, 2, "float32", (12, 3)),
+    (4, 16, 2, 2, "float32", (33, 16)),     # eviction: len ≫ window
+    (2, 7, 4, 1, "float32", (21, 1)),
+    (4, None, 2, 2, "bfloat16", (13, 6)),
+    (4, 16, 2, 4, "bfloat16", (33, 9)),
+]
+
+
+@pytest.mark.parametrize("ps,window,Hkv,G,dtype,lens", CASES)
+@pytest.mark.parametrize("impl", ["jnp", "pallas"])
+def test_paged_attention_matches_contiguous_oracle(ps, window, Hkv, G,
+                                                   dtype, lens, impl):
+    lens = np.asarray(lens, np.int32)
+    B, Smax, Hq, D = len(lens), int(lens.max()), Hkv * G, 16
+    TW = paged_table_width(64, window, ps)
+    ks_ = jax.random.split(jax.random.key(int(lens.sum())), 4)
+    q = jax.random.normal(ks_[0], (B, Hq, D)).astype(dtype)
+    kfull = jax.random.normal(ks_[1], (B, Smax, Hkv, D)).astype(dtype)
+    vfull = jax.random.normal(ks_[2], (B, Smax, Hkv, D)).astype(dtype)
+
+    k_pages, v_pages, tables = _ring_fill(np.asarray(kfull),
+                                          np.asarray(vfull), lens, ps, TW)
+    got = paged_attention(q, jnp.asarray(k_pages), jnp.asarray(v_pages),
+                          jnp.asarray(tables), jnp.asarray(lens),
+                          window=window, logit_softcap=30.0, impl=impl)
+
+    # contiguous oracle: full history + band mask (evicted positions are
+    # outside the window by the table-width invariant)
+    k_pos = np.broadcast_to(np.arange(Smax), (B, Smax)).copy()
+    k_pos[k_pos >= lens[:, None]] = -1
+    want = naive_attention(q[:, None], kfull, vfull,
+                           (lens - 1)[:, None], jnp.asarray(k_pos),
+                           window=window, logit_softcap=30.0)[:, 0]
+    tol = 2e-2 if dtype == "bfloat16" else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_paged_attention_zero_len_slot_is_finite():
+    """An inactive batch slot (len 0, all-trash table) must produce
+    zeros, not NaN — the all-masked safe-division guarantee."""
+    B, Hkv, G, D, ps, TW = 2, 2, 2, 16, 4, 3
+    q = jax.random.normal(jax.random.key(0), (B, Hkv * G, D))
+    pool = jnp.zeros((1 + TW, ps, Hkv, D))
+    tables = np.full((B, TW), TRASH_PAGE, np.int32)
+    tables[0] = [1, 2, 3]
+    lens = jnp.asarray([5, 0], jnp.int32)
+    for impl in ("jnp", "pallas"):
+        out = paged_attention(q, pool, pool, jnp.asarray(tables), lens,
+                              impl=impl)
+        assert bool(jnp.all(jnp.isfinite(out)))
+        assert bool(jnp.all(out[1] == 0.0))
+
+
+# ---------------------------------------------------------- page manager
+
+
+def test_page_manager_reservation_and_ring_reuse():
+    pm = PageManager(n_pages=8, page_size=4, table_width=3, max_slots=2)
+    assert pm.pages_needed(4 * 3 + 5) == 3          # capped at the ring
+    assert pm.can_admit(24)
+    s0 = pm.admit(24)                                # reserves 3
+    assert pm.available_pages == 4
+    s1 = pm.admit(24)
+    assert not pm.can_admit(4)                       # slots exhausted
+    # lazy assignment: one page per first ring-slot touch, then reuse
+    assert pm.touch(s0, 0) and pm.touch(s0, 4) and pm.touch(s0, 8)
+    assert not pm.touch(s0, 12)                      # ring wrap: reuse
+    assert pm.tables[s0, 0] != TRASH_PAGE
+    pm.release(s0)
+    assert all(pm.tables[s0] == TRASH_PAGE)
+    assert pm.can_admit(24)
+    pm.release(s1)
+    assert pm.free_pages == 7
+
+
+def test_page_manager_defrag_preserves_contents():
+    pm = PageManager(n_pages=12, page_size=2, table_width=2, max_slots=3)
+    slots = [pm.admit(8) for _ in range(3)]
+    for s in slots:
+        pm.touch_range(s, 0, 8)
+    pm.release(slots[1])                             # punch a hole
+    pool = np.arange(12 * 2 * 3, dtype=np.float32).reshape(12, 2, 3)
+    before = {(s, j): pool[pm.tables[s, j]].copy()
+              for s in (slots[0], slots[2]) for j in range(2)}
+    perm = pm.defrag()
+    assert perm[TRASH_PAGE] == TRASH_PAGE
+    assert sorted(int(p) for row in pm.tables[[slots[0], slots[2]]]
+                  for p in row) == [1, 2, 3, 4]      # compacted to front
+    new_pool = pool[np.argsort(perm)]                # engine's re-gather
+    for (s, j), want in before.items():
+        np.testing.assert_array_equal(new_pool[pm.tables[s, j]], want)
+
+
+def test_engine_apply_page_perm_matches_defrag():
+    cfg = get_smoke_config("gemma2-27b")
+    lm = build_model(cfg)
+    params = lm.init(jax.random.key(0))
+    batch = make_lm_batch(cfg, B=2, S=9)
+    eng = PagedDecodeEngine(lm=lm, params=params, max_batch=2,
+                            max_seq_len=64, max_new=6, page_size=4,
+                            prefill_chunk=16)
+    a = np.asarray(eng.generate(batch, 3))
+    # defrag between requests, then serve again through remapped tables
+    perm = eng.pages.defrag()
+    eng.apply_page_perm(perm)
+    b = np.asarray(eng.generate(batch, 3))
+    np.testing.assert_array_equal(a, b)
+    assert eng.step_traces == 1
+
+
+# ------------------------------------------- scheduler property (parity)
+
+
+@pytest.mark.parametrize("arch,seed", [("granite-3-2b", 0),
+                                       ("gemma2-27b", 1)])
+def test_scheduler_random_trace_bit_equals_whole_batch(arch, seed):
+    """Random ragged admit/finish traces through the continuous scheduler
+    must emit BIT-equal tokens to the whole-batch reference engine, while
+    the decode step compiles exactly once (no admit/evict retrace)."""
+    cfg = get_smoke_config(arch)
+    lm = build_model(cfg)
+    params = lm.init(jax.random.key(0))
+    rng = np.random.RandomState(seed)
+    reqs = [Request(rid=i,
+                    tokens=rng.randint(0, cfg.vocab_size,
+                                       size=(int(rng.randint(2, 13)),)
+                                       ).astype(np.int32),
+                    n_new=int(rng.randint(1, 7)),
+                    arrival=int(rng.randint(0, 6)))
+            for i in range(7)]
+    eng = PagedDecodeEngine(lm=lm, params=params, max_batch=3,
+                            max_seq_len=64, max_new=8, page_size=4,
+                            prefill_chunk=16)
+    outs = ContinuousScheduler(eng).run(reqs, max_steps=600)
+    assert eng.step_traces == 1, "decode step retraced on admit/evict"
+
+    ref = DecodeEngine(lm=lm, params=params, max_seq_len=64)
+    for r in reqs:
+        want = np.asarray(ref.generate(
+            {"tokens": jnp.asarray(r.tokens[None])}, r.n_new))[0]
+        np.testing.assert_array_equal(outs[r.rid], want,
+                                      err_msg=f"rid {r.rid}")
+
+
+def test_scheduler_step_prefill_trace_recurrent():
+    """Hybrid (attn ‖ mamba) requests ride the step-prefill lane; ragged
+    arrivals must still match the whole-batch engine bit-for-bit."""
+    cfg = get_smoke_config("hymba-1.5b")
+    lm = build_model(cfg)
+    params = lm.init(jax.random.key(0))
+    rng = np.random.RandomState(3)
+    reqs = [Request(rid=i,
+                    tokens=rng.randint(0, cfg.vocab_size,
+                                       size=(int(rng.randint(2, 9)),)
+                                       ).astype(np.int32),
+                    n_new=int(rng.randint(1, 5)),
+                    arrival=int(rng.randint(0, 4)))
+            for i in range(4)]
+    eng = PagedDecodeEngine(lm=lm, params=params, max_batch=2,
+                            max_seq_len=64, max_new=6, page_size=4,
+                            prefill_chunk=16)
+    outs = ContinuousScheduler(eng).run(reqs, max_steps=600)
+    assert eng.step_traces == 1
+    ref = DecodeEngine(lm=lm, params=params, max_seq_len=64)
+    for r in reqs:
+        want = np.asarray(ref.generate(
+            {"tokens": jnp.asarray(r.tokens[None])}, r.n_new))[0]
+        np.testing.assert_array_equal(outs[r.rid], want,
+                                      err_msg=f"rid {r.rid}")
+
+
+# --------------------------------------------------------- weight hot-swap
+
+
+def test_hot_swap_mid_decode_zero_downtime():
+    """Publish new weights between decode steps: the repack is bit-exact
+    (even from a shard-aware source layout), the continuation equals a
+    run that switched params at the same step, and the step never
+    retraces (zero downtime — no skipped or recompiled step)."""
+    from repro.common.packing import pack, pack_spec
+
+    cfg = get_smoke_config("granite-3-2b")
+    lm = build_model(cfg)
+    params1 = lm.init(jax.random.key(0))
+    params2 = lm.init(jax.random.key(7))
+    batch = make_lm_batch(cfg, B=2, S=10)
+
+    def drive(engine, swap_fn):
+        sched = ContinuousScheduler(engine)
+        engine.reset_state(0)
+        acts = [sched._admit(Request(rid=b,
+                                     tokens=np.asarray(batch["tokens"][b]),
+                                     n_new=8)) for b in range(2)]
+        active = {a.slot: a for a in acts}
+
+        def one_step():
+            ctrl = sched._build_ctrl(active, 2, engine.scratch_idx,
+                                     False, None)
+            engine.step(ctrl)
+            for a in active.values():
+                a.fresh = False
+                a.pos += 1
+                a.emitted += 1
+        for _ in range(3):
+            one_step()
+        swap_fn(engine)
+        for _ in range(5):
+            one_step()
+        return np.stack([engine.read_out(a.slot, 8) for a in acts])
+
+    eng_pub = PagedDecodeEngine(lm=lm, params=params1, max_batch=2,
+                                max_seq_len=64, max_new=8, page_size=4,
+                                prefill_chunk=16)
+    pub = WeightPublisher(engine=eng_pub)
+    # source buffer under a DIFFERENT (shard-aware, 2-segment) layout
+    shard_dims = [None] * len(jax.tree.leaves(params2))
+    src_spec = pack_spec(params2, shards=2, shard_dims=shard_dims)
+    buf = pack(params2, src_spec)
+
+    def publish(engine):
+        new = pub.publish_packed(buf, src_spec)
+        for a, b in zip(jax.tree.leaves(new), jax.tree.leaves(params2)):
+            assert bool(jnp.all(a == b)), "repack not bit-exact"
+
+    got = drive(eng_pub, publish)
+    assert eng_pub.step_traces == 1, "hot-swap retraced the decode step"
+
+    eng_ref = PagedDecodeEngine(lm=lm, params=params1, max_batch=2,
+                                max_seq_len=64, max_new=8, page_size=4,
+                                prefill_chunk=16)
+    want = drive(eng_ref, lambda e: e.set_params(params2))
+    np.testing.assert_array_equal(got, want)
+    # and the swapped continuation really runs the NEW weights
+    eng_old = PagedDecodeEngine(lm=lm, params=params1, max_batch=2,
+                                max_seq_len=64, max_new=8, page_size=4,
+                                prefill_chunk=16)
+    stale = drive(eng_old, lambda e: None)
+    assert not np.array_equal(got, stale)
+
+
+def test_publish_from_checkpoint(tmp_path):
+    """W̿ published straight from a window-state checkpoint equals the
+    mean of the pushed outer weights, served bitwise."""
+    from repro.checkpoint.io import save_window_state
+    from repro.core.offline import window_init, window_update
+
+    cfg = get_smoke_config("granite-3-2b")
+    lm = build_model(cfg)
+    params = lm.init(jax.random.key(0))
+    state = window_init(params, window=3)
+    outers = [jax.tree.map(lambda p, s=s: p + 0.1 * s, params)
+              for s in (1, 2)]
+    for o in outers:
+        state, avg = window_update(state, o)
+    path = str(tmp_path / "wa.npz")
+    save_window_state(path, state)
+
+    eng = PagedDecodeEngine(lm=lm, params=params, max_batch=1,
+                            max_seq_len=32, max_new=4, page_size=4,
+                            prefill_chunk=8)
+    new = WeightPublisher(engine=eng).publish_checkpoint(path)
+    for got, a, b in zip(jax.tree.leaves(new), jax.tree.leaves(outers[0]),
+                         jax.tree.leaves(outers[1])):
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray((a + b) / 2))
+    assert eng.params is new
