@@ -7,9 +7,10 @@ export PYTHONPATH := src:$(PYTHONPATH)
 # PYTEST_ARGS='-m "not slow"' (nightly CI runs the full lane)
 PYTEST_ARGS ?=
 
-.PHONY: test test-fast spmd mesh-hwa mesh-hwa-fsdp bench bench-kernels \
-	bench-attn bench-sync bench-serve bench-check train-smoke docs-check \
-	hwa-lint hwa-lint-smoke fault-check fault-check-smoke serve-demo
+.PHONY: test test-fast spmd mesh-hwa mesh-hwa-fsdp mesh-hwa-bf16 bench \
+	bench-kernels bench-attn bench-sync bench-comms bench-serve \
+	bench-check train-smoke docs-check hwa-lint hwa-lint-smoke \
+	fault-check fault-check-smoke serve-demo
 
 # tier-1: docs sanity + the full CPU suite (SPMD checks run in their own
 # subprocesses)
@@ -43,6 +44,14 @@ mesh-hwa-fsdp:
 	$(PY) -m repro.launch.train --mesh-native --steps 8 --sync-period 4 \
 	    --batch-size 8 --seq-len 16 --k 2 --fsdp --tp 2
 
+# compressed WA precision end-to-end: bf16 ring storage + bf16 cross-pod
+# payload on the two-level tree (the f32 totals stay Kahan-compensated)
+mesh-hwa-bf16:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+	$(PY) -m repro.launch.train --mesh-native --steps 8 --sync-period 2 \
+	    --batch-size 8 --seq-len 16 --k 4 --sync-tree two-level \
+	    --outer-every 2 --wa-dtype bf16 --comms-dtype bf16
+
 # communication-amortization numbers from real lowered HLO
 bench:
 	$(PY) -m benchmarks.run --only mesh_comm
@@ -62,6 +71,12 @@ bench-attn:
 # appends the sync/tree block to BENCH_kernels.json
 bench-sync:
 	$(PY) -m benchmarks.run --only sync_tree
+
+# compressed WA ring + cross-pod payload (bf16 / fp8 vs f32): HBM and
+# ICI-byte ratios plus bounded-ULP parity, from real lowered HLO and
+# real sync outputs; appends the sync/comms block to BENCH_kernels.json
+bench-comms:
+	$(PY) -m benchmarks.run --only comms
 
 # continuous batching vs static batching at ragged occupancy (tokens/s,
 # token-slot work ratio, step-trace count); appends the serve block to

@@ -26,6 +26,7 @@ BENCHES = [
     ("mesh_comm", "benchmarks.mesh_comm"),
     ("kernels", "benchmarks.kernel_bench"),
     ("sync_tree", "benchmarks.sync_tree"),
+    ("comms", "benchmarks.comms_bench"),
     ("serve", "benchmarks.serve_bench"),
     ("roofline", "benchmarks.roofline"),
 ]
@@ -36,7 +37,7 @@ BENCHES = [
 # append under their own keys — existing keys from other benchmarks
 # survive.
 _BENCH_JSON_KEY = {"kernels": None, "sync_tree": "sync/tree",
-                   "serve": "serve"}
+                   "comms": "sync/comms", "serve": "serve"}
 
 
 def _merge_bench_json(name: str, result: dict) -> None:

@@ -68,9 +68,11 @@ class DtypePolicy:
     compiled text (f64 leaks — a stray Python float in the sync math
     silently doubles comm bytes). ``collective_dtypes``: allowed payload
     dtypes of every collective instruction (None = unchecked); the sync
-    bundles pin this to ``("f32",)`` — THE enforcement point where the
-    ROADMAP compressed-comms (bf16/fp8) work will land budgeted
-    exceptions per bundle instead of a global free-for-all.
+    bundles pin this to ``("f32",)`` by default, and the compressed-comms
+    bundles declare their exact payload set — the narrow-float token plus
+    its same-width integer wire view (``("f32", "bf16", "u16")`` /
+    ``("f32", "f8e4m3fn", "u8")``) — budgeted per-bundle exceptions
+    rather than a global free-for-all.
     ``float_args``: allowed tokens for every inexact (floating) leaf of
     the bundle's abstract args (None = unchecked) — pins the packed
     ring/total and parameter state; a bf16-ring variant declares
@@ -143,7 +145,9 @@ SYNC_DTYPES_F32 = DtypePolicy(collective_dtypes=("f32",),
 
 def sync_contract(axis, *, launches: int, outer_axis=None,
                   n_collectives: int = 1, outer_collectives: int = 0,
+                  outer_ops: Mapping[str, int] | None = None,
                   other_ops: Mapping[str, int] | None = None,
+                  collective_dtypes: tuple[str, ...] = ("f32",),
                   float_args: tuple[str, ...] = ("f32",),
                   notes: str = "") -> BundleContract:
     """Contract factory for WA sync bundles: ``n_collectives`` weight
@@ -151,18 +155,29 @@ def sync_contract(axis, *, launches: int, outer_axis=None,
     2 for the resilient alive-masked sync — k_alive + masked weights),
     optionally one level up over ``outer_axis``, non-level crossings
     pinned to ``other_ops`` (default: zero assembly traffic), an exact
-    launch budget, and the strict f32 discipline."""
+    launch budget, and strict payload-dtype discipline.
+
+    ``collective_dtypes`` defaults to the historical f32-only payload
+    pin; the compressed-comms bundles widen it per bundle (e.g.
+    ``("f32", "bf16", "u16")`` for the bf16 bit-view gather, ``("f32",
+    "f8e4m3fn", "u8")`` for the fp8 gather pair) — a budgeted
+    exception, not a global free-for-all. ``outer_ops`` overrides the
+    default ``{"all-reduce": outer_collectives}`` outer-level census
+    for shapes like the compressed paths, whose outer wire op is
+    all-gather (bit-view payload, + scales for fp8), not all-reduce."""
+    if outer_ops is None:
+        outer_ops = ({"all-reduce": outer_collectives}
+                     if outer_collectives else {})
     return BundleContract(
         collectives=CollectiveContract(
             axis=axis,
             ops={"all-reduce": n_collectives} if n_collectives else {},
             outer_axis=outer_axis,
-            outer_ops=({"all-reduce": outer_collectives}
-                       if outer_collectives else {}),
+            outer_ops=dict(outer_ops),
             assembly_free=True,
             other_ops=dict(other_ops) if other_ops else {}),
         launch=LaunchBudget.exact(launches),
-        dtypes=DtypePolicy(collective_dtypes=("f32",),
+        dtypes=DtypePolicy(collective_dtypes=collective_dtypes,
                            float_args=float_args),
         notes=notes)
 

@@ -51,11 +51,7 @@ def default_cases() -> list[LintCase]:
     from repro.core.hwa import HWAConfig
     from repro.launch.mesh import make_test_mesh, make_tree_test_mesh
     from repro.launch.specs import input_specs
-    from repro.launch.sync.bundles import (make_hwa_sync_step,
-                                           make_hwa_train_step,
-                                           make_mesh_hwa_inner_sync_step,
-                                           make_mesh_hwa_sync_step,
-                                           make_mesh_hwa_train_step)
+    from repro.launch.sync.plan import SyncPlan, build_hwa_bundles
     from repro.launch.sync.topology import TwoLevel
     from repro.models.registry import build_model
     from repro.models.types import InputShape
@@ -85,63 +81,85 @@ def default_cases() -> list[LintCase]:
                        resilient=True)
     topo = TwoLevel("replica", "pod", outer_every=2)
 
+    def train(lm_, rules_, hwa, **kw):
+        plan = SyncPlan(hwa=hwa, optimizer="sgd", **kw)
+        return build_hwa_bundles(lm_, rules_, plan, specs, dims).train
+
+    def sync(rules_, hwa, **kw):
+        return build_hwa_bundles(lm, rules_, SyncPlan(hwa=hwa, **kw)).sync
+
     return [
         LintCase(
             "train/mesh-native@2x2x2", smoke=True,
-            build=lambda: (make_mesh_hwa_train_step(
-                lm, rules, specs, dims, hwa2, optimizer="sgd"), mesh)),
+            build=lambda: (train(lm, rules, hwa2), mesh)),
         # flash-pallas train step: fully-manual shard_map (Pallas is
         # opaque to GSPMD) with an EXACT LaunchBudget — 1 attention fwd
         # + 2 recompute-bwd sweeps inside the single layer-scan eqn
         LintCase(
             "train/mesh-native-flash-pallas@2x2x2", smoke=True,
-            build=lambda: (make_mesh_hwa_train_step(
-                lm_fp, rules, specs, dims, hwa2, optimizer="sgd"), mesh)),
+            build=lambda: (train(lm_fp, rules, hwa2), mesh)),
         LintCase(
             "train/hwa-vmap@2x2x2",
-            build=lambda: (make_hwa_train_step(
-                lm, rules, specs, dims, hwa2, optimizer="sgd"), mesh)),
+            build=lambda: (train(lm, rules, hwa2, mesh_native=False),
+                           mesh)),
         LintCase(
             "sync/flat-resident@2x2x2", smoke=True,
-            build=lambda: (make_mesh_hwa_sync_step(lm, rules, hwa2),
-                           mesh)),
+            build=lambda: (sync(rules, hwa2), mesh)),
         LintCase(
             "sync/flat-resident-kernel@2x2x2", smoke=True,
-            build=lambda: (make_mesh_hwa_sync_step(lm, rules, hwa2k),
-                           mesh)),
+            build=lambda: (sync(rules, hwa2k), mesh)),
         LintCase(
             "sync/flat-vmap-k4-kernel@2x2x2",
-            build=lambda: (make_hwa_sync_step(lm, rules, hwa4k), mesh)),
+            build=lambda: (sync(rules, hwa4k, mesh_native=False), mesh)),
         LintCase(
             "sync/fsdp-grouped-kernel@2x2x2",
-            build=lambda: (make_mesh_hwa_sync_step(lm, rules_f, hwa2k),
-                           mesh)),
+            build=lambda: (sync(rules_f, hwa2k), mesh)),
         LintCase(
             "sync/two-level-outer-kernel@tree",
-            build=lambda: (make_mesh_hwa_sync_step(
-                lm, rules_t, hwa4t, topology=topo), mesh_t)),
+            build=lambda: (build_hwa_bundles(
+                lm, rules_t, SyncPlan(hwa=hwa4t, topology=topo)).sync,
+                mesh_t)),
+        # compressed precision corners (PR 10): bf16 ring storage keeps
+        # the fused kernel; bf16 comms cast the cross-pod payload; fp8
+        # replaces the outer all-reduce with an all-gather pair
+        # (payload + per-block scales) and pushes via the jnp reference
+        LintCase(
+            "sync/flat-resident-bf16-ring@2x2x2", smoke=True,
+            build=lambda: (sync(rules, hwa2k, wa_dtype="bf16"), mesh)),
+        LintCase(
+            "sync/two-level-outer-bf16-comms@tree",
+            build=lambda: (build_hwa_bundles(
+                lm, rules_t, SyncPlan(hwa=hwa4t, topology=topo,
+                                      wa_dtype="bf16",
+                                      comms_dtype="bf16")).sync, mesh_t)),
+        LintCase(
+            "sync/two-level-outer-fp8@tree",
+            build=lambda: (build_hwa_bundles(
+                lm, rules_t, SyncPlan(hwa=hwa4t, topology=topo,
+                                      wa_dtype="fp8",
+                                      comms_dtype="fp8")).sync, mesh_t)),
         # resilient (alive-masked) sync: exactly 2 replica-level
         # all-reduces (k_alive + masked weights) plus the budgeted
         # non-replica health-stats psum — still zero assembly traffic
         LintCase(
             "sync/flat-resident-resilient@2x2x2", smoke=True,
-            build=lambda: (make_mesh_hwa_sync_step(lm, rules, hwa2r),
-                           mesh)),
+            build=lambda: (sync(rules, hwa2r), mesh)),
         LintCase(
             "sync/fsdp-grouped-resilient@2x2x2",
-            build=lambda: (make_mesh_hwa_sync_step(lm, rules_f, hwa2r),
-                           mesh)),
+            build=lambda: (sync(rules_f, hwa2r), mesh)),
         LintCase(
             "sync/two-level-outer-resilient@tree",
-            build=lambda: (make_mesh_hwa_sync_step(
-                lm, rules_t, hwa4tr, topology=topo), mesh_t)),
+            build=lambda: (build_hwa_bundles(
+                lm, rules_t, SyncPlan(hwa=hwa4tr, topology=topo)).sync,
+                mesh_t)),
         LintCase(
             "sync/two-level-inner@tree",
-            build=lambda: (make_mesh_hwa_inner_sync_step(
-                lm, rules_t, hwa4t, topo), mesh_t)),
+            build=lambda: (build_hwa_bundles(
+                lm, rules_t,
+                SyncPlan(hwa=hwa4t, topology=topo)).inner_sync, mesh_t)),
         LintCase(
             "sync/legacy-kernel@1dev", smoke=True,
-            build=lambda: (make_hwa_sync_step(lm, rules_1, hwa2k),
+            build=lambda: (sync(rules_1, hwa2k, mesh_native=False),
                            mesh_1)),
         # serving decode step: no collectives anywhere, exactly 1 paged-
         # attention launch (one pattern attention spec under flash_pallas,

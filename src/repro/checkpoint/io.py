@@ -166,12 +166,24 @@ def save_window_state(path: str, state: Any) -> None:
             np.concatenate(arrs, axis=arrs[0].ndim - 1)
 
     ring, total = state.ring, state.total
+    comp = getattr(state, "comp", None)
+    scales = getattr(state, "scales", None)
     if state.spec is not None:
         if ring is not None:
             ring = _merge_host(ring)
         total = _merge_host(total)
+        if comp is not None:
+            comp = _merge_host(comp)
+        if scales is not None:
+            # per-group scale blocks concatenate to the merged buffer's
+            # blocks exactly: group ranges are ALIGN multiples
+            scales = _merge_host(scales)
     tree = {"ring": ring, "total": total,
             "count": state.count, "next_idx": state.next_idx}
+    if comp is not None:
+        tree["comp"] = comp
+    if scales is not None:
+        tree["scales"] = scales
     if state.spec is not None:
         tree["spec_json"] = np.asarray(spec_to_json(state.spec))
     save_pytree(path, tree)
@@ -201,11 +213,35 @@ def load_wa_snapshot(path: str):
     return jnp.asarray(total), spec
 
 
+def _split_scale_groups(scales, spec):
+    """Per-group views of an fp8 scale buffer ``(..., padded // align)``:
+    group ranges are ALIGN multiples, so block boundaries land exactly on
+    group boundaries."""
+    return tuple(
+        jax.lax.slice_in_dim(scales, g.offset // spec.align,
+                             (g.offset + g.padded) // spec.align,
+                             axis=scales.ndim - 1)
+        for g in spec.group_table())
+
+
 def load_window_state(path: str, like: Any) -> Any:
     """Load a WindowState saved by :func:`save_window_state` — repacking
     across layout changes, or migrating an old per-leaf checkpoint — into
     the packed layout of ``like`` (a WindowState template whose ``spec``
-    fixes offsets and treedef)."""
+    fixes offsets and treedef).
+
+    **Precision migration.** The template's ring dtype wins. When it
+    matches the stored ring (and, for fp8, the stored layout), the load
+    is bit-exact — compressed rings round-trip through integer views
+    untouched. When it differs (f32 checkpoint into a bf16/fp8 window,
+    or a compressed checkpoint back into f32), the stored ring is
+    DECODED to f32, repacked, and re-encoded slot-by-slot under the
+    template's dtype; the running total is then recomputed as the sum of
+    the re-encoded (dequantized) slots and the Kahan compensation reset
+    to zero — restoring the compressed-accounting invariant (future
+    evictions subtract exactly the bits a slot stores). Migration into
+    GROUPED compressed layouts is not supported (load f32, then resync).
+    """
     from repro.common.packing import repack as repack_buf, spec_from_json
     from repro.core.offline import WindowState
 
@@ -280,18 +316,90 @@ def load_window_state(path: str, like: Any) -> Any:
         return pack_leaves(parts, spec, n_lead=len(lead)).astype(dtype)
 
     from repro.common.packing import split_groups
-    ring = None
-    if like.ring is not None:
-        ring_grouped = isinstance(like.ring, tuple)
-        rd = like.ring[0].dtype if ring_grouped else like.ring.dtype
-        ring = restore(grab("ring"), (like.window,), rd)
-        if ring_grouped:        # template holds per-group runtime buffers
-            ring = split_groups(ring, spec)
-    total = restore(grab("total"), (), jnp.float32)
-    if isinstance(like.total, tuple):
-        total = split_groups(total, spec)
     count = jnp.asarray(grab("count")[0][1], jnp.int32)
     next_idx = jnp.asarray(grab("next_idx")[0][1], jnp.int32)
+    like_comp = getattr(like, "comp", None)
+    like_scales = getattr(like, "scales", None)
+    if like.ring is None:                                      # streaming
+        total = restore(grab("total"), (), jnp.float32)
+        if isinstance(like.total, tuple):
+            total = split_groups(total, spec)
+        return WindowState(ring=None, total=total, count=count,
+                           next_idx=next_idx, window=like.window,
+                           kind=like.kind, spec=spec)
+
+    ring_grouped = isinstance(like.ring, tuple)
+    rd = np.dtype((like.ring[0] if ring_grouped else like.ring).dtype)
+    items = grab("ring")
+    # per-leaf (pre-packing) checkpoints only ever stored f32
+    stored_rd = (np.dtype(items[0][1].dtype) if len(items) == 1
+                 else np.dtype(np.float32))
+    stored_scales = by_group.get("scales")
+    layout_same = stored_spec is None or spec.same_layout(stored_spec)
+    direct = stored_rd == rd and (stored_scales is None or layout_same)
+
+    if direct:
+        ring = restore(items, (like.window,), rd)
+        if ring_grouped:        # template holds per-group runtime buffers
+            ring = split_groups(ring, spec)
+        total = restore(grab("total"), (), jnp.float32)
+        if isinstance(like.total, tuple):
+            total = split_groups(total, spec)
+        comp = scales = None
+        if like_comp is not None:
+            # absent in pre-compression checkpoints of the same dtype
+            # (impossible — comp exists iff the ring is compressed — but
+            # zeros are the correct fresh compensation either way)
+            comp = (restore(by_group["comp"], (), jnp.float32)
+                    if "comp" in by_group
+                    else jax.tree.map(jnp.zeros_like, total))
+            if isinstance(like_comp, tuple) and not isinstance(comp, tuple):
+                comp = split_groups(comp, spec)
+        if like_scales is not None:
+            if stored_scales is None:
+                raise ValueError("fp8 window template but the checkpoint "
+                                 "stores no 'scales'")
+            scales = jnp.asarray(stored_scales[0][1], jnp.float32)
+            if isinstance(like_scales, tuple):
+                scales = _split_scale_groups(scales, spec)
+        return WindowState(ring=ring, total=total, count=count,
+                           next_idx=next_idx, window=like.window,
+                           kind=like.kind, spec=spec,
+                           comp=comp, scales=scales)
+
+    # ---- precision migration: decode -> repack (f32) -> re-encode
+    from repro.common.quant import decode_slot, encode_slot
+    if ring_grouped:
+        raise ValueError("precision migration into a GROUPED window "
+                         "layout is unsupported: load under the stored "
+                         "ring dtype (or f32) and let the next syncs "
+                         "refill the window")
+    if len(items) == 1 and stored_scales is not None:
+        # fp8 checkpoint: decode under the STORED layout first (its
+        # scales describe the stored block positions), then repack f32
+        arr = items[0][1]
+        s_spec = stored_spec if stored_spec is not None else spec
+        if arr.shape != (like.window, s_spec.padded):
+            raise ValueError(f"packed fp8 ring {arr.shape} does not match "
+                             f"its stored layout ({s_spec.padded})")
+        decoded = decode_slot(jnp.asarray(arr),
+                              jnp.asarray(stored_scales[0][1], jnp.float32))
+        if not layout_same:
+            decoded = repack_buf(decoded, stored_spec, spec)
+        f32_ring = decoded
+    else:
+        # f32/bf16 stored (packed, possibly other-layout, or per-leaf):
+        # the existing restore machinery handles every layout case
+        f32_ring = restore(items, (like.window,), jnp.float32)
+    ring, scales = encode_slot(f32_ring, rd)
+    # recompute the running total as the sum of the re-encoded slots:
+    # unfilled slots are zeros, so the plain row sum equals the sum over
+    # the count filled entries — and future evictions subtract exactly
+    # what a slot decodes to (the compressed-accounting invariant)
+    total = jnp.sum(decode_slot(ring, scales), axis=0)
+    comp = jnp.zeros_like(total) if like_comp is not None else None
+    if like_scales is None:
+        scales = None
     return WindowState(ring=ring, total=total, count=count,
                        next_idx=next_idx, window=like.window,
-                       kind=like.kind, spec=spec)
+                       kind=like.kind, spec=spec, comp=comp, scales=scales)

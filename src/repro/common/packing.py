@@ -140,6 +140,15 @@ class PackSpec:
     (``register_dataclass`` meta field) and as a ``jit`` static argument.
     ``axes`` records the mesh axes of the packed super-axis (layout
     metadata only — packing itself never touches a mesh).
+
+    ``ring_dtype`` names the storage dtype of WA ring buffers laid out by
+    this spec (``float32`` default; ``bfloat16`` / ``float8_e4m3fn`` for
+    the compressed WA state). It is precision metadata, NOT layout: two
+    specs differing only in ``ring_dtype`` satisfy :meth:`same_layout`
+    and repack bit-exactly. An fp8 ring carries one f32 scale per
+    ``align``-element block (:attr:`scale_blocks` per ring row); blocks
+    line up with segment/group boundaries because every segment length is
+    an ``align`` multiple, so the scales shard exactly like the buffer.
     """
     treedef: Any                     # jax PyTreeDef (None for specs
                                      # rehydrated from checkpoint metadata)
@@ -151,6 +160,8 @@ class PackSpec:
     axes: tuple[str, ...] = ()
     groups: tuple[PackGroup, ...] = ()   # grouped layout; () == one range
                                          # described by shards/axes
+    ring_dtype: str = "float32"      # WA ring storage dtype (precision
+                                     # metadata; layout-neutral)
 
     @property
     def n_leaves(self) -> int:
@@ -224,7 +235,8 @@ class PackSpec:
         if not self.groups:
             return PackSpec(treedef=self.treedef, leaves=tuple(leaves),
                             size=sum(l.size for l in leaves),
-                            padded=self.seg_len, align=self.align)
+                            padded=self.seg_len, align=self.align,
+                            ring_dtype=self.ring_dtype)
         lgroups = []
         off = 0
         for g in gt:
@@ -233,14 +245,40 @@ class PackSpec:
             off += g.seg_len
         return PackSpec(treedef=self.treedef, leaves=tuple(leaves),
                         size=sum(l.size for l in leaves), padded=off,
-                        align=self.align, groups=tuple(lgroups))
+                        align=self.align, groups=tuple(lgroups),
+                        ring_dtype=self.ring_dtype)
 
     def same_layout(self, other: "PackSpec") -> bool:
         """Layout equality ignoring the treedef (checkpoint-rehydrated
-        specs have none)."""
+        specs have none) and ``ring_dtype`` (precision, not layout)."""
         return (self.leaves == other.leaves and self.padded == other.padded
                 and self.shards == other.shards and self.align == other.align
                 and self.groups == other.groups)
+
+    # ------------------------------------------ precision metadata
+
+    @property
+    def scale_block(self) -> int:
+        """Elements per fp8 scale: one ``align`` block == one kernel tile."""
+        return self.align
+
+    @property
+    def scale_blocks(self) -> int:
+        """fp8 scales per ring row over the whole buffer."""
+        return self.padded // self.align
+
+    def group_scale_blocks(self, g: PackGroup) -> int:
+        """fp8 scales per ring row of one group's range."""
+        return g.padded // self.align
+
+    def with_ring_dtype(self, dtype) -> "PackSpec":
+        """This layout with its WA ring precision set (dtype or token —
+        ``f32``/``bf16``/``fp8`` — accepted); layout untouched."""
+        from repro.common.quant import wa_dtype
+        name = np.dtype(wa_dtype(dtype)).name
+        if name == self.ring_dtype:
+            return self
+        return dataclasses.replace(self, ring_dtype=name)
 
 
 def pack_spec(tree: PyTree, align: int = ALIGN, *, shards: int = 1,
@@ -554,13 +592,48 @@ def window_buffers(spec: PackSpec, window: int, ring_dtype=jnp.float32,
     arrays for single-range layouts, per-group tuples for grouped ones
     (each group buffer shards over its own super-axis). ``make(shape,
     dtype)`` swaps the allocator — ``jax.ShapeDtypeStruct`` gives the
-    bundle's abstract args (the ONE place this shape contract lives)."""
+    bundle's abstract args (the ONE place this shape contract lives).
+    The total is ALWAYS f32, whatever the ring stores; compressed rings
+    carry their companions (fp8 scales, Kahan compensation) via
+    :func:`window_aux_buffers`."""
     if not spec.is_grouped:
         return (make((window, spec.padded), ring_dtype),
                 make((spec.padded,), jnp.float32))
     gt = spec.group_table()
     return (tuple(make((window, g.padded), ring_dtype) for g in gt),
             tuple(make((g.padded,), jnp.float32) for g in gt))
+
+
+def window_aux_buffers(spec: PackSpec, window: int, ring_dtype,
+                       make=jnp.zeros):
+    """The compressed ring's companion buffers ``(scales, comp)``, shaped
+    like :func:`window_buffers` shapes ring/total (per-group tuples for
+    grouped layouts):
+
+    - ``scales``: per-block f32 fp8 scales, ``(I, padded // align)`` —
+      ``None`` unless the ring dtype is fp8. Initialized to ONES (the
+      scale of an all-zero block), matching a zeroed ring.
+    - ``comp``: the Kahan compensation of the f32 running total,
+      ``(padded,)`` f32 zeros — ``None`` for an f32 ring (the default
+      path stays bit-identical with no extra state).
+    """
+    from repro.common.quant import is_compressed, needs_scales
+    if not is_compressed(ring_dtype):
+        return None, None
+
+    def ones(shape, dtype):
+        if make is jnp.zeros:
+            return jnp.ones(shape, dtype)
+        return make(shape, dtype)
+
+    gt = spec.group_table()
+    if not spec.is_grouped:
+        scales = ones((window, spec.scale_blocks), jnp.float32) \
+            if needs_scales(ring_dtype) else None
+        return scales, make((spec.padded,), jnp.float32)
+    scales = tuple(ones((window, spec.group_scale_blocks(g)), jnp.float32)
+                   for g in gt) if needs_scales(ring_dtype) else None
+    return scales, tuple(make((g.padded,), jnp.float32) for g in gt)
 
 
 # ------------------------------------------- layout (de)serialization
@@ -581,7 +654,10 @@ def spec_to_json(spec: PackSpec) -> str:
     if spec.groups:
         d["groups"] = [[g.shards, list(g.axes), g.seg_len, g.offset]
                        for g in spec.groups]
-    return json.dumps(d)
+    if spec.ring_dtype != "float32":
+        d["ring_dtype"] = spec.ring_dtype    # omitted == f32: records
+    return json.dumps(d)                     # written pre-compression
+                                             # rehydrate unchanged
 
 
 def spec_from_json(s: str) -> PackSpec:
@@ -607,4 +683,5 @@ def spec_from_json(s: str) -> PackSpec:
     return PackSpec(treedef=None, leaves=tuple(leaves), size=d["size"],
                     padded=d["padded"], align=d["align"],
                     shards=d["shards"], axes=tuple(d["axes"]),
-                    groups=groups)
+                    groups=groups,
+                    ring_dtype=d.get("ring_dtype", "float32"))

@@ -1,0 +1,219 @@
+"""Precision helpers for the compressed WA state & comms path.
+
+The slide-window ring (I, P) dominates WA HBM and the two-level tree's
+cross-pod all-reduce dominates sync bytes; both can drop to bf16 — or
+fp8-e4m3 with per-block scales — while the running total stays f32 with
+compensated (Kahan) summation. This module owns the three ingredients:
+
+- **dtype tokens** (``f32`` / ``bf16`` / ``fp8``): the CLI- and
+  SyncPlan-level names, mapped to jnp dtypes and HLO tokens;
+- **block-scaled fp8 (de)quantization**: one f32 scale per ``ALIGN``
+  (= 8·1024) element block of a packed buffer. A block is exactly one
+  (8, 1024) kernel tile and every segment/group range of a
+  :class:`~repro.common.packing.PackSpec` is an ``ALIGN`` multiple, so
+  scales line up 1:1 with both the Pallas grid and the shard-aware
+  layout (the "per-segment scale" metadata a PackSpec carries);
+- **error-budget helpers**: Kahan compensated add for the f32 running
+  total, and ULP distance in a chosen dtype's integer ladder — the
+  measure the bounded-ULP parity harness and ``benchmarks/thresholds.json``
+  budgets are stated in.
+
+Everything here is elementwise/local: no collectives, no mesh.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.packing import ALIGN
+
+#: elements covered by one fp8 scale — one packed ALIGN block == one
+#: (8, 1024) kernel tile (asserted against kernels.wa_update in
+#: kernels.ops)
+SCALE_BLOCK = ALIGN
+
+#: largest finite float8_e4m3fn value (no inf in e4m3fn)
+FP8_MAX = 448.0
+
+#: CLI/SyncPlan token -> storage dtype
+WA_DTYPES = {
+    "f32": jnp.float32,
+    "bf16": jnp.bfloat16,
+    "fp8": jnp.float8_e4m3fn,
+}
+
+#: token -> dtype-discipline (HLO) token, as repro.analysis.hlo_text
+#: emits them
+HLO_TOKENS = {"f32": "f32", "bf16": "bf16", "fp8": "f8e4m3fn"}
+
+
+def wa_dtype(token):
+    """The jnp storage dtype of a precision token (dtypes pass through)."""
+    if isinstance(token, str) and token in WA_DTYPES:
+        return WA_DTYPES[token]
+    return jnp.dtype(token)
+
+
+def wa_token(dtype) -> str:
+    """The precision token of a storage dtype (tokens pass through)."""
+    if isinstance(dtype, str) and dtype in WA_DTYPES:
+        return dtype
+    name = np.dtype(dtype).name
+    for tok, dt in WA_DTYPES.items():
+        if np.dtype(dt).name == name:
+            return tok
+    raise ValueError(f"no WA precision token for dtype {name!r} "
+                     f"(expected one of {sorted(WA_DTYPES)})")
+
+
+def is_compressed(token) -> bool:
+    return wa_token(token) != "f32"
+
+
+def needs_scales(token) -> bool:
+    """fp8 needs per-block scales; f32/bf16 share f32's exponent range."""
+    return wa_token(token) == "fp8"
+
+
+def n_scale_blocks(padded: int, block: int = SCALE_BLOCK) -> int:
+    if padded % block != 0:
+        raise ValueError(f"padded length {padded} is not a multiple of "
+                         f"the scale block ({block})")
+    return padded // block
+
+
+# ------------------------------------------------ block-scaled fp8 codec
+
+
+def block_scales(x, block: int = SCALE_BLOCK):
+    """Per-block f32 scales of ``x`` (..., P): amax/FP8_MAX, 1.0 for
+    all-zero blocks (so dequantize(quantize(0)) == 0 without dividing
+    by zero)."""
+    bx = jnp.reshape(x, x.shape[:-1] + (-1, block))
+    amax = jnp.max(jnp.abs(bx), axis=-1)
+    return jnp.where(amax > 0, amax / FP8_MAX, 1.0).astype(jnp.float32)
+
+
+def quantize_fp8(x, scales, block: int = SCALE_BLOCK):
+    """Quantize f32 ``x`` (..., P) to fp8-e4m3 with per-block ``scales``
+    (..., P/block). Values are clipped to ±FP8_MAX·scale first — e4m3fn
+    has no inf, an unclipped overflow would round to NaN."""
+    bx = jnp.reshape(x, x.shape[:-1] + (-1, block))
+    bx = bx / scales[..., None].astype(bx.dtype)
+    bx = jnp.clip(bx, -FP8_MAX, FP8_MAX)
+    return jnp.reshape(bx.astype(jnp.float8_e4m3fn), x.shape)
+
+
+def dequantize_fp8(q, scales, block: int = SCALE_BLOCK):
+    """Inverse of :func:`quantize_fp8` up to the e4m3 rounding: fp8
+    payload × its per-block scale, in f32."""
+    bq = jnp.reshape(q.astype(jnp.float32), q.shape[:-1] + (-1, block))
+    return jnp.reshape(bq * scales[..., None], q.shape)
+
+
+def encode_slot(x, token, block: int = SCALE_BLOCK):
+    """(slot, scales) ring representation of an f32 packed buffer:
+    identity for f32, a cast for bf16, block-scaled fp8 (scales
+    non-None) for fp8."""
+    tok = wa_token(token)
+    if tok == "f32":
+        return x.astype(jnp.float32), None
+    if tok == "bf16":
+        return x.astype(jnp.bfloat16), None
+    s = block_scales(x, block)
+    return quantize_fp8(x, s, block), s
+
+
+def decode_slot(slot, scales=None, block: int = SCALE_BLOCK):
+    """f32 value of a ring slot: cast back, or fp8 × scales."""
+    if scales is None:
+        return slot.astype(jnp.float32)
+    return dequantize_fp8(slot, scales, block)
+
+
+# -------------------------------------------------- compensated summation
+
+
+def kahan_add(total, comp, delta):
+    """One compensated (Kahan) accumulation step: ``(total', comp')``
+    with ``total' + comp'`` carrying ``total + delta`` to roughly twice
+    f32 precision. ``comp`` holds the running low-order error; start it
+    at zeros. With ``comp == 0`` the returned total is bit-identical to
+    the plain ``total + delta`` (the f32 default path never diverges)."""
+    y = delta - comp
+    t = total + y
+    return t, (t - total) - y
+
+
+# ------------------------------------------------------------ ULP ladder
+
+_UINTS = {8: jnp.uint8, 16: jnp.uint16, 32: jnp.uint32}
+
+
+def _ulp_key(x):
+    """Monotone unsigned key of a float array: consecutive representable
+    values (of x's dtype) differ by exactly 1, across the sign too
+    (+0 and -0 both map to the same key). Stays in the dtype's own-width
+    unsigned arithmetic — no x64 needed."""
+    bits = jnp.finfo(x.dtype).bits
+    ut = _UINTS[bits]
+    u = jax.lax.bitcast_convert_type(x, ut)
+    sign_bit = np.asarray(1 << (bits - 1), np.dtype(ut))
+    mag = u & (sign_bit - 1)                 # sign-magnitude payload
+    # offset-binary: negatives below sign_bit, positives above; ±0 meet
+    # at sign_bit. Both branches stay inside the unsigned range.
+    return jnp.where(u & sign_bit != 0, sign_bit - mag, sign_bit + mag)
+
+
+def ulp_distance(a, b, dtype=None):
+    """Elementwise distance between ``a`` and ``b`` in units of
+    ``dtype``'s representable-value ladder (steps between the two values
+    after rounding both into ``dtype``). ``dtype=None`` uses the narrower
+    of the two operand dtypes — the natural budget unit when comparing a
+    compressed value against its f32 oracle. NaNs compare astronomically
+    far from everything (including other NaNs); budgets treat that as a
+    failure, which is the point."""
+    a = jnp.asarray(a)
+    b = jnp.asarray(b)
+    if dtype is None:
+        dtype = a.dtype if jnp.finfo(a.dtype).bits <= \
+            jnp.finfo(b.dtype).bits else b.dtype
+    dtype = wa_dtype(dtype)
+    ka = _ulp_key(a.astype(dtype))
+    kb = _ulp_key(b.astype(dtype))
+    d = jnp.maximum(ka, kb) - jnp.minimum(ka, kb)   # exact in unsigned
+    return d.astype(jnp.uint32)
+
+
+def max_ulp(a, b, dtype=None) -> int:
+    """max of :func:`ulp_distance` as a python int (0 for empty)."""
+    d = ulp_distance(a, b, dtype)
+    return int(jnp.max(d)) if d.size else 0
+
+
+def rel_ulp_error(ref, got, dtype, floor=None) -> float:
+    """Worst error in units of ``dtype`` ULPs AT THE REFERENCE'S WORKING
+    SCALE: ``max |got - ref| / (eps(dtype) · max(|ref|, floor))``.
+
+    This is the budget unit of the bounded-ULP parity harness. The raw
+    ladder distance (:func:`ulp_distance`) is the right metric for codec
+    round-trips (value and its quantization share a magnitude), but means
+    and totals CANCEL: a window average can land near zero where the
+    ladder is dense, while its absolute error is set by the magnitudes of
+    the slots that were averaged — a ~1-ULP-of-the-data error reads as
+    thousands of near-zero ULPs. ``floor`` (default: the RMS of ``ref``)
+    pins the scale to the data. A value ≤ k means: within k quantization
+    steps of the compressed dtype at the buffer's own scale.
+    """
+    ref = jnp.asarray(ref, jnp.float32)
+    got = jnp.asarray(got, jnp.float32)
+    if ref.size == 0:
+        return 0.0
+    if floor is None:
+        floor = jnp.sqrt(jnp.mean(jnp.square(ref)))
+    floor = jnp.maximum(jnp.asarray(floor, jnp.float32),
+                        jnp.float32(np.finfo(np.float32).tiny))
+    eps = jnp.float32(jnp.finfo(wa_dtype(dtype)).eps)
+    scale = jnp.maximum(jnp.abs(ref), floor)
+    return float(jnp.max(jnp.abs(got - ref) / (eps * scale)))

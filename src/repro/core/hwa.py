@@ -76,14 +76,20 @@ jax.tree_util.register_dataclass(
     meta_fields=[])
 
 
-def hwa_init(cfg: HWAConfig, params: PyTree, optimizer: Optimizer) -> HWAState:
+def hwa_init(cfg: HWAConfig, params: PyTree, optimizer: Optimizer,
+             ring_dtype=jnp.float32) -> HWAState:
     """All replicas start from the same initialization (Algorithm 1 line 1
-    with a shared init; replicas diverge through data order)."""
+    with a shared init; replicas diverge through data order).
+
+    ``ring_dtype`` (dtype or ``f32``/``bf16``/``fp8`` token) selects the
+    compressed slide-window state (``core.offline.window_init``); the f32
+    default is bit-identical to the pre-compression path."""
     inner = broadcast_to_replicas(params, cfg.n_replicas)
     inner_opt = jax.vmap(optimizer.init)(inner)
     return HWAState(
         inner=inner, inner_opt=inner_opt,
-        window_state=window_init(params, cfg.window, cfg.window_kind),
+        window_state=window_init(params, cfg.window, cfg.window_kind,
+                                 ring_dtype=ring_dtype),
         wa=params, cycle=jnp.zeros((), jnp.int32),
         step=jnp.zeros((), jnp.int32))
 
@@ -190,6 +196,36 @@ def _sync_fused(cfg: HWAConfig, state: HWAState
     return outer, new_ws, wa, state.cycle + 1
 
 
+def _sync_fused_c(cfg: HWAConfig, state: HWAState
+                  ) -> tuple[PyTree, WindowState, PyTree, jax.Array]:
+    """Compressed-ring (bf16) sibling of :func:`_sync_fused`: one fused
+    launch with the K-mean, narrow slot write and Kahan-compensated f32
+    total (``kernels.ops.hwa_sync_packed_c``). The restart W̄ is the
+    DECODED just-written slot — every replica restarts from the same
+    bf16-rounded mean, so the ring slot and the live replicas agree
+    bitwise."""
+    from repro.common.packing import pack_stacked, unpack
+    from repro.kernels import ops as kops
+
+    ws = state.window_state
+    I = ws.window
+    stacked = pack_stacked(state.inner, ws.spec)
+    idx = ws.next_idx
+    full_flag = (ws.count >= I).astype(jnp.float32)
+    new_count = jnp.minimum(ws.count + 1, I)
+    inv_count = 1.0 / new_count.astype(jnp.float32)
+    comp = ws.comp if ws.comp is not None else jnp.zeros_like(ws.total)
+    ring, total, comp, avg = kops.hwa_sync_packed_c(
+        stacked, ws.ring, ws.total, comp, idx, full_flag, inv_count)
+    new_ws = WindowState(ring=ring, total=total, count=new_count,
+                         next_idx=jnp.mod(idx + 1, I), window=I,
+                         kind=ws.kind, spec=ws.spec, comp=comp,
+                         scales=ws.scales)
+    outer = unpack(ring[idx], ws.spec)        # decoded slot IS W̄_e
+    wa = unpack(avg, ws.spec)
+    return outer, new_ws, wa, state.cycle + 1
+
+
 def hwa_sync(cfg: HWAConfig, state: HWAState) -> tuple[HWAState, PyTree]:
     """End-of-cycle sync (Algorithm 1 lines 8-12 + Algorithm 2).
 
@@ -223,6 +259,9 @@ def hwa_sync(cfg: HWAConfig, state: HWAState) -> tuple[HWAState, PyTree]:
     elif (cfg.use_kernels and ws.kind == "ring" and cfg.window_stride == 1
             and ws.ring is not None and ws.ring.dtype == jnp.float32):
         outer, window_state, wa, cycle = _sync_fused(cfg, state)
+    elif (cfg.use_kernels and ws.kind == "ring" and cfg.window_stride == 1
+            and ws.ring is not None and ws.ring.dtype == jnp.bfloat16):
+        outer, window_state, wa, cycle = _sync_fused_c(cfg, state)
     elif cfg.use_kernels and jax.tree.leaves(state.inner):
         # two packed launches (mean, window push) with no intermediate
         # unpack/re-pack round-trip of the full parameter set

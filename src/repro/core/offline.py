@@ -44,31 +44,52 @@ PyTree = Any
 
 @dataclasses.dataclass
 class WindowState:
-    ring: jax.Array | None   # (I, P) packed outer weights (ring mode)
+    ring: jax.Array | None   # (I, P) packed outer weights (ring mode),
+                             # stored in spec.ring_dtype (f32 default)
     total: jax.Array         # (P,) f32 running sum (ring) / mean (streaming)
     count: jax.Array         # filled slots (≤ I)
     next_idx: jax.Array      # ring write cursor
     window: int
     kind: str = "ring"       # ring | streaming
     spec: PackSpec | None = None   # static packed layout of the param tree
+    comp: jax.Array | None = None    # (P,) f32 Kahan compensation of the
+                                     # total (compressed rings only)
+    scales: jax.Array | None = None  # (I, P // align) f32 per-block fp8
+                                     # scales (fp8 rings only)
 
 
 jax.tree_util.register_dataclass(
-    WindowState, data_fields=["ring", "total", "count", "next_idx"],
+    WindowState,
+    data_fields=["ring", "total", "count", "next_idx", "comp", "scales"],
     meta_fields=["window", "kind", "spec"])
 
 
 def window_init(params_like: PyTree, window: int, kind: str = "ring",
                 ring_dtype=jnp.float32) -> WindowState:
-    """Pack once; every later update runs on the packed buffers in place."""
+    """Pack once; every later update runs on the packed buffers in place.
+
+    ``ring_dtype`` (dtype or ``f32``/``bf16``/``fp8`` token) selects the
+    compressed WA state: the ring is stored narrow, the f32 total gains a
+    Kahan compensation buffer, and an fp8 ring gets per-block scales
+    (``common.quant``). The f32 default allocates neither — its state and
+    arithmetic are bit-identical to the pre-compression path.
+    """
+    from repro.common.quant import is_compressed, needs_scales, wa_dtype
+    ring_dtype = wa_dtype(ring_dtype)
     spec = pack_spec(params_like)
-    ring = None
+    ring = comp = scales = None
     if kind == "ring":
         ring = jnp.zeros((window, spec.padded), ring_dtype)
+        if is_compressed(ring_dtype):
+            spec = spec.with_ring_dtype(ring_dtype)
+            comp = jnp.zeros((spec.padded,), jnp.float32)
+            if needs_scales(ring_dtype):
+                scales = jnp.ones((window, spec.scale_blocks), jnp.float32)
     return WindowState(ring=ring, total=jnp.zeros((spec.padded,), jnp.float32),
                        count=jnp.zeros((), jnp.int32),
                        next_idx=jnp.zeros((), jnp.int32),
-                       window=window, kind=kind, spec=spec)
+                       window=window, kind=kind, spec=spec,
+                       comp=comp, scales=scales)
 
 
 def window_update(state: WindowState, outer: PyTree, *,
@@ -105,18 +126,36 @@ def window_update_packed(state: WindowState, new: jax.Array, *,
     new_count = jnp.minimum(state.count + 1, I)
     inv_count = 1.0 / new_count.astype(jnp.float32)
 
-    if use_kernel and state.ring.dtype == jnp.float32:
-        from repro.kernels import ops as kops
-        ring, total, avg = kops.wa_window_update_packed(
-            state.ring, state.total, new, idx, full_flag, inv_count)
+    comp, scales = state.comp, state.scales
+    if state.ring.dtype == jnp.float32:
+        # f32 default: the pre-compression path, bit-identical (no comp)
+        if use_kernel:
+            from repro.kernels import ops as kops
+            ring, total, avg = kops.wa_window_update_packed(
+                state.ring, state.total, new, idx, full_flag, inv_count)
+        else:
+            from repro.kernels.ref import wa_window_update_ref
+            ring, total, avg = wa_window_update_ref(
+                state.ring, state.total, new, idx, full_flag, inv_count)
     else:
-        from repro.kernels.ref import wa_window_update_ref
-        ring, total, avg = wa_window_update_ref(
-            state.ring, state.total, new, idx, full_flag, inv_count)
+        # compressed ring: dequantized-value accounting + Kahan total
+        if comp is None:
+            comp = jnp.zeros_like(state.total)
+        if use_kernel and state.ring.dtype == jnp.bfloat16:
+            from repro.kernels import ops as kops
+            ring, total, comp, avg = kops.wa_window_update_packed_c(
+                state.ring, state.total, comp, new, idx, full_flag,
+                inv_count)
+        else:
+            from repro.kernels.ref import wa_window_update_c_ref
+            ring, scales, total, comp, avg = wa_window_update_c_ref(
+                state.ring, scales, state.total, comp, new, idx,
+                full_flag, inv_count)
 
     new_state = WindowState(ring=ring, total=total, count=new_count,
                             next_idx=jnp.mod(idx + 1, I), window=I,
-                            kind=state.kind, spec=state.spec)
+                            kind=state.kind, spec=state.spec,
+                            comp=comp, scales=scales)
     return new_state, avg
 
 

@@ -24,11 +24,20 @@ import numpy as np
 from repro.common.packing import ALIGN
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.wa_update import (TILE_COLS, TILE_ROWS, online_mean_2d,
-                                     wa_sync_fused_2d, wa_window_update_2d)
+                                     wa_sync_fused_2d, wa_sync_fused_c_2d,
+                                     wa_window_update_2d,
+                                     wa_window_update_c_2d)
 
 # A packed buffer reshapes to (P // TILE_COLS, TILE_COLS) with the row
 # count a TILE_ROWS multiple — the kernels' exact tiling, no padding.
 assert ALIGN == TILE_ROWS * TILE_COLS, (ALIGN, TILE_ROWS, TILE_COLS)
+
+#: ring dtypes the fused kernels handle in-kernel: f32 on the original
+#: kernels, bf16 on the ``*_c`` (compressed, Kahan-total) variants. fp8
+#: rings need per-block scale state and run the jnp path instead
+#: (``launch.sync.packed`` / ``core.offline`` gate on this set, and
+#: ``packed_sync_launch_budget`` mirrors it).
+KERNEL_RING_DTYPES = (jnp.dtype(jnp.float32), jnp.dtype(jnp.bfloat16))
 
 
 def _interpret() -> bool:
@@ -86,6 +95,37 @@ def hwa_sync_packed(stacked, ring, total, idx, full_flag, inv_count):
         jnp.asarray(idx, jnp.int32), jnp.asarray(full_flag, jnp.float32),
         jnp.asarray(inv_count, jnp.float32), interpret=_interpret())
     return (ring_o.reshape(I, Pn), total_o.reshape(Pn), avg.reshape(Pn))
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2))
+def wa_window_update_packed_c(ring, total, comp, new, idx, full_flag,
+                              inv_count):
+    """Compressed-ring sibling of :func:`wa_window_update_packed`:
+    ring (I, P) bf16, total/comp (P,) f32 (Kahan pair). One launch;
+    ring/total/comp donated. Returns (ring', total', comp', avg)."""
+    I, Pn = ring.shape
+    ring_o, total_o, comp_o, avg = wa_window_update_c_2d(
+        _tiles(ring), _tiles(total), _tiles(comp), _tiles(new),
+        jnp.asarray(idx, jnp.int32), jnp.asarray(full_flag, jnp.float32),
+        jnp.asarray(inv_count, jnp.float32), interpret=_interpret())
+    return (ring_o.reshape(I, Pn), total_o.reshape(Pn),
+            comp_o.reshape(Pn), avg.reshape(Pn))
+
+
+@functools.partial(jax.jit, donate_argnums=(1, 2, 3))
+def hwa_sync_packed_c(stacked, ring, total, comp, idx, full_flag,
+                      inv_count):
+    """Compressed-ring sibling of :func:`hwa_sync_packed`: the whole sync
+    in ONE launch with the K-mean, the bf16 slot write and the
+    Kahan-compensated f32 total fused. Returns (ring', total', comp',
+    avg); W̄ for the replica restart is ``ring'[idx].astype(f32)``."""
+    I, Pn = ring.shape
+    ring_o, total_o, comp_o, avg = wa_sync_fused_c_2d(
+        _tiles(stacked), _tiles(ring), _tiles(total), _tiles(comp),
+        jnp.asarray(idx, jnp.int32), jnp.asarray(full_flag, jnp.float32),
+        jnp.asarray(inv_count, jnp.float32), interpret=_interpret())
+    return (ring_o.reshape(I, Pn), total_o.reshape(Pn),
+            comp_o.reshape(Pn), avg.reshape(Pn))
 
 
 def _pad_flat(x, tile=TILE_ROWS * TILE_COLS):

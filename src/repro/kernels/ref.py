@@ -37,6 +37,44 @@ def wa_sync_fused_ref(stacked, ring, total, idx, full_flag, inv_count):
     return wa_window_update_ref(ring, total, mean, idx, full_flag, inv_count)
 
 
+def wa_window_update_c_ref(ring, scales, total, comp, new, idx, full_flag,
+                           inv_count):
+    """Compressed-ring window update oracle: ring stored bf16 (``scales``
+    None) or block-scaled fp8 (``scales``: (I, blocks) f32), running total
+    f32 with Kahan compensation ``comp``.
+
+    Unlike :func:`wa_window_update_ref`, the total accumulates the
+    DEQUANTIZED value the slot will actually hold, so evicting the slot I
+    cycles later removes exactly what was added — the total is always the
+    (compensated-f32) sum of the ring's decoded contents, and the only
+    error vs the f32 oracle is the per-slot quantization itself.
+
+    Returns (ring', scales', total', comp', avg).
+    """
+    from repro.common.quant import decode_slot, encode_slot, kahan_add
+    newf = new.astype(jnp.float32)
+    slot, s_new = encode_slot(newf, ring.dtype)
+    stored = decode_slot(slot, s_new)
+    old = decode_slot(ring[idx], None if scales is None else scales[idx])
+    total2, comp2 = kahan_add(total, comp, stored - old * full_flag)
+    ring2 = jax.lax.dynamic_update_index_in_dim(ring, slot, idx, 0)
+    scales2 = None if scales is None else \
+        jax.lax.dynamic_update_index_in_dim(scales, s_new, idx, 0)
+    return ring2, scales2, total2, comp2, total2 * inv_count
+
+
+def wa_sync_fused_c_ref(stacked, ring, scales, total, comp, idx, full_flag,
+                        inv_count):
+    """Fused sync oracle over a compressed ring (mean as sum × 1/K, like
+    :func:`wa_sync_fused_ref`). Returns (ring', scales', total', comp',
+    avg); W̄ is the DECODED ring'[idx] (the mean itself, pre-quantization,
+    is ``decode`` of what the caller reads back)."""
+    K = stacked.shape[0]
+    mean = jnp.sum(stacked.astype(jnp.float32), axis=0) * (1.0 / K)
+    return wa_window_update_c_ref(ring, scales, total, comp, mean, idx,
+                                  full_flag, inv_count)
+
+
 def attention_ref(q, k, v, *, causal=True, window=None, logit_softcap=0.0,
                   sm_scale=None):
     """Naive GQA attention. q: (B,S,Hq,D); k/v: (B,T,Hkv,D)."""

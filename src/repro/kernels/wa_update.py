@@ -170,6 +170,105 @@ def wa_sync_fused_2d(stacked, ring, total, idx, full_flag, inv_count,
     return ring_out, total_out, avg
 
 
+def _wa_window_update_c_kernel(scalars_ref, ring_ref, total_ref, comp_ref,
+                               new_ref, ring_out_ref, total_out_ref,
+                               comp_out_ref, avg_ref):
+    """Compressed-ring tile: ring stored in a narrow dtype (bf16), total
+    f32 with Kahan compensation. The down/up-casts ride the same single
+    pass — every byte is already in VMEM."""
+    full, inv_count = _unpack_scalars(scalars_ref)
+    old = ring_ref[0].astype(jnp.float32)
+    slot = new_ref[...].astype(ring_out_ref.dtype)
+    stored = slot.astype(jnp.float32)
+    total0 = total_ref[...]
+    y = (stored - full * old) - comp_ref[...]
+    total = total0 + y
+    ring_out_ref[0] = slot
+    total_out_ref[...] = total
+    comp_out_ref[...] = (total - total0) - y
+    avg_ref[...] = total * inv_count
+
+
+def wa_window_update_c_2d(ring, total, comp, new, idx, full_flag, inv_count,
+                          *, interpret: bool = True):
+    """Compressed-ring fused window update. ring: (I, R, C) bf16;
+    total/comp/new: (R, C) f32. Returns (ring', total', comp', avg);
+    ring/total/comp are donated (aliased in place). Matches
+    ``ref.wa_window_update_c_ref`` bitwise (scales=None)."""
+    I, R, C = ring.shape
+    assert total.shape == (R, C) and comp.shape == (R, C) \
+        and new.shape == (R, C)
+    assert R % TILE_ROWS == 0 and C % TILE_COLS == 0, (R, C)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(R // TILE_ROWS, C // TILE_COLS),
+        in_specs=[_RING_SPEC, _FLAT_SPEC, _FLAT_SPEC, _FLAT_SPEC],
+        out_specs=[_RING_SPEC, _FLAT_SPEC, _FLAT_SPEC, _FLAT_SPEC],
+    )
+    ring_out, total_out, comp_out, avg = pl.pallas_call(
+        _wa_window_update_c_kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct(ring.shape, ring.dtype),
+                   jax.ShapeDtypeStruct(total.shape, jnp.float32),
+                   jax.ShapeDtypeStruct(comp.shape, jnp.float32),
+                   jax.ShapeDtypeStruct(total.shape, jnp.float32)],
+        # ring->ring_out, total->total_out, comp->comp_out
+        input_output_aliases={1: 0, 2: 1, 3: 2},
+        interpret=interpret,
+    )(_pack_scalars(idx, full_flag, inv_count), ring, total, comp, new)
+    return ring_out, total_out, comp_out, avg
+
+
+def _wa_sync_fused_c_kernel(scalars_ref, stacked_ref, ring_ref, total_ref,
+                            comp_ref, ring_out_ref, total_out_ref,
+                            comp_out_ref, avg_ref, *, inv_k: float):
+    """Fused sync tile over a compressed ring: K-mean, narrow-dtype slot
+    write, Kahan-compensated f32 total — one pass."""
+    full, inv_count = _unpack_scalars(scalars_ref)
+    mean = jnp.sum(stacked_ref[...].astype(jnp.float32), axis=0) * inv_k
+    old = ring_ref[0].astype(jnp.float32)
+    slot = mean.astype(ring_out_ref.dtype)
+    stored = slot.astype(jnp.float32)
+    total0 = total_ref[...]
+    y = (stored - full * old) - comp_ref[...]
+    total = total0 + y
+    ring_out_ref[0] = slot
+    total_out_ref[...] = total
+    comp_out_ref[...] = (total - total0) - y
+    avg_ref[...] = total * inv_count
+
+
+def wa_sync_fused_c_2d(stacked, ring, total, comp, idx, full_flag,
+                       inv_count, *, interpret: bool = True):
+    """Whole compressed-ring HWA sync, one launch. stacked: (K, R, C)
+    f32; ring: (I, R, C) bf16; total/comp: (R, C) f32. Returns (ring',
+    total', comp', avg); W̄ is the caller's ``decode(ring'[idx])``."""
+    K, R, C = stacked.shape
+    assert ring.shape[1:] == (R, C) and total.shape == (R, C) \
+        and comp.shape == (R, C)
+    assert R % TILE_ROWS == 0 and C % TILE_COLS == 0, (R, C)
+    stacked_spec = pl.BlockSpec((K, TILE_ROWS, TILE_COLS),
+                                lambda i, j, s: (0, i, j))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(R // TILE_ROWS, C // TILE_COLS),
+        in_specs=[stacked_spec, _RING_SPEC, _FLAT_SPEC, _FLAT_SPEC],
+        out_specs=[_RING_SPEC, _FLAT_SPEC, _FLAT_SPEC, _FLAT_SPEC],
+    )
+    ring_out, total_out, comp_out, avg = pl.pallas_call(
+        functools.partial(_wa_sync_fused_c_kernel, inv_k=1.0 / K),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct(ring.shape, ring.dtype),
+                   jax.ShapeDtypeStruct(total.shape, jnp.float32),
+                   jax.ShapeDtypeStruct(comp.shape, jnp.float32),
+                   jax.ShapeDtypeStruct(total.shape, jnp.float32)],
+        # ring->ring_out, total->total_out, comp->comp_out
+        input_output_aliases={2: 0, 3: 1, 4: 2},
+        interpret=interpret,
+    )(_pack_scalars(idx, full_flag, inv_count), stacked, ring, total, comp)
+    return ring_out, total_out, comp_out, avg
+
+
 def _online_mean_kernel(x_ref, o_ref, *, inv_k: float):
     # x_ref: (K, TILE_ROWS, TILE_COLS) — reduce the replica axis in VMEM.
     o_ref[...] = jnp.sum(x_ref[...].astype(jnp.float32), axis=0) * inv_k

@@ -35,6 +35,10 @@ from repro.launch.sync.bundles import (StepBundle, _expand0, _mk_optimizer,
                                        opt_state_dims)
 # Sync topologies (new in PR 4).
 from repro.launch.sync.topology import Flat, SyncTopology, TwoLevel
+# Declarative bundle construction (PR 10) — the ONE public constructor;
+# the make_*hwa*_step names above are deprecated wrappers around it.
+from repro.launch.sync.plan import (HWABundles, SyncPlan, build_hwa_bundles,
+                                    window_state_args)
 # Mesh-resident packed machinery (private names kept importable — the
 # ROADMAP/ARCHITECTURE docs and downstream experiments reference them).
 from repro.launch.sync.packed import (_axes_entry, _grouped_resident_layout,
@@ -58,8 +62,10 @@ from repro.sharding.rules import (ShardingRules, make_tp_rules,
 _warn_legacy_assembly = check_legacy_assembly
 
 __all__ = [
-    "Flat", "HWAConfig", "ShardingRules", "StepBundle", "SyncTopology",
-    "TwoLevel", "check_legacy_assembly", "hwa_inner_step",
+    "Flat", "HWABundles", "HWAConfig", "ShardingRules", "StepBundle",
+    "SyncPlan", "SyncTopology", "TwoLevel", "build_hwa_bundles",
+    "window_state_args",
+    "check_legacy_assembly", "hwa_inner_step",
     "hwa_local_inner_step", "hwa_sync", "make_decode_step",
     "make_hwa_sync_step", "make_hwa_train_step",
     "make_legacy_mesh_sync_step", "make_legacy_sync_step",

@@ -9,6 +9,10 @@
   errored on multi-device CPU meshes where XLA 0.4.37 miscompiles it.
 - ``bundles`` — the StepBundle builders (train / prefill / decode / HWA
   / mesh-native HWA / two-level inner sync).
+- ``plan``    — the declarative surface (PR 10): ``SyncPlan`` names the
+  topology × precision × resilience × kernel combination and
+  ``build_hwa_bundles`` assembles the matching ``HWABundles``. The five
+  historical ``make_*hwa*_step`` names survive as deprecated wrappers.
 
 ``repro.launch.steps`` re-exports everything below, so existing imports
 keep working.
@@ -24,13 +28,16 @@ from repro.launch.sync.bundles import (StepBundle, make_decode_step,
 from repro.launch.sync.legacy import (check_legacy_assembly,
                                       make_legacy_mesh_sync_step,
                                       make_legacy_sync_step)
+from repro.launch.sync.plan import (HWABundles, SyncPlan, build_hwa_bundles,
+                                    window_state_args)
 from repro.launch.sync.topology import Flat, SyncTopology, TwoLevel
 
 __all__ = [
-    "Flat", "StepBundle", "SyncTopology", "TwoLevel",
-    "check_legacy_assembly", "make_decode_step", "make_hwa_sync_step",
-    "make_hwa_train_step", "make_legacy_mesh_sync_step",
-    "make_legacy_sync_step", "make_mesh_hwa_inner_sync_step",
-    "make_mesh_hwa_sync_step", "make_mesh_hwa_train_step",
-    "make_prefill_step", "make_train_step", "opt_state_dims",
+    "Flat", "HWABundles", "StepBundle", "SyncPlan", "SyncTopology",
+    "TwoLevel", "build_hwa_bundles", "check_legacy_assembly",
+    "make_decode_step", "make_hwa_sync_step", "make_hwa_train_step",
+    "make_legacy_mesh_sync_step", "make_legacy_sync_step",
+    "make_mesh_hwa_inner_sync_step", "make_mesh_hwa_sync_step",
+    "make_mesh_hwa_train_step", "make_prefill_step", "make_train_step",
+    "opt_state_dims", "window_state_args",
 ]

@@ -15,6 +15,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import warnings
 from typing import Any
 
 import jax
@@ -207,11 +208,11 @@ def make_decode_step(lm: LM, rules: ShardingRules, token_specs, token_dims,
 # ------------------------------------------------------------- HWA steps
 
 
-def make_hwa_train_step(lm: LM, rules: ShardingRules, batch_specs, batch_dims,
-                        hwa_cfg: HWAConfig, optimizer: str = "adamw",
-                        lr: float = 3e-4,
-                        opt_rules: ShardingRules | None = None,
-                        n_microbatches: int = 1) -> StepBundle:
+def _make_hwa_train_step(lm: LM, rules: ShardingRules, batch_specs,
+                         batch_dims, hwa_cfg: HWAConfig,
+                         optimizer: str = "adamw", lr: float = 3e-4,
+                         opt_rules: ShardingRules | None = None,
+                         n_microbatches: int = 1) -> StepBundle:
     """Inner HWA step: K independent replicas, stacked on the replica axis.
 
     Gradient all-reduce stays *inside* each replica's data shard; nothing
@@ -326,19 +327,48 @@ def _check_outer_every(hwa_cfg: HWAConfig, topology: SyncTopology) -> None:
             "topology for the H·H₂ hierarchy, or leave outer_every at 1")
 
 
-def _window_abs(spec, window: int, ring_dtype):
-    """Abstract (ring, total) args for a sync bundle's window state —
-    ``packing.window_buffers``' shape contract with ShapeDtypeStructs in
-    place of arrays (one source of truth for the grouped/single-range
-    buffer shapes)."""
-    from repro.common.packing import window_buffers
-    return window_buffers(spec, window, ring_dtype,
-                          make=jax.ShapeDtypeStruct)
+def _window_io(mesh: Mesh, spec, window: int, ring_dtype):
+    """Ordered window-state slots of a sync bundle's argument list:
+    ``(name, abstract, pspec, sharding)`` rows for ``ring``, the fp8
+    ring's per-block ``scales`` (right after the ring it describes),
+    ``total``, and the compressed ring's Kahan ``comp`` (right after the
+    total it compensates). The f32 default contributes exactly the
+    historical ``(ring, total)`` pair — THE one place the compressed
+    argument ordering lives (``plan.window_state_args`` allocates real
+    buffers in the same order)."""
+    from repro.common.packing import window_aux_buffers, window_buffers
+    ring_abs, total_abs = window_buffers(spec, window, ring_dtype,
+                                         make=jax.ShapeDtypeStruct)
+    scales_abs, comp_abs = window_aux_buffers(spec, window, ring_dtype,
+                                              make=jax.ShapeDtypeStruct)
+    rows = [("ring", ring_abs, _packed_pspecs(spec, 1),
+             _packed_shardings(mesh, spec, lead_dims=1))]
+    if scales_abs is not None:
+        # (I, padded // align) shards over the same super-axis as the
+        # ring: segment lengths are ALIGN multiples, so the per-shard
+        # block counts divide exactly
+        rows.append(("scales", scales_abs, _packed_pspecs(spec, 1),
+                     _packed_shardings(mesh, spec, lead_dims=1)))
+    rows.append(("total", total_abs, _packed_pspecs(spec),
+                 _packed_shardings(mesh, spec)))
+    if comp_abs is not None:
+        rows.append(("comp", comp_abs, _packed_pspecs(spec),
+                     _packed_shardings(mesh, spec)))
+    return rows
 
 
-def make_hwa_sync_step(lm: LM, rules: ShardingRules, hwa_cfg: HWAConfig,
-                       ring_dtype=jnp.float32,
-                       mesh_resident: bool | None = None) -> StepBundle:
+def _precision_tokens(tok: str) -> tuple[str, ...]:
+    """Allowed HLO dtype tokens for a precision token: what a bundle's
+    floating args may be (ring storage) or its collective payloads may
+    carry (comms) — always f32 plus the compressed dtype, if any."""
+    from repro.common.quant import HLO_TOKENS
+    extra = HLO_TOKENS[tok]
+    return ("f32",) if extra == "f32" else ("f32", extra)
+
+
+def _make_hwa_sync_step(lm: LM, rules: ShardingRules, hwa_cfg: HWAConfig,
+                        ring_dtype=jnp.float32,
+                        mesh_resident: bool | None = None) -> StepBundle:
     """Synchronization + window update: the once-per-H-steps collective.
 
     outer = mean over the replica axis (one all-reduce across pods);
@@ -400,13 +430,20 @@ def make_hwa_sync_step(lm: LM, rules: ShardingRules, hwa_cfg: HWAConfig,
     qualifies); None picks automatically.
 
     Variants (EXPERIMENTS.md §Perf pair 3): exact f32 ring (paper),
-    bf16 ring (2× window memory saving), or hwa_cfg.window_kind ==
-    "streaming" (O(1) extra copies, windowed-running-mean approximation;
-    always the jnp path — it is a two-pass rescale, not ring-shaped).
+    compressed bf16/fp8 rings (``ring_dtype`` token or dtype — 2×/~4×
+    window-HBM saving, Kahan-compensated f32 total, fp8 with per-block
+    scales; the extra ``scales``/``comp`` args slot in as
+    ``(inner, ring, [scales], total, [comp], count, next_idx)``), or
+    hwa_cfg.window_kind == "streaming" (O(1) extra copies,
+    windowed-running-mean approximation; always the jnp path — it is a
+    two-pass rescale, not ring-shaped).
     """
+    from repro.common.quant import is_compressed, wa_dtype, wa_token
     K = hwa_cfg.n_replicas
     I = hwa_cfg.window
     mesh = rules.mesh
+    ring_dtype = wa_dtype(ring_dtype)
+    tok = wa_token(ring_dtype)
     # this stacked/vmap path is flat-only; refuse a silently-ignored H₂
     _check_outer_every(hwa_cfg, Flat())
     streaming = hwa_cfg.window_kind == "streaming"
@@ -434,7 +471,12 @@ def make_hwa_sync_step(lm: LM, rules: ShardingRules, hwa_cfg: HWAConfig,
 
     if mesh_resident:
         resilient = hwa_cfg.resilient
-        ring_abs, total_abs = _window_abs(spec, I, ring_dtype)
+        if is_compressed(tok):
+            spec = spec.with_ring_dtype(ring_dtype)
+        io = _window_io(mesh, spec, I, ring_dtype)
+        names = [n for n, _, _, _ in io]
+        has_scales = "scales" in names
+        has_comp = "comp" in names
         stacked_pspecs = rules.tree_specs(stacked_abs, stacked_dims)
         # health stats are replicated over every non-replica axis the
         # params are NOT sharded over; psum over the sharded ones and let
@@ -448,39 +490,46 @@ def make_hwa_sync_step(lm: LM, rules: ShardingRules, hwa_cfg: HWAConfig,
                                  health_axes=health_axes if resilient else (),
                                  health_scale=health_scale)
 
-        if resilient:
-            def local_step(inner, ring, total, count, next_idx):
-                r = body(inner, ring, total, count, next_idx,
-                         jnp.zeros((), jnp.int32))
-                return (*r[:6], r[7])
-        else:
-            def local_step(inner, ring, total, count, next_idx):
-                return body(inner, ring, total, count, next_idx,
-                            jnp.zeros((), jnp.int32))[:6]
+        def local_step(*args):
+            it = iter(args)
+            inner, ring = next(it), next(it)
+            scales = next(it) if has_scales else None
+            total = next(it)
+            comp = next(it) if has_comp else None
+            count, next_idx = next(it), next(it)
+            r = body(inner, ring, total, count, next_idx,
+                     jnp.zeros((), jnp.int32), scales, comp)
+            out = [r[0], r[1]]
+            if has_scales:
+                out.append(r[2])
+            out.append(r[3])
+            if has_comp:
+                out.append(r[4])
+            out += [r[5], r[6], r[7]]
+            if resilient:
+                out.append(r[9])
+            return tuple(out)
 
         alive_spec = (P(_axes_entry(k_axes)),) if resilient else ()
+        win_pspecs = tuple(p for _, _, p, _ in io)
         step = shard_map(
             local_step, mesh,
-            in_specs=(stacked_pspecs, _packed_pspecs(spec, 1),
-                      _packed_pspecs(spec), P(), P()),
-            out_specs=(stacked_pspecs, _packed_pspecs(spec, 1),
-                       _packed_pspecs(spec), P(), P(), pspec_tree,
+            in_specs=(stacked_pspecs, *win_pspecs, P(), P()),
+            out_specs=(stacked_pspecs, *win_pspecs, P(), P(), pspec_tree,
                        *alive_spec),
             check_rep=False)
         p_sh = rules.tree_shardings(stacked_abs, stacked_dims)
         w_sh = rules.tree_shardings(params_abs, param_dims)
-        r_sh = _packed_shardings(mesh, spec, lead_dims=1)
-        t_sh = _packed_shardings(mesh, spec)
+        win_sh = tuple(s for _, _, _, s in io)
         s_sh = NamedSharding(mesh, P())
         alive_sh = (tuple(NamedSharding(mesh, s) for s in alive_spec)
                     if resilient else ())
-        ring_f32 = ring_dtype == jnp.float32
         k_local = (K // math.prod(mesh.shape[a] for a in k_axes)
                    if k_axes else K)
         budget = packed_sync_launch_budget(
             hwa_cfg, use_kernel=hwa_cfg.use_kernels,
             n_groups=spec.n_groups, k_local=k_local,
-            collective=bool(k_axes), with_stride=False, ring_f32=ring_f32)
+            collective=bool(k_axes), with_stride=False, ring_dtype=tok)
         if resilient:
             # two replica-level all-reduces (k_alive, then the masked
             # weight psum — the inv data dependency keeps XLA from
@@ -490,22 +539,22 @@ def make_hwa_sync_step(lm: LM, rules: ShardingRules, hwa_cfg: HWAConfig,
                 k_axes, launches=budget,
                 n_collectives=2 if k_axes else 0,
                 other_ops={"all-reduce": 1} if health_axes else None,
-                float_args=("f32",) if ring_f32 else ("f32", "bf16"),
+                float_args=_precision_tokens(tok),
                 notes="flat vmap-path sync, mesh-resident, resilient "
                       "(alive-masked mean)")
         else:
             contract = sync_contract(
                 k_axes, launches=budget,
                 n_collectives=1 if k_axes else 0,
-                float_args=("f32",) if ring_f32 else ("f32", "bf16"),
+                float_args=_precision_tokens(tok),
                 notes="flat vmap-path sync, mesh-resident")
         return StepBundle(
             fn=step,
-            abstract_args=(stacked_abs, ring_abs, total_abs, scalar_i,
-                           scalar_i),
-            in_shardings=(p_sh, r_sh, t_sh, s_sh, s_sh),
-            out_shardings=(p_sh, r_sh, t_sh, s_sh, s_sh, w_sh, *alive_sh),
-            donate_argnums=(0, 1, 2), pack_spec=spec,
+            abstract_args=(stacked_abs, *(a for _, a, _, _ in io),
+                           scalar_i, scalar_i),
+            in_shardings=(p_sh, *win_sh, s_sh, s_sh),
+            out_shardings=(p_sh, *win_sh, s_sh, s_sh, w_sh, *alive_sh),
+            donate_argnums=tuple(range(1 + len(io))), pack_spec=spec,
             contract=contract)
 
     if hwa_cfg.resilient:
@@ -539,12 +588,12 @@ def _expand0(tree):
     return jax.tree.map(lambda x: x[None], tree)
 
 
-def make_mesh_hwa_train_step(lm: LM, rules: ShardingRules, batch_specs,
-                             batch_dims, hwa_cfg: HWAConfig,
-                             optimizer: str = "adamw", lr: float = 3e-4,
-                             opt_rules: ShardingRules | None = None,
-                             replica_axis: str | tuple[str, ...] = "replica"
-                             ) -> StepBundle:
+def _make_mesh_hwa_train_step(lm: LM, rules: ShardingRules, batch_specs,
+                              batch_dims, hwa_cfg: HWAConfig,
+                              optimizer: str = "adamw", lr: float = 3e-4,
+                              opt_rules: ShardingRules | None = None,
+                              replica_axis: str | tuple[str, ...] = "replica"
+                              ) -> StepBundle:
     """Mesh-native inner HWA step.
 
     Collective-free over ``replica_axis`` by construction (shard_map keeps
@@ -722,12 +771,13 @@ def _mesh_resident_pack(lm, rules, topology):
             spec)
 
 
-def make_mesh_hwa_sync_step(lm: LM, rules: ShardingRules, hwa_cfg: HWAConfig,
-                            ring_dtype=jnp.float32,
-                            replica_axis: str = "replica",
-                            mesh_resident: bool | None = None,
-                            topology: SyncTopology | None = None
-                            ) -> StepBundle:
+def _make_mesh_hwa_sync_step(lm: LM, rules: ShardingRules,
+                             hwa_cfg: HWAConfig,
+                             ring_dtype=jnp.float32,
+                             replica_axis: str = "replica",
+                             mesh_resident: bool | None = None,
+                             topology: SyncTopology | None = None,
+                             comms_dtype: str = "f32") -> StepBundle:
     """Mesh-native synchronization: the once-per-H-steps collective(s).
 
     **Mesh-resident path (default).** The ENTIRE sync — packed-W̄
@@ -796,15 +846,52 @@ def make_mesh_hwa_sync_step(lm: LM, rules: ShardingRules, hwa_cfg: HWAConfig,
     checkpoints written via ``checkpoint.save_window_state`` record the
     layout and repack bit-exactly on load under a different mesh.
 
-    **Donation invariants.** args 0-2 (stacked inner, ring, total) are
-    donated — thread the returned buffers into the next call; the scalar
-    counters (count, next_idx, cycle) are returned fresh, not donated.
+    **Donation invariants.** every window-state buffer (stacked inner,
+    ring, the fp8 ring's scales, total, the compressed ring's Kahan comp)
+    is donated — thread the returned buffers into the next call; the
+    scalar counters (count, next_idx, cycle) are returned fresh, not
+    donated.
+
+    **Precision.** ``ring_dtype`` compresses the window STORAGE (bf16 or
+    block-scaled fp8 ring; f32 total with Kahan compensation — the
+    ``scales``/``comp`` args slot in as ``(inner, ring, [scales], total,
+    [comp], count, next_idx, cycle)``). ``comms_dtype`` compresses the
+    two-level tree's CROSS-POD hop only: the quantized partial is
+    all-gathered as a same-width integer bit-view (bf16→u16; fp8→u8
+    plus its f32 per-block scales — an fp8 all-reduce would ACCUMULATE
+    in fp8) and reduced locally with an f32 halving-sum; the bit-view
+    keeps XLA's float normalization from widening the wire payload on
+    backends without native narrow-float collectives. The pod-internal
+    psum stays f32 either way, so
+    the inner tree level keeps its 0-ULP halving composition. Requires a
+    TwoLevel topology and is mutually exclusive with ``resilient`` (the
+    alive-masked mean renormalizes by k_alive after the psum — the
+    quantized payload would be scaled before the mask is known). The f32
+    defaults leave both paths bit-identical to the uncompressed bundles.
     """
+    from repro.common.quant import is_compressed, wa_dtype, wa_token
     K = hwa_cfg.n_replicas
     I = hwa_cfg.window
     mesh = rules.mesh
+    ring_dtype = wa_dtype(ring_dtype)
+    tok = wa_token(ring_dtype)
+    comms_tok = wa_token(comms_dtype)
     topology = topology if topology is not None else Flat(replica_axis)
     topology.validate(mesh, K)
+    if comms_tok != "f32":
+        if not isinstance(topology, TwoLevel):
+            raise ValueError(
+                "compressed comms quantize the two-level tree's cross-pod "
+                "hop; a Flat sync has no outer level to compress (its one "
+                "all-reduce IS the mean — quantizing it would quantize "
+                f"the paper's W̄). Got comms_dtype={comms_tok!r} with "
+                f"topology {topology!r}")
+        if hwa_cfg.resilient:
+            raise ValueError(
+                "resilient + compressed comms is unsupported: the "
+                "alive-masked mean renormalizes by k_alive after the "
+                "psum, so the quantized payload would be scaled before "
+                "the mask is known")
     _check_outer_every(hwa_cfg, topology)
     k_axes = _resolved_k_axes(rules, K, topology)
     # Flat keeps the original contract: psum over whatever axes the rules
@@ -832,7 +919,12 @@ def make_mesh_hwa_sync_step(lm: LM, rules: ShardingRules, hwa_cfg: HWAConfig,
     if mesh_resident:
         resilient = hwa_cfg.resilient
         stacked_pspecs = rules.tree_specs(stacked_abs, stacked_dims)
-        ring_abs, total_abs = _window_abs(spec, I, ring_dtype)
+        if is_compressed(tok):
+            spec = spec.with_ring_dtype(ring_dtype)
+        io = _window_io(mesh, spec, I, ring_dtype)
+        names = [n for n, _, _, _ in io]
+        has_scales = "scales" in names
+        has_comp = "comp" in names
         rep_axes = tuple(topology.replica_axes)
         health_axes = tuple(a for a in mesh.axis_names
                             if a not in rep_axes and mesh.shape[a] > 1)
@@ -840,27 +932,41 @@ def make_mesh_hwa_sync_step(lm: LM, rules: ShardingRules, hwa_cfg: HWAConfig,
         body = functools.partial(_local_packed_sync, hwa_cfg,
                                  spec.local_spec(), K, psum_groups,
                                  hwa_cfg.use_kernels, True,
+                                 comms_dtype=comms_tok,
                                  health_axes=health_axes if resilient else (),
                                  health_scale=health_scale)
-        if resilient:
-            local_step = body          # all 8 outputs, alive last
-        else:
-            def local_step(*args):
-                return body(*args)[:7]
+
+        def local_step(*args):
+            it = iter(args)
+            inner, ring = next(it), next(it)
+            scales = next(it) if has_scales else None
+            total = next(it)
+            comp = next(it) if has_comp else None
+            count, next_idx, cycle = next(it), next(it), next(it)
+            r = body(inner, ring, total, count, next_idx, cycle,
+                     scales, comp)
+            out = [r[0], r[1]]
+            if has_scales:
+                out.append(r[2])
+            out.append(r[3])
+            if has_comp:
+                out.append(r[4])
+            out += [r[5], r[6], r[7], r[8]]
+            if resilient:
+                out.append(r[9])
+            return tuple(out)
+
         alive_spec = (P(_axes_entry(k_axes)),) if resilient else ()
+        win_pspecs = tuple(p for _, _, p, _ in io)
         step = shard_map(
             local_step, mesh,
-            in_specs=(stacked_pspecs, _packed_pspecs(spec, 1),
-                      _packed_pspecs(spec), P(), P(), P()),
-            out_specs=(stacked_pspecs, _packed_pspecs(spec, 1),
-                       _packed_pspecs(spec), P(), P(), pspec_tree, P(),
-                       *alive_spec),
+            in_specs=(stacked_pspecs, *win_pspecs, P(), P(), P()),
+            out_specs=(stacked_pspecs, *win_pspecs, P(), P(), pspec_tree,
+                       P(), *alive_spec),
             check_rep=False)
-        r_sh = _packed_shardings(mesh, spec, lead_dims=1)
-        t_sh = _packed_shardings(mesh, spec)
+        win_sh = tuple(s for _, _, _, s in io)
         alive_sh = (tuple(NamedSharding(mesh, s) for s in alive_spec)
                     if resilient else ())
-        ring_f32 = ring_dtype == jnp.float32
         psum_axes = tuple(a for g in psum_groups for a in g)
         k_local = (K // math.prod(mesh.shape[a] for a in psum_axes)
                    if psum_axes else K)
@@ -868,8 +974,18 @@ def make_mesh_hwa_sync_step(lm: LM, rules: ShardingRules, hwa_cfg: HWAConfig,
             hwa_cfg, use_kernel=hwa_cfg.use_kernels,
             n_groups=spec.n_groups, k_local=k_local,
             collective=any(psum_groups), with_stride=True,
-            ring_f32=ring_f32)
-        float_args = ("f32",) if ring_f32 else ("f32", "bf16")
+            ring_dtype=tok)
+        float_args = _precision_tokens(tok)
+        coll_dtypes = _precision_tokens(comms_tok)
+        if comms_tok != "f32":
+            # The compressed cross-pod payload crosses the wire as a
+            # same-width integer bit-view (bf16→u16, e4m3fn→u8): XLA's
+            # float-normalization pass on backends without native
+            # narrow-float collectives (CPU included) would otherwise
+            # widen the payload back (bf16 all-reduce → f32 promotion,
+            # fp8 gather → f16), silently restoring the full wire bytes.
+            coll_dtypes = coll_dtypes + (
+                "u16" if comms_tok == "bf16" else "u8",)
         # Resilient doubles each level's replica collectives: k_alive
         # first, then the masked weight psum (the inv dependency chains
         # them so the AllReduceCombiner cannot merge); the health-stats
@@ -878,15 +994,24 @@ def make_mesh_hwa_sync_step(lm: LM, rules: ShardingRules, hwa_cfg: HWAConfig,
         other = ({"all-reduce": 1} if (resilient and health_axes)
                  else None)
         if isinstance(topology, TwoLevel):
+            # Compressed comms replace the outer all-reduce with
+            # all-gathers + a local f32 halving-sum: one u16 gather for
+            # bf16, a u8 payload + f32 per-block scales pair for fp8.
+            outer_ops = ({"all-gather": 2} if comms_tok == "fp8" else
+                         {"all-gather": 1} if comms_tok == "bf16" else
+                         {"all-reduce": 2 if resilient else 1})
             contract = sync_contract(
                 topology.inner_axis, launches=budget,
                 outer_axis=topology.outer_axis,
                 n_collectives=2 if resilient else 1,
-                outer_collectives=2 if resilient else 1,
+                outer_ops=outer_ops,
                 other_ops=other,
+                collective_dtypes=coll_dtypes,
                 float_args=float_args,
                 notes="two-level outer sync: per-pod psum + cross-pod "
-                      "all-reduce"
+                      + ("fp8 all-gather pair" if comms_tok == "fp8"
+                         else "bf16 (u16 bit-view) all-gather"
+                         if comms_tok == "bf16" else "all-reduce")
                       + (", resilient (alive-masked)" if resilient else ""))
         else:
             contract = sync_contract(
@@ -898,12 +1023,13 @@ def make_mesh_hwa_sync_step(lm: LM, rules: ShardingRules, hwa_cfg: HWAConfig,
                       + (", resilient (alive-masked)" if resilient else ""))
         return StepBundle(
             fn=step,
-            abstract_args=(stacked_abs, ring_abs, total_abs, scalar_i,
-                           scalar_i, scalar_i),
-            in_shardings=(p_sh, r_sh, t_sh, s_sh, s_sh, s_sh),
-            out_shardings=(p_sh, r_sh, t_sh, s_sh, s_sh, w_sh, s_sh,
+            abstract_args=(stacked_abs, *(a for _, a, _, _ in io),
+                           scalar_i, scalar_i, scalar_i),
+            in_shardings=(p_sh, *win_sh, s_sh, s_sh, s_sh),
+            out_shardings=(p_sh, *win_sh, s_sh, s_sh, w_sh, s_sh,
                            *alive_sh),
-            donate_argnums=(0, 1, 2), pack_spec=spec, contract=contract)
+            donate_argnums=tuple(range(1 + len(io))), pack_spec=spec,
+            contract=contract)
 
     # ------- legacy fallback: partial-auto pmean + GSPMD-land window push
     if hwa_cfg.resilient:
@@ -918,9 +1044,9 @@ def make_mesh_hwa_sync_step(lm: LM, rules: ShardingRules, hwa_cfg: HWAConfig,
                                       topology.replica_axes[0])
 
 
-def make_mesh_hwa_inner_sync_step(lm: LM, rules: ShardingRules,
-                                  hwa_cfg: HWAConfig,
-                                  topology: TwoLevel) -> StepBundle:
+def _make_mesh_hwa_inner_sync_step(lm: LM, rules: ShardingRules,
+                                   hwa_cfg: HWAConfig,
+                                   topology: TwoLevel) -> StepBundle:
     """The two-level tree's INNER sync: pod-internal averaging + restart.
 
     Runs on the ``outer_every - 1`` of every ``outer_every`` syncs that
@@ -970,3 +1096,55 @@ def make_mesh_hwa_inner_sync_step(lm: LM, rules: ShardingRules,
             n_collectives=1, outer_collectives=0,
             notes="two-level inner sync: one per-pod all-reduce, zero "
                   "cross-pod traffic, zero kernel launches"))
+
+
+# ------------------------------------------------- deprecated flat names
+#
+# PR 10 collapsed the five HWA builders behind ONE declarative entry
+# point: construct a ``launch.sync.plan.SyncPlan`` (topology × precision
+# × resilience × kernels) and call ``build_hwa_bundles(lm, rules, plan)``.
+# The historical names survive as thin wrappers so pre-plan callers keep
+# working; they carry no logic of their own and will be removed once the
+# last in-repo caller migrates.
+
+
+def _deprecated(name: str) -> None:
+    warnings.warn(
+        f"{name} is deprecated: describe the configuration with a "
+        "repro.launch.sync.plan.SyncPlan and call build_hwa_bundles "
+        "instead", DeprecationWarning, stacklevel=3)
+
+
+def make_hwa_train_step(*args, **kwargs) -> StepBundle:
+    """Deprecated name for the vmap-path inner step (use
+    ``plan.build_hwa_bundles``)."""
+    _deprecated("make_hwa_train_step")
+    return _make_hwa_train_step(*args, **kwargs)
+
+
+def make_hwa_sync_step(*args, **kwargs) -> StepBundle:
+    """Deprecated name for the flat stacked sync (use
+    ``plan.build_hwa_bundles``)."""
+    _deprecated("make_hwa_sync_step")
+    return _make_hwa_sync_step(*args, **kwargs)
+
+
+def make_mesh_hwa_train_step(*args, **kwargs) -> StepBundle:
+    """Deprecated name for the mesh-native inner step (use
+    ``plan.build_hwa_bundles``)."""
+    _deprecated("make_mesh_hwa_train_step")
+    return _make_mesh_hwa_train_step(*args, **kwargs)
+
+
+def make_mesh_hwa_sync_step(*args, **kwargs) -> StepBundle:
+    """Deprecated name for the mesh-native sync (use
+    ``plan.build_hwa_bundles``)."""
+    _deprecated("make_mesh_hwa_sync_step")
+    return _make_mesh_hwa_sync_step(*args, **kwargs)
+
+
+def make_mesh_hwa_inner_sync_step(*args, **kwargs) -> StepBundle:
+    """Deprecated name for the two-level inner sync (use
+    ``plan.build_hwa_bundles``)."""
+    _deprecated("make_mesh_hwa_inner_sync_step")
+    return _make_mesh_hwa_inner_sync_step(*args, **kwargs)

@@ -203,27 +203,84 @@ def choose_resident_spec(mesh: Mesh, params_abs, flat_specs, flat_shapes,
                                          for a in mesh.axis_names})
 
 
-def _psum_composition(part, psum_axes):
+def _psum_composition(part, psum_axes, comms_dtype: str = "f32"):
     """psum ``part`` over each axis group in sequence — the grouped
     composition of the sync topology (one group for Flat, inner-then-
-    outer for TwoLevel). Empty groups are skipped (K device-local)."""
-    for axes in psum_axes:
-        if axes:
+    outer for TwoLevel). Empty groups are skipped (K device-local).
+
+    ``comms_dtype`` compresses the OUTERMOST (last non-empty) group's
+    payload — the tree's cross-pod hop, the one that crosses the slow
+    fabric — while inner pod-local reductions stay f32:
+
+    - ``bf16``: quantize→all-gather→dequantize→local f32 halving-sum —
+      each pod's partial is rounded to bf16 once, gathered, and reduced
+      locally in f32 (deterministic halving order, no second rounding
+      of the sum).
+    - ``fp8``: an e4m3 reduction would ACCUMULATE in fp8 (catastrophic
+      over >2 pods), so the partial is block-scale quantized
+      (``common.quant``), ALL-GATHERED alongside its per-ALIGN-block f32
+      scales, then dequantized locally and summed with the canonical
+      halving order. Payload bytes drop ~4× (1-byte elements + 1/2048
+      scale overhead).
+
+    Both compressed payloads cross the wire BITCAST to the same-width
+    unsigned integer (bf16→u16, e4m3fn→u8): XLA's float-normalization
+    pass on backends without native narrow-float collectives (CPU
+    included) otherwise rewrites the collective to a wide one — a bf16
+    all-reduce is promoted to f32 and a bf16/fp8 gather has its
+    consumer convert hoisted above it — silently restoring the full
+    wire bytes. Integer collectives are never normalized, so the
+    bit-view pins the true 2-/1-byte payload on every backend; the
+    bundle contracts budget the u16/u8 gathers explicitly.
+    """
+    last = None
+    if comms_dtype != "f32":
+        non_empty = [i for i, axes in enumerate(psum_axes) if axes]
+        last = non_empty[-1] if non_empty else None
+    for i, axes in enumerate(psum_axes):
+        if not axes:
+            continue
+        if i != last:
             part = jax.lax.psum(part, axes)
+        elif comms_dtype == "bf16":
+            from repro.core.online import halving_sum_axis0
+            q = jax.lax.bitcast_convert_type(part.astype(jnp.bfloat16),
+                                             jnp.uint16)
+            qg = jax.lax.all_gather(q, axes)      # (n_pods, P_local) u16
+            qg = jax.lax.bitcast_convert_type(qg, jnp.bfloat16)
+            part = halving_sum_axis0(qg.astype(jnp.float32))
+        else:
+            from repro.common.quant import (block_scales, dequantize_fp8,
+                                            quantize_fp8)
+            from repro.core.online import halving_sum_axis0
+            s = block_scales(part)
+            q = jax.lax.bitcast_convert_type(
+                quantize_fp8(part, s), jnp.uint8)
+            qg = jax.lax.all_gather(q, axes)      # (n_pods, P_local) u8
+            qg = jax.lax.bitcast_convert_type(qg, jnp.float8_e4m3fn)
+            sg = jax.lax.all_gather(s, axes)      # (n_pods, blocks) f32
+            part = halving_sum_axis0(dequantize_fp8(qg, sg))
     return part
 
 
-def _push_window_groups(hwa_cfg: HWAConfig, bounds, rings, totals, mean,
-                        count, next_idx, cycle, use_kernel: bool,
-                        with_stride: bool):
+def _push_window_groups(hwa_cfg: HWAConfig, bounds, rings, scaless, totals,
+                        comps, mean, count, next_idx, cycle,
+                        use_kernel: bool, with_stride: bool):
     """Per-group slide-window push of the packed mean — the grouped
     generalization of ``core.offline.window_update_packed`` (and, when
     ``with_stride``, ``core.hwa.window_push_packed``): one kernel launch
     per group over its local ``(I, seg_len)`` ring slice, ONE shared set
     of counters, and the sparse-window stride cond applied once across
     all groups. Single-range layouts pass one bound/ring/total and get
-    bit-identical results to the ungrouped helpers."""
-    from repro.kernels.ref import wa_window_update_ref
+    bit-identical results to the ungrouped helpers.
+
+    ``scaless``/``comps`` are the compressed ring's per-group companions
+    (all-None for the f32 default, which keeps the exact pre-compression
+    arithmetic): bf16 rings take the ``*_c`` Kahan-total kernel when
+    ``use_kernel``, fp8 rings always take the jnp reference (the kernel
+    has no per-block scale state — ``kernels.ops.KERNEL_RING_DTYPES``)."""
+    from repro.kernels.ref import wa_window_update_c_ref, \
+        wa_window_update_ref
 
     I = hwa_cfg.window
     idx = next_idx
@@ -232,48 +289,63 @@ def _push_window_groups(hwa_cfg: HWAConfig, bounds, rings, totals, mean,
     inv = 1.0 / new_count.astype(jnp.float32)
 
     def do_update(state):
-        rs, ts = state
-        out_r, out_t, out_a = [], [], []
-        for (lo, hi), r, t in zip(bounds, rs, ts):
+        rs, ss, ts, cs = state
+        out_r, out_s, out_t, out_c, out_a = [], [], [], [], []
+        for (lo, hi), r, s, t, c in zip(bounds, rs, ss, ts, cs):
             m = jax.lax.slice_in_dim(mean, lo, hi, axis=0)
-            if use_kernel and r.dtype == jnp.float32:
+            if r.dtype == jnp.float32:
+                if use_kernel:
+                    from repro.kernels import ops as kops
+                    r2, t2, a = kops.wa_window_update_packed(r, t, m, idx,
+                                                             full, inv)
+                else:
+                    r2, t2, a = wa_window_update_ref(r, t, m, idx, full,
+                                                     inv)
+                s2, c2 = s, c
+            elif use_kernel and r.dtype == jnp.bfloat16:
                 from repro.kernels import ops as kops
-                r2, t2, a = kops.wa_window_update_packed(r, t, m, idx,
-                                                         full, inv)
+                r2, t2, c2, a = kops.wa_window_update_packed_c(
+                    r, t, c, m, idx, full, inv)
+                s2 = s
             else:
-                r2, t2, a = wa_window_update_ref(r, t, m, idx, full, inv)
+                r2, s2, t2, c2, a = wa_window_update_c_ref(
+                    r, s, t, c, m, idx, full, inv)
             out_r.append(r2)
+            out_s.append(s2)
             out_t.append(t2)
+            out_c.append(c2)
             out_a.append(a)
-        return (tuple(out_r), tuple(out_t), tuple(out_a), new_count,
-                jnp.mod(idx + 1, I))
+        return (tuple(out_r), tuple(out_s), tuple(out_t), tuple(out_c),
+                tuple(out_a), new_count, jnp.mod(idx + 1, I))
 
     def skip_update(state):
-        rs, ts = state
+        rs, ss, ts, cs = state
         denom = jnp.maximum(count, 1).astype(jnp.float32)
-        return (tuple(rs), tuple(ts), tuple(t / denom for t in ts), count,
-                idx)
+        return (tuple(rs), tuple(ss), tuple(ts), tuple(cs),
+                tuple(t / denom for t in ts), count, idx)
 
     new_cycle = cycle + 1
+    state = (tuple(rings), tuple(scaless), tuple(totals), tuple(comps))
     if not with_stride or hwa_cfg.window_stride == 1:
-        rs2, ts2, avgs, cnt2, nidx2 = do_update((rings, totals))
+        rs2, ss2, ts2, cs2, avgs, cnt2, nidx2 = do_update(state)
     else:
         take = jnp.mod(new_cycle - 1, hwa_cfg.window_stride) == 0
-        rs2, ts2, avgs, cnt2, nidx2 = jax.lax.cond(
-            take, do_update, skip_update, (rings, totals))
+        rs2, ss2, ts2, cs2, avgs, cnt2, nidx2 = jax.lax.cond(
+            take, do_update, skip_update, state)
     if with_stride:
         # W̿ = W̄ until the window holds an entry (window_push_packed)
         avgs = tuple(
             jnp.where(cnt2 == 0,
                       jax.lax.slice_in_dim(mean, lo, hi, axis=0), a)
             for (lo, hi), a in zip(bounds, avgs))
-    return rs2, ts2, avgs, cnt2, nidx2, new_cycle
+    return rs2, ss2, ts2, cs2, avgs, cnt2, nidx2, new_cycle
 
 
 def _local_packed_sync(hwa_cfg: HWAConfig, lspec, K: int,
                        psum_axes: tuple[tuple[str, ...], ...],
                        use_kernel: bool, with_stride: bool, inner, ring,
-                       total, count, next_idx, cycle, *,
+                       total, count, next_idx, cycle, scales=None,
+                       comp=None, *, comms_dtype: str = "f32",
                        health_axes: tuple[str, ...] = (),
                        health_scale: int = 1):
     """Per-device body of the mesh-resident packed sync.
@@ -320,17 +392,42 @@ def _local_packed_sync(hwa_cfg: HWAConfig, lspec, K: int,
     health crossing). Kernels are bypassed when resilient (they cannot
     mask); the returned alive mask is the 8th output.
 
-    Returns ``(new_inner, ring, total, count, next_idx, wa, cycle,
-    alive)`` — alive is the per-device ``(k_local,)`` bool mask of its
-    resident replicas (all-true when not resilient).
+    **Compressed state.** ``scales``/``comp`` are the compressed ring's
+    companions (``packing.window_aux_buffers`` shapes, per-group tuples
+    for grouped layouts; both None on the f32 default, whose arithmetic
+    is bit-identical to the pre-compression body). bf16 rings fuse
+    through the ``*_c`` Kahan-total kernels under the same gate as f32;
+    fp8 rings (no in-kernel scale state) always take the jnp reference
+    push. The restart W̄ for a compressed ring is the DECODED stored
+    mean — the ring slot and the live replicas agree bitwise, and the
+    kernel (slot read-back) and jnp (encode→decode) paths match.
+    ``comms_dtype`` quantizes the outermost weight reduction
+    (:func:`_psum_composition`); the k_alive/health collectives of the
+    resilient path stay f32 (scalar/stat payloads, not worth a contract
+    exception — the builders refuse resilient + compressed comms).
+
+    Returns ``(new_inner, ring, scales, total, comp, count, next_idx,
+    wa, cycle, alive)`` — scales/comp are None whenever the input was
+    (callers drop them from their shard_map outputs); alive is the
+    per-device ``(k_local,)`` bool mask of its resident replicas
+    (all-true when not resilient).
     """
     from repro.common.packing import pack_stacked, unpack
     from repro.core.online import broadcast_to_replicas, halving_sum_axis0
+    from repro.kernels.ops import KERNEL_RING_DTYPES
 
     I = hwa_cfg.window
     grouped = isinstance(ring, tuple)
     rings = ring if grouped else (ring,)
     totals = total if grouped else (total,)
+    n_g = len(rings)
+    scaless = ((scales if grouped else (scales,))
+               if scales is not None else (None,) * n_g)
+    comps = ((comp if grouped else (comp,))
+             if comp is not None else (None,) * n_g)
+    compressed = rings[0].dtype != jnp.float32
+    if compressed and comps[0] is None:
+        comps = tuple(jnp.zeros_like(t) for t in totals)
     gt = lspec.group_table()       # local view: one segment per group
     bounds = [(g.offset, g.offset + g.seg_len) for g in gt]
     sbuf = pack_stacked(inner, lspec)            # (K_local, P_local) f32
@@ -338,8 +435,8 @@ def _local_packed_sync(hwa_cfg: HWAConfig, lspec, K: int,
     collective = any(psum_axes)
     resilient = hwa_cfg.resilient
     alive = jnp.ones((k_local,), jnp.bool_)
-    ring_f32 = all(r.dtype == jnp.float32 for r in rings)
-    fused = (use_kernel and not collective and ring_f32 and not resilient
+    fused = (use_kernel and not collective
+             and rings[0].dtype in KERNEL_RING_DTYPES and not resilient
              and (not with_stride or hwa_cfg.window_stride == 1))
     if fused:
         # whole sync in ONE launch per group on its local slice: K-mean +
@@ -350,15 +447,22 @@ def _local_packed_sync(hwa_cfg: HWAConfig, lspec, K: int,
         full = (count >= I).astype(jnp.float32)
         new_count = jnp.minimum(count + 1, I)
         inv = 1.0 / new_count.astype(jnp.float32)
-        rs2, ts2, means, avgs = [], [], [], []
-        for (lo, hi), r, t in zip(bounds, rings, totals):
+        rs2, ts2, cs2, means, avgs = [], [], [], [], []
+        for (lo, hi), r, t, c in zip(bounds, rings, totals, comps):
             sb = jax.lax.slice_in_dim(sbuf, lo, hi, axis=1)
-            r2, t2, a = kops.hwa_sync_packed(sb, r, t, idx, full, inv)
-            means.append(jax.lax.dynamic_index_in_dim(r2, idx,
-                                                      keepdims=False))
+            if compressed:
+                r2, t2, c2, a = kops.hwa_sync_packed_c(sb, r, t, c, idx,
+                                                       full, inv)
+            else:
+                r2, t2, a = kops.hwa_sync_packed(sb, r, t, idx, full, inv)
+                c2 = c
+            means.append(jax.lax.dynamic_index_in_dim(
+                r2, idx, keepdims=False).astype(jnp.float32))
             rs2.append(r2)
             ts2.append(t2)
+            cs2.append(c2)
             avgs.append(a)
+        ss2 = scaless                   # bf16 carries no scale state
         new_nidx = jnp.mod(idx + 1, I)
         new_cycle = cycle + 1
     elif resilient:
@@ -383,11 +487,11 @@ def _local_packed_sync(hwa_cfg: HWAConfig, lspec, K: int,
         inv = renormalized_inv(k_eff, K)
         part = halving_sum_axis0(
             jnp.where(alive[:, None], sbuf, jnp.float32(0.0))) * inv
-        mean = _psum_composition(part, psum_axes)
-        rs2, ts2, avgs, new_count, new_nidx, new_cycle = \
-            _push_window_groups(hwa_cfg, bounds, rings, totals, mean,
-                                count, next_idx, cycle, use_kernel,
-                                with_stride)
+        mean = _psum_composition(part, psum_axes, comms_dtype)
+        rs2, ss2, ts2, cs2, avgs, new_count, new_nidx, new_cycle = \
+            _push_window_groups(hwa_cfg, bounds, rings, scaless, totals,
+                                comps, mean, count, next_idx, cycle,
+                                use_kernel, with_stride)
     else:
         if use_kernel and k_local == 2 and len(gt) == 1:
             # the kernel's row reduction is jnp.sum order — a single IEEE
@@ -409,21 +513,32 @@ def _local_packed_sync(hwa_cfg: HWAConfig, lspec, K: int,
         # sums keep the result bit-identical to the fused kernel's
         # sum×(1/K) for power-of-two K, flat psum and grouped composition
         # alike
-        mean = _psum_composition(part, psum_axes)
-        rs2, ts2, avgs, new_count, new_nidx, new_cycle = \
-            _push_window_groups(hwa_cfg, bounds, rings, totals, mean,
-                                count, next_idx, cycle, use_kernel,
-                                with_stride)
+        mean = _psum_composition(part, psum_axes, comms_dtype)
+        rs2, ss2, ts2, cs2, avgs, new_count, new_nidx, new_cycle = \
+            _push_window_groups(hwa_cfg, bounds, rings, scaless, totals,
+                                comps, mean, count, next_idx, cycle,
+                                use_kernel, with_stride)
     if fused:
         mean = (jnp.concatenate(means) if len(means) > 1 else means[0])
+    elif compressed:
+        # restart from the DECODED stored mean: the same bits the window
+        # slot holds (group lengths are ALIGN multiples, so encoding the
+        # concatenated buffer matches the per-group slot encodings) and
+        # the same bits the fused kernel path reads back from the ring
+        from repro.common.quant import decode_slot, encode_slot
+        mean = decode_slot(*encode_slot(mean, rings[0].dtype))
     avg = (jnp.concatenate(list(avgs)) if len(avgs) > 1 else avgs[0])
     outer = unpack(mean, lspec)                  # local leaf views, free
     wa = unpack(avg, lspec)
     new_inner = broadcast_to_replicas(outer, k_local)
     ring_out = tuple(rs2) if grouped else rs2[0]
     total_out = tuple(ts2) if grouped else ts2[0]
-    return (new_inner, ring_out, total_out, new_count, new_nidx, wa,
-            new_cycle, alive)
+    scales_out = (None if scales is None
+                  else (tuple(ss2) if grouped else ss2[0]))
+    comp_out = (None if comp is None and not compressed
+                else (tuple(cs2) if grouped else cs2[0]))
+    return (new_inner, ring_out, scales_out, total_out, comp_out,
+            new_count, new_nidx, wa, new_cycle, alive)
 
 
 def _local_inner_sync(lspec, pod_size: int,
@@ -456,29 +571,35 @@ def _local_inner_sync(lspec, pod_size: int,
 def packed_sync_launch_budget(hwa_cfg: HWAConfig, *, use_kernel: bool,
                               n_groups: int, k_local: int,
                               collective: bool, with_stride: bool,
-                              ring_f32: bool = True,
+                              ring_dtype="f32",
                               resilient: bool | None = None) -> int:
     """Static Pallas-launch count of :func:`_local_packed_sync`.
 
     The single source of truth the builders' declared
     ``LaunchBudget`` shares with the kernel gating above — a drifted
     copy would let ``hwa-lint`` rubber-stamp a regressed launch count.
-    Mirrors the gates exactly: the fused path is one ``hwa_sync_packed``
-    per group; otherwise the mean kernel runs only in the ungrouped
-    ``k_local == 2`` case and the window push costs one launch per group
-    (``cond`` branches under ``window_stride > 1`` included — the budget
-    is a static program property, not a per-call trace). The resilient
-    (alive-masked) sync bypasses the fused and mean kernels — they
-    cannot mask — leaving only the per-group window pushes.
+    Mirrors the gates exactly: the fused path (f32 or bf16 — the ring
+    dtypes in ``kernels.ops.KERNEL_RING_DTYPES``; fp8 rings have no
+    kernel and take the jnp reference everywhere) is one
+    ``hwa_sync_packed``/``hwa_sync_packed_c`` per group; otherwise the
+    mean kernel runs only in the ungrouped ``k_local == 2`` case and the
+    window push costs one launch per group (``cond`` branches under
+    ``window_stride > 1`` included — the budget is a static program
+    property, not a per-call trace). The resilient (alive-masked) sync
+    bypasses the fused and mean kernels — they cannot mask — leaving
+    only the per-group window pushes.
     """
+    from repro.common.quant import wa_dtype
+    from repro.kernels.ops import KERNEL_RING_DTYPES
     if resilient is None:
         resilient = hwa_cfg.resilient
     if not use_kernel:
         return 0
-    fused = (not collective and ring_f32 and not resilient
+    kernel_ring = jnp.dtype(wa_dtype(ring_dtype)) in KERNEL_RING_DTYPES
+    fused = (not collective and kernel_ring and not resilient
              and (not with_stride or hwa_cfg.window_stride == 1))
     if fused:
         return n_groups
     mean = 1 if (k_local == 2 and n_groups == 1 and not resilient) else 0
-    push = n_groups if ring_f32 else 0
+    push = n_groups if kernel_ring else 0
     return mean + push

@@ -1,0 +1,187 @@
+"""Declarative HWA bundle construction: ONE entry point over the
+topology × precision × resilience × kernel matrix.
+
+PR 4 split the step-builder monolith; PR 10 collapses its five public
+``make_*hwa*_step`` builders behind a single declarative surface. A
+:class:`SyncPlan` names every orthogonal choice a launch makes —
+
+- **topology**: :class:`~repro.launch.sync.topology.Flat` (one global
+  all-reduce) or :class:`~repro.launch.sync.topology.TwoLevel` (per-pod
+  psum + cross-pod all-reduce every H₂-th sync);
+- **precision**: ``wa_dtype`` compresses the WA ring storage (bf16, or
+  block-scaled fp8 with per-segment scales; f32 total with Kahan
+  compensation), ``comms_dtype`` the tree's cross-pod payload;
+- **resilience**: ``HWAConfig.resilient`` (alive-masked mean);
+- **kernels**: ``HWAConfig.use_kernels`` (fused Pallas vs jnp reference);
+- **placement**: ``mesh_native`` (shard_map replica blocks) vs the
+  stacked vmap path, ``mesh_resident`` forcing/forbidding the packed
+  in-map window state —
+
+and :func:`build_hwa_bundles` validates the combination ONCE and
+assembles the matching :class:`HWABundles` (train / sync / inner-sync
+StepBundles). Invalid corners (compressed comms on a Flat topology,
+resilient + compressed comms, two-level on the vmap path) fail here with
+one error message instead of deep inside a builder.
+
+The historical builder names survive as deprecated wrappers in
+``launch.sync.bundles``; new code should not call them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hwa import HWAConfig
+from repro.launch.sync.topology import Flat, SyncTopology, TwoLevel
+from repro.models.registry import LM
+from repro.sharding.rules import ShardingRules
+
+#: the SyncPlan-level precision tokens (see repro.common.quant)
+PRECISIONS = ("f32", "bf16", "fp8")
+
+
+@dataclasses.dataclass(frozen=True)
+class SyncPlan:
+    """Everything a launch decides about HWA synchronization, as data.
+
+    ``wa_dtype``/``comms_dtype`` take precision tokens (``"f32"`` |
+    ``"bf16"`` | ``"fp8"``); the f32 defaults keep every path
+    bit-identical to the uncompressed bundles (0 ULP — the repo-wide
+    guarantee). ``topology=None`` means flat sync over
+    ``replica_axis``. ``mesh_native=False`` selects the stacked vmap
+    path (several replicas resident per device allowed; flat only).
+    ``mesh_resident`` is the packed-window-state override threaded to
+    the builders (None = automatic).
+    """
+    hwa: HWAConfig
+    topology: SyncTopology | None = None
+    replica_axis: str = "replica"
+    wa_dtype: str = "f32"
+    comms_dtype: str = "f32"
+    mesh_native: bool = True
+    mesh_resident: bool | None = None
+    optimizer: str = "adamw"
+    lr: float = 3e-4
+    n_microbatches: int = 1
+
+    def __post_init__(self):
+        from repro.common.quant import wa_token
+        object.__setattr__(self, "wa_dtype", wa_token(self.wa_dtype))
+        object.__setattr__(self, "comms_dtype", wa_token(self.comms_dtype))
+        if self.comms_dtype != "f32":
+            if not isinstance(self.topology, TwoLevel):
+                raise ValueError(
+                    "comms_dtype compresses the two-level tree's "
+                    "cross-pod hop; a flat sync has no outer level to "
+                    f"compress (got comms_dtype={self.comms_dtype!r} "
+                    f"with topology {self.topology!r})")
+            if self.hwa.resilient:
+                raise ValueError(
+                    "resilient + compressed comms is unsupported (the "
+                    "alive-masked mean renormalizes after the psum)")
+        if isinstance(self.topology, TwoLevel) and not self.mesh_native:
+            raise ValueError(
+                "the two-level sync tree is mesh-native only (the "
+                "stacked vmap path has no grouped psum composition)")
+
+    @property
+    def resolved_topology(self) -> SyncTopology:
+        return (self.topology if self.topology is not None
+                else Flat(self.replica_axis))
+
+    @property
+    def is_tree(self) -> bool:
+        return isinstance(self.topology, TwoLevel)
+
+
+@dataclasses.dataclass(frozen=True)
+class HWABundles:
+    """The StepBundles a :class:`SyncPlan` assembles.
+
+    ``train`` is None when :func:`build_hwa_bundles` was called without
+    batch specs (sync-only callers: lint, benchmarks, checkpoints).
+    ``inner_sync`` exists only for a TwoLevel topology — it runs the
+    pod-internal restart on the non-outer syncs
+    (``plan.resolved_topology.is_outer`` schedules which is which).
+    """
+    plan: SyncPlan
+    sync: Any
+    train: Any = None
+    inner_sync: Any = None
+
+    @property
+    def pack_spec(self):
+        """The packed window-state layout callers MUST allocate from."""
+        return self.sync.pack_spec
+
+
+def build_hwa_bundles(lm: LM, rules: ShardingRules, plan: SyncPlan,
+                      batch_specs=None, batch_dims=None) -> HWABundles:
+    """Assemble the train / sync / inner-sync bundles a plan describes.
+
+    The ONE public constructor of HWA StepBundles: validates the plan's
+    combination against the mesh once, then delegates to the private
+    builders in ``launch.sync.bundles``. ``batch_specs``/``batch_dims``
+    are required only when the caller wants the inner train step
+    (sync-only consumers — lint, benchmarks, checkpoint migration —
+    omit them and get ``train=None``).
+    """
+    from repro.launch.sync.bundles import (_make_hwa_sync_step,
+                                           _make_hwa_train_step,
+                                           _make_mesh_hwa_inner_sync_step,
+                                           _make_mesh_hwa_sync_step,
+                                           _make_mesh_hwa_train_step)
+    topology = plan.resolved_topology
+    want_train = batch_specs is not None
+    if (batch_specs is None) != (batch_dims is None):
+        raise ValueError("pass batch_specs and batch_dims together "
+                         "(or neither, for sync-only bundles)")
+    if plan.mesh_native:
+        rep_axes = topology.replica_axes
+        train = (_make_mesh_hwa_train_step(
+            lm, rules, batch_specs, batch_dims, plan.hwa,
+            optimizer=plan.optimizer, lr=plan.lr,
+            replica_axis=rep_axes if len(rep_axes) > 1 else rep_axes[0])
+            if want_train else None)
+        sync = _make_mesh_hwa_sync_step(
+            lm, rules, plan.hwa, ring_dtype=plan.wa_dtype,
+            replica_axis=plan.replica_axis,
+            mesh_resident=plan.mesh_resident,
+            topology=plan.topology, comms_dtype=plan.comms_dtype)
+        inner_sync = (_make_mesh_hwa_inner_sync_step(
+            lm, rules, plan.hwa, topology) if plan.is_tree else None)
+        return HWABundles(plan=plan, sync=sync, train=train,
+                          inner_sync=inner_sync)
+    train = (_make_hwa_train_step(
+        lm, rules, batch_specs, batch_dims, plan.hwa,
+        optimizer=plan.optimizer, lr=plan.lr,
+        n_microbatches=plan.n_microbatches) if want_train else None)
+    sync = _make_hwa_sync_step(lm, rules, plan.hwa,
+                               ring_dtype=plan.wa_dtype,
+                               mesh_resident=plan.mesh_resident)
+    return HWABundles(plan=plan, sync=sync, train=train)
+
+
+def window_state_args(bundles_or_sync, fill=jnp.zeros):
+    """Freshly-initialized window-state arguments of a sync bundle, in
+    the bundle's own argument order: ``(ring, [scales], total, [comp],
+    count, next_idx[, cycle])`` — everything AFTER the stacked inner
+    params. Zeroed buffers, except the fp8 ring's per-block scales,
+    which start at ONES (the scale of an all-zero block). Works for
+    single-range and grouped (per-group tuple) layouts alike because it
+    allocates from the bundle's abstract args — the shape contract's one
+    source of truth.
+    """
+    from repro.common.quant import needs_scales
+    sync = getattr(bundles_or_sync, "sync", bundles_or_sync)
+    spec = sync.pack_spec
+    scales_idx = (1 if spec is not None and needs_scales(spec.ring_dtype)
+                  else None)
+    out = []
+    for i, a in enumerate(sync.abstract_args[1:]):
+        mk = jnp.ones if i == scales_idx else fill
+        out.append(jax.tree.map(lambda s: mk(s.shape, s.dtype), a))
+    return tuple(out)

@@ -18,6 +18,10 @@ devices first):
 Add ``--sync-tree two-level --k 4 --outer-every 2`` for the hierarchical
 sync tree: K replicas carved into pods, pod-internal averaging every H
 steps, the cross-pod all-reduce + window push only every H·H₂ steps.
+``--wa-dtype bf16`` (or ``fp8``) compresses the WA ring storage and
+``--comms-dtype`` the tree's cross-pod payload — both routed through
+``SyncPlan``; the f32 defaults stay bit-identical to the uncompressed
+path.
 """
 from __future__ import annotations
 
@@ -52,11 +56,10 @@ def run_mesh_native(args) -> dict:
     import numpy as np
 
     from repro.common.compat import make_mesh, use_mesh
+    from repro.common.quant import is_compressed, needs_scales
     from repro.launch.specs import input_specs
-    from repro.launch.steps import (TwoLevel,
-                                    make_mesh_hwa_inner_sync_step,
-                                    make_mesh_hwa_sync_step,
-                                    make_mesh_hwa_train_step)
+    from repro.launch.steps import (SyncPlan, TwoLevel, build_hwa_bundles,
+                                    window_state_args)
     from repro.models.types import InputShape
     from repro.sharding.rules import make_tp_rules
 
@@ -101,12 +104,16 @@ def run_mesh_native(args) -> dict:
     shape = InputShape("mesh_native", seq_len=args.seq_len,
                        global_batch=args.batch_size, kind="train")
     specs, dims = input_specs(cfg, shape)
-    train = make_mesh_hwa_train_step(lm, rules, specs, dims, hwa_cfg,
-                                     optimizer="sgd", lr=args.lr,
-                                     replica_axis=replica_axis)
-    sync = make_mesh_hwa_sync_step(lm, rules, hwa_cfg, topology=topo)
-    inner_sync = (make_mesh_hwa_inner_sync_step(lm, rules, hwa_cfg, topo)
-                  if tree else None)
+    try:
+        plan = SyncPlan(hwa=hwa_cfg, topology=topo,
+                        wa_dtype=args.wa_dtype, comms_dtype=args.comms_dtype,
+                        optimizer="sgd", lr=args.lr)
+    except ValueError as e:
+        raise SystemExit(f"invalid --wa-dtype/--comms-dtype combination: "
+                         f"{e}") from None
+    bundles = build_hwa_bundles(lm, rules, plan, specs, dims)
+    train, sync = bundles.train, bundles.sync
+    inner_sync = bundles.inner_sync
     H = args.sync_period or 8
 
     params = lm.init(jax.random.key(args.seed))
@@ -115,11 +122,16 @@ def run_mesh_native(args) -> dict:
     from repro.launch.steps import _mk_optimizer
     opt = _mk_optimizer("sgd")   # must match the compiled step's optimizer
     inner_opt = jax.vmap(opt.init)(inner)
-    from repro.common.packing import window_buffers
-    spec = sync.pack_spec       # window state is packed: one (I, P) ring
-    # (or, under FSDP's grouped mixed-tiling layout, one ring per group)
-    ring, total = window_buffers(spec, args.window)
-    count = nidx = cycle = jnp.zeros((), jnp.int32)
+    spec = bundles.pack_spec    # window state is packed: one (I, P) ring
+    # (or, under FSDP's grouped mixed-tiling layout, one ring per group).
+    # The sync bundle's own argument order — (ring, [scales], total,
+    # [comp], count, next_idx, cycle) — is the one source of truth for
+    # what the window state holds; allocate straight from it.
+    win = list(window_state_args(bundles))
+    n_buf = len(win) - 3        # buffers ahead of count/next_idx/cycle
+    has_scales = needs_scales(spec.ring_dtype)
+    has_comp = is_compressed(spec.ring_dtype)
+    cycle = win[-1]
 
     inject = None
     if args.inject_nan:
@@ -137,11 +149,17 @@ def run_mesh_native(args) -> dict:
         raise SystemExit("--resume needs --checkpoint-dir and "
                          "--checkpoint-every")
 
-    def _window_like(ring, total, count, nidx):
+    def _window_like(win):
         from repro.core.offline import WindowState
+        it = iter(win)
+        ring = next(it)
+        scales = next(it) if has_scales else None
+        total = next(it)
+        comp = next(it) if has_comp else None
+        count, nidx = next(it), next(it)
         return WindowState(ring=ring, total=total, count=count,
                            next_idx=nidx, window=args.window, kind="ring",
-                           spec=spec)
+                           spec=spec, comp=comp, scales=scales)
 
     train_c = train.lower(mesh).compile()
     sync_c = sync.lower(mesh).compile()
@@ -164,15 +182,20 @@ def run_mesh_native(args) -> dict:
                 session.load(latest, "inner_opt", inner_opt),
                 train.in_shardings[1])
             wa = jax.device_put(session.load(latest, "wa", wa),
-                                sync.out_shardings[5])
-            ws = session.load_window(
-                latest, _window_like(ring, total, count, nidx))
-            ring = jax.device_put(ws.ring, sync.in_shardings[1])
-            total = jax.device_put(ws.total, sync.in_shardings[2])
-            count, nidx = ws.count, ws.next_idx
+                                sync.out_shardings[3 + n_buf])
+            ws = session.load_window(latest, _window_like(win))
+            restored = [ws.ring]
+            if has_scales:
+                restored.append(ws.scales)
+            restored.append(ws.total)
+            if has_comp:
+                restored.append(ws.comp)
+            for i, buf in enumerate(restored):
+                win[i] = jax.device_put(buf, sync.in_shardings[1 + i])
+            win[n_buf], win[n_buf + 1] = ws.count, ws.next_idx
             meta = session.meta(latest)
             start_step = int(meta["step"])
-            cycle = jnp.asarray(meta["cycle"], jnp.int32)
+            cycle = win[-1] = jnp.asarray(meta["cycle"], jnp.int32)
             sync_idx = int(meta["sync_idx"])
             loss = float(meta["loss"])
             history = list(meta.get("history", []))
@@ -212,10 +235,14 @@ def run_mesh_native(args) -> dict:
                     print(f"[mesh-native] step {step + 1} loss {loss:.4f} "
                           f"inner sync (pods avg internally)")
                 else:
+                    # outputs mirror the inputs: (inner, <buffers...>,
+                    # count, next_idx, wa, cycle[, alive])
+                    res = sync_c(inner, *win)
+                    inner = res[0]
+                    count, nidx, wa, cycle = res[1 + n_buf:5 + n_buf]
+                    win = list(res[1:1 + n_buf]) + [count, nidx, cycle]
                     if args.resilient:
-                        (inner, ring, total, count, nidx, wa, cycle,
-                         alive) = sync_c(inner, ring, total, count, nidx,
-                                         cycle)
+                        alive = res[5 + n_buf]
                         k_alive = int(np.sum(jax.device_get(alive)))
                         k_alive_min = min(k_alive_min, k_alive)
                         if k_alive < K:
@@ -234,8 +261,6 @@ def run_mesh_native(args) -> dict:
                               f"{loss:.4f} cycle {int(cycle)} "
                               f"k_alive {k_alive}/{K}")
                     else:
-                        inner, ring, total, count, nidx, wa, cycle = sync_c(
-                            inner, ring, total, count, nidx, cycle)
                         history.append({"step": step + 1, "loss": loss,
                                         "sync": "outer",
                                         "cycle": int(cycle)})
@@ -248,19 +273,21 @@ def run_mesh_native(args) -> dict:
                 session.save(
                     step + 1,
                     {"inner": inner, "inner_opt": inner_opt, "wa": wa},
-                    window=_window_like(ring, total, count, nidx),
+                    window=_window_like(win),
                     meta={"step": step + 1, "cycle": int(cycle),
                           "sync_idx": sync_idx, "loss": loss,
                           "history": history})
     wa_finite = all(bool(np.all(np.isfinite(jax.device_get(x))))
                     for x in jax.tree.leaves(wa)
                     if jnp.issubdtype(x.dtype, jnp.floating))
+    ws_final = _window_like(win)
     out = {"final_loss": loss, "cycles": int(cycle), "syncs": sync_idx,
            "history": history, "sync_tree": args.sync_tree,
+           "wa_dtype": plan.wa_dtype, "comms_dtype": plan.comms_dtype,
            "wa_finite": wa_finite, "k_alive_min": k_alive_min,
            "mesh": {k: int(v) for k, v in mesh.shape.items()},
-           "_state": {"inner": inner, "wa": wa, "ring": ring,
-                      "total": total}}
+           "_state": {"inner": inner, "wa": wa, "ring": ws_final.ring,
+                      "total": ws_final.total}}
     print(f"[mesh-native] done: {out['cycles']} outer cycles / "
           f"{sync_idx} syncs, final loss {out['final_loss']:.4f}, "
           f"wa_finite {wa_finite}")
@@ -304,6 +331,19 @@ def main():
     ap.add_argument("--pods", type=int, default=0,
                     help="pod count for --sync-tree two-level "
                          "(0 = auto: 2)")
+    ap.add_argument("--wa-dtype", default="f32",
+                    choices=["f32", "bf16", "fp8"],
+                    help="mesh-native only: WA ring storage dtype — bf16 "
+                         "halves the window's HBM, fp8 (block-scaled, "
+                         "per-ALIGN-block f32 scales) quarters it; the "
+                         "running total stays f32 with Kahan "
+                         "compensation. f32 (default) is bit-identical "
+                         "to the uncompressed path")
+    ap.add_argument("--comms-dtype", default="f32",
+                    choices=["f32", "bf16", "fp8"],
+                    help="mesh-native only: cross-pod sync payload dtype "
+                         "(needs --sync-tree two-level; incompatible "
+                         "with --resilient)")
     ap.add_argument("--fsdp", action="store_true",
                     help="mesh-native only: FSDP rule table (params + "
                          "moments sharded over the data axes too) — the "
@@ -341,6 +381,11 @@ def main():
     if args.inject_nan and not args.mesh_native:
         raise SystemExit("--inject-nan needs --mesh-native (use "
                          "tools/fault_check.py for the in-process legs)")
+    if (args.wa_dtype != "f32" or args.comms_dtype != "f32") \
+            and not args.mesh_native:
+        raise SystemExit("--wa-dtype/--comms-dtype compress the "
+                         "mesh-native packed window state; add "
+                         "--mesh-native")
 
     if args.mesh_native:
         out = run_mesh_native(args)

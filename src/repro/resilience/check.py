@@ -74,6 +74,7 @@ def _mesh_args(**kw):
         pods=0, outer_every=2, window=3, seq_len=16, batch_size=4,
         lr=0.3, seed=0, steps=8, sync_period=2, attn_impl="",
         resilient=False, max_param_rms=0.0, inject_nan="",
+        wa_dtype="f32", comms_dtype="f32",
         checkpoint_dir="", checkpoint_every=0, keep=3, resume=False)
     for k, v in kw.items():
         setattr(ns, k, v)

@@ -30,7 +30,13 @@ Verifies the tentpole properties of mesh-native HWA on a (2,2,2)
      layout — per-group window-buffer tuples, ≤ n_groups Pallas
      launches, still exactly one replica all-reduce and zero assembly
      collectives — bit-identical to the per-leaf reference, with no
-     legacy-assembly error.
+     legacy-assembly error;
+  7. COMPRESSED WA precision (PR 10): the bf16-ring flat kernel sync and
+     the fp8-ring + fp8-comms tree sync stay within the per-dtype
+     relative-ULP budgets of benchmarks/thresholds.json (the same
+     numbers bench-check guards) against the exact-f32 legs above; the
+     fp8 tree's cross-pod hop compiles to the u8-payload + f32-scales
+     all-gather pair (the integer bit-view XLA cannot widen).
 
 All oracles are computed on HOST-materialized copies: eagerly packing
 DISTRIBUTED leaves (a concat across differently-sharded operands) is
@@ -56,8 +62,7 @@ from repro.launch.hlo import (collectives_crossing_axis, count_pallas_calls,
                               sync_collective_audit)
 from repro.launch.mesh import make_test_mesh
 from repro.launch.specs import input_specs
-from repro.launch.steps import (make_hwa_train_step, make_mesh_hwa_sync_step,
-                                make_mesh_hwa_train_step)
+from repro.launch.steps import SyncPlan, build_hwa_bundles
 from repro.models.registry import build_model
 from repro.models.types import InputShape
 from repro.optim import apply_updates, sgd
@@ -111,9 +116,19 @@ def batches(step):
                                           cfg.vocab_size)}
 
 
+# every bundle in this file comes from the ONE declarative constructor
+# (PR 10); the old make_*hwa*_step names are deprecated wrappers
+def mk_train(lm_, rules_, hwa, **kw):
+    plan = SyncPlan(hwa=hwa, optimizer="sgd", lr=LR, **kw)
+    return build_hwa_bundles(lm_, rules_, plan, specs, dims).train
+
+
+def mk_sync(lm_, rules_, hwa, **kw):
+    return build_hwa_bundles(lm_, rules_, SyncPlan(hwa=hwa, **kw)).sync
+
+
 # ---- leg A: mesh-native shard_map path ------------------------------------
-mesh_train = make_mesh_hwa_train_step(lm, rules, specs, dims, hwa_cfg,
-                                      optimizer="sgd", lr=LR)
+mesh_train = mk_train(lm, rules, hwa_cfg)
 mesh_train_c = mesh_train.lower(mesh).compile()
 a_inner, a_opt = stack2(params), jax.vmap(opt.init)(stack2(params))
 with use_mesh(mesh):
@@ -124,8 +139,7 @@ check("mesh-native: finite per-replica losses",
       bool(jnp.all(jnp.isfinite(a_losses))))
 
 # ---- leg B: vmap path compiled on the same mesh ---------------------------
-vmap_train = make_hwa_train_step(lm, rules, specs, dims, hwa_cfg,
-                                 optimizer="sgd", lr=LR)
+vmap_train = mk_train(lm, rules, hwa_cfg, mesh_native=False)
 vmap_train_c = vmap_train.lower(mesh).compile()
 b_inner, b_opt = stack2(params), jax.vmap(opt.init)(stack2(params))
 with use_mesh(mesh):
@@ -160,7 +174,7 @@ outer_oracle = jax.tree.map(lambda x: jnp.mean(x, 0), a_host)
 ws_oracle, wa_oracle = window_update(
     window_init(params, hwa_cfg.window), outer_oracle)
 
-sync = make_mesh_hwa_sync_step(lm, rules, hwa_cfg)
+sync = mk_sync(lm, rules, hwa_cfg)
 sync_c = sync.lower(mesh).compile()
 spec = sync.pack_spec               # window state is packed (I, P)/(P,)
 check(f"sync: pack_spec is shard-aware (axes={spec.axes}, "
@@ -187,7 +201,7 @@ check("sync: count/cycle advanced",
 # reference — the packed layouts differ (shard-aware vs contiguous), so
 # all comparisons go through unpacked leaf views of host copies.
 hwa_cfg_k = HWAConfig(n_replicas=K, window=3, use_kernels=True)
-sync_k = make_mesh_hwa_sync_step(lm, rules, hwa_cfg_k)
+sync_k = mk_sync(lm, rules, hwa_cfg_k)
 sync_kc = sync_k.lower(mesh).compile()
 spec_k = sync_k.pack_spec
 ring_k = jnp.zeros((hwa_cfg_k.window, spec_k.padded), jnp.float32)
@@ -261,14 +275,13 @@ _prior_hatch = os.environ.pop("REPRO_ALLOW_LEGACY_ASSEMBLY", None)
 try:
     legacy_raised = False
     try:
-        make_mesh_hwa_sync_step(lm, rules, hwa_cfg, mesh_resident=False)
+        mk_sync(lm, rules, hwa_cfg, mesh_resident=False)
     except RuntimeError:
         legacy_raised = True
     check("legacy fallback: hard error on the multi-device CPU mesh",
           legacy_raised)
     os.environ["REPRO_ALLOW_LEGACY_ASSEMBLY"] = "1"
-    sync_legacy = make_mesh_hwa_sync_step(lm, rules, hwa_cfg,
-                                          mesh_resident=False)
+    sync_legacy = mk_sync(lm, rules, hwa_cfg, mesh_resident=False)
     legacy_audit = sync_collective_audit(
         sync_legacy.lower(mesh).compile().as_text(), mesh)
     n_legacy = sum(len(h) for h in legacy_audit["other"].values())
@@ -293,7 +306,7 @@ finally:
 from repro.common.packing import merge_groups, window_buffers
 
 rules_f = make_tp_rules(mesh, replica_axis="replica", fsdp=True)
-sync_f = make_mesh_hwa_sync_step(lm, rules_f, hwa_cfg_k)   # builds: no
+sync_f = mk_sync(lm, rules_f, hwa_cfg_k)                   # builds: no
 check("fsdp sync: grouped layout chosen, no legacy-assembly error "     # raise
       f"(n_groups={sync_f.pack_spec.n_groups})",
       sync_f.pack_spec.is_grouped and sync_f.pack_spec.n_groups >= 2)
@@ -342,7 +355,7 @@ from repro.analysis.collectives import check_collective_contract
 from repro.resilience.faults import poison_replica
 
 hwa_cfg_r = HWAConfig(n_replicas=K, window=3, resilient=True)
-sync_r = make_mesh_hwa_sync_step(lm, rules, hwa_cfg_r)
+sync_r = mk_sync(lm, rules, hwa_cfg_r)
 sync_rc = sync_r.lower(mesh).compile()
 spec_r = sync_r.pack_spec
 check("resilient sync: same packed layout as the plain sync",
@@ -413,14 +426,14 @@ print(f"INFO vmap-path train step replica-crossing collectives: "
 # CONTIGUOUS pods); with power-of-two counts every collective is a
 # 2-member all-reduce (one commutative IEEE add) and every local sum uses
 # the canonical halving order, so the composition is bit-identical —
-# 0 ULP — to (a) the FLAT path (make_hwa_sync_step with two replicas
-# resident per device on the plain mesh: local sum + one 2-member psum)
+# 0 ULP — to (a) the FLAT path (the vmap-path flat plan with two
+# replicas resident per device on the plain mesh: local sum + one
+# 2-member psum)
 # and (b) the per-leaf host reference online_average_grouped
 # (docs/ARCHITECTURE.md §4).
 from repro.core.online import online_average_grouped, pod_mean_grouped
 from repro.launch.mesh import make_tree_test_mesh
-from repro.launch.steps import (TwoLevel, make_hwa_sync_step,
-                                make_mesh_hwa_inner_sync_step)
+from repro.launch.steps import TwoLevel
 
 K4 = 4
 mesh_t = make_tree_test_mesh()          # (pod=2, replica=2, model=2)
@@ -428,10 +441,13 @@ rules_t = make_tp_rules(mesh_t, replica_axis=("pod", "replica"))
 hwa4 = HWAConfig(n_replicas=K4, window=3, use_kernels=True, outer_every=2)
 topo = TwoLevel("replica", "pod", outer_every=2)
 
-# tuple-axis train step: collective-free over BOTH replica-population axes
-tree_train = make_mesh_hwa_train_step(lm, rules_t, specs, dims, hwa4,
-                                      optimizer="sgd", lr=LR,
-                                      replica_axis=("pod", "replica"))
+# tuple-axis train step: collective-free over BOTH replica-population
+# axes (the TwoLevel plan resolves replica_axis to ("pod", "replica"))
+tree_bundles = build_hwa_bundles(lm, rules_t,
+                                 SyncPlan(hwa=hwa4, topology=topo,
+                                          optimizer="sgd", lr=LR),
+                                 specs, dims)
+tree_train = tree_bundles.train
 tree_train_c = tree_train.lower(mesh_t).compile()
 
 
@@ -474,7 +490,7 @@ def run_sync(bundle, run_mesh, state, with_cycle):
 
 
 # leg T: two-level OUTER sync (inner psum + cross-pod psum + window push)
-outer_b = make_mesh_hwa_sync_step(lm, rules_t, hwa4, topology=topo)
+outer_b = tree_bundles.sync
 (t_out, outer_c) = run_sync(outer_b, mesh_t,
                             jax.tree.map(jnp.array, div4_host), True)
 t_inner, _, _, t_count, _, t_wa, t_cycle = t_out
@@ -482,8 +498,8 @@ t_inner, _, _, t_count, _, t_wa, t_cycle = t_out
 # plain (replica=2, data=2, model=2) mesh (flat cfg: the flat builder
 # refuses a silently-ignored outer_every; the sync math is identical)
 import dataclasses
-flat_b = make_hwa_sync_step(lm, rules,
-                            dataclasses.replace(hwa4, outer_every=1))
+flat_b = mk_sync(lm, rules, dataclasses.replace(hwa4, outer_every=1),
+                 mesh_native=False)
 (f_out, _) = run_sync(flat_b, mesh,
                       jax.tree.map(jnp.array, div4_host), False)
 f_inner, _, _, _, _, f_wa = f_out
@@ -517,7 +533,7 @@ check("two-level outer sync: audit outer_sync_ok "
       f"mixed={len(audit_outer['mixed'])})", audit_outer["outer_sync_ok"])
 
 # ... and the INNER sync crosses ONLY the inner (per-pod) groups
-inner_b = make_mesh_hwa_inner_sync_step(lm, rules_t, hwa4, topo)
+inner_b = tree_bundles.inner_sync
 inner_c = inner_b.lower(mesh_t).compile()
 with use_mesh(mesh_t):
     i_inner = inner_c(jax.tree.map(jnp.array, div4_host))
@@ -547,7 +563,7 @@ div8_host = to_host(jax.tree.map(
     lambda x: x[None] + 0.1 * jax.random.normal(jax.random.key(13),
                                                 (K8,) + x.shape), params))
 hwa8 = HWAConfig(n_replicas=K8, window=3, use_kernels=True)
-flat8 = make_hwa_sync_step(lm, rules, hwa8)     # replica=2 -> k_local=4
+flat8 = mk_sync(lm, rules, hwa8, mesh_native=False)  # k_local=4
 spec8 = flat8.pack_spec
 flat8_c = flat8.lower(mesh).compile()
 with use_mesh(mesh):
@@ -560,7 +576,7 @@ check("flat kernel sync, k_local=4: restart bit-equal to canonical "
                  online_average_canonical(div8_host)))
 
 # ---- flash-pallas train step: fully-manual kernel attention ---------------
-# cfg.attn_impl == "flash_pallas" switches make_mesh_hwa_train_step to a
+# cfg.attn_impl == "flash_pallas" switches the mesh-native train step to a
 # FULLY-manual shard_map (Pallas kernels are opaque to GSPMD — under the
 # partial-auto map XLA would run them per-shard with global-shape
 # semantics): attention fwd + the two recompute-bwd sweeps execute on
@@ -571,8 +587,7 @@ check("flat kernel sync, k_local=4: restart bit-equal to canonical "
 # AND per-layer physical (scan-trip-weighted: 1 fwd + 2 bwd per layer).
 cfg_fp = cfg.with_(attn_impl="flash_pallas")
 lm_fp = build_model(cfg_fp)
-flash_train = make_mesh_hwa_train_step(lm_fp, rules, specs, dims, hwa_cfg,
-                                       optimizer="sgd", lr=LR)
+flash_train = mk_train(lm_fp, rules, hwa_cfg)
 flash_train_c = flash_train.lower(mesh).compile()
 fp_inner, fp_opt = stack2(params), jax.vmap(opt.init)(stack2(params))
 with use_mesh(mesh):
@@ -634,6 +649,74 @@ def physical_launches(jaxpr):
 n_phys = physical_launches(fp_jaxpr)
 check(f"flash-pallas train: 1 fwd + 2 bwd launches per layer "
       f"({n_phys} == 3 × {cfg.n_layers})", n_phys == 3 * cfg.n_layers)
+
+# ---- compressed WA precision: bounded-ULP parity (PR 10) ------------------
+# The compressed legs reuse the exact-f32 results above as oracles and
+# bound the deviation in RELATIVE ULPs of the compressed dtype at the
+# buffer's working scale (repro.common.quant.rel_ulp_error). Budgets come
+# from benchmarks/thresholds.json `ulp_budgets` — the SAME numbers
+# bench-check guards, so the harness and the bench trajectory cannot
+# drift apart. (The f32 default's 0-ULP guarantee is every bit-equality
+# check above.)
+import json
+
+from repro.common.quant import rel_ulp_error
+from repro.launch.steps import window_state_args
+
+with open(os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))),
+        "benchmarks", "thresholds.json")) as f:
+    ULP_BUDGETS = json.load(f)["ulp_budgets"]
+
+
+def max_rel_ulp(ref, got, tok):
+    return max(rel_ulp_error(r, g, tok)
+               for r, g in zip(jax.tree.leaves(ref), jax.tree.leaves(got)))
+
+
+# leg C-bf16: flat kernel sync with a bf16 ring (Kahan-compensated f32
+# total) on the SAME diverged state as the f32 kernel leg. The restart
+# is the DECODED stored mean (packed.py: ring slot and live replicas
+# agree bitwise), so it must be exactly the bf16-rounding of the f32
+# leg's restart; W̿ reads back through the compressed ring and gets the
+# bf16 budget.
+from repro.common.quant import decode_slot, encode_slot
+
+sync_bf = mk_sync(lm, rules, hwa_cfg_k, wa_dtype="bf16")
+win_bf = window_state_args(sync_bf)
+nb = len(win_bf) - 3                      # ring, [scales], ..., [comp]
+with use_mesh(mesh):
+    out_bf = sync_bf.lower(mesh).compile()(
+        jax.tree.map(jnp.array, a_host), *win_bf)
+bf_inner, bf_wa = out_bf[0], out_bf[3 + nb]
+check("bf16-ring kernel sync: restart == bf16-rounded f32 restart "
+      "(ring slot and replicas agree bitwise)",
+      tree_equal(bf_inner, jax.tree.map(
+          lambda x: decode_slot(encode_slot(x, "bf16")[0]), k_inner)))
+err_bf = max_rel_ulp(k_wa, bf_wa, "bf16")
+check(f"bf16-ring kernel sync: W̿ within {ULP_BUDGETS['bf16']} rel ULPs "
+      f"of exact f32 (err={err_bf:.2f})", err_bf <= ULP_BUDGETS["bf16"])
+
+# leg C-fp8: the full compressed tree — fp8 ring (per-block scales) AND
+# fp8 cross-pod comms — against the exact f32 tree leg T.
+sync_f8 = build_hwa_bundles(
+    lm, rules_t, SyncPlan(hwa=hwa4, topology=topo,
+                          wa_dtype="fp8", comms_dtype="fp8")).sync
+win_f8 = window_state_args(sync_f8)
+nf = len(win_f8) - 3
+f8_c = sync_f8.lower(mesh_t).compile()
+with use_mesh(mesh_t):
+    out_f8 = f8_c(jax.tree.map(jnp.array, div4_host), *win_f8)
+err_f8 = max_rel_ulp(t_wa, out_f8[3 + nf], "fp8")
+check(f"fp8 tree sync (fp8 ring + fp8 comms): W̿ within "
+      f"{ULP_BUDGETS['fp8']} rel ULPs of exact f32 (err={err_f8:.2f})",
+      err_f8 <= ULP_BUDGETS["fp8"])
+audit_f8 = sync_collective_audit(f8_c.as_text(), mesh_t,
+                                 replica_axis="replica", outer_axis="pod")
+check(f"fp8 tree sync: outer hop is the gather pair "
+      f"(found {len(audit_f8['outer'])})", len(audit_f8["outer"]) == 2)
+check("fp8 tree sync: compressed payload crosses the wire as u8",
+      any("u8[" in line for _, line in audit_f8["outer"]))
 
 print("ALL_OK" if ok else "SOME_FAILED")
 raise SystemExit(0 if ok else 1)

@@ -845,3 +845,302 @@ def test_packed_kernels_compiled_on_tpu():
                                      0, 0.0, 1.0)
     for a, b in zip(got, want):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ----------------------------------------- compressed WA precision (PR 10)
+
+
+def test_wa_tokens_roundtrip_and_reject():
+    from repro.common import quant
+    assert quant.wa_dtype("bf16") == jnp.bfloat16
+    assert quant.wa_dtype(jnp.float8_e4m3fn) == jnp.float8_e4m3fn
+    for tok in ("f32", "bf16", "fp8"):
+        assert quant.wa_token(quant.wa_dtype(tok)) == tok
+    assert not quant.is_compressed("f32")
+    assert quant.is_compressed("fp8") and quant.needs_scales("fp8")
+    assert quant.is_compressed("bf16") and not quant.needs_scales("bf16")
+    with pytest.raises(ValueError, match="no WA precision token"):
+        quant.wa_token(jnp.float16)
+    with pytest.raises(ValueError, match="not a multiple"):
+        quant.n_scale_blocks(quant.SCALE_BLOCK + 1)
+
+
+def test_ulp_distance_ladder():
+    from repro.common.quant import max_ulp, ulp_distance
+    x = np.float32(1.5)
+    assert max_ulp(x, x) == 0
+    assert max_ulp(x, np.nextafter(x, np.float32(2.0))) == 1
+    # across the sign: the ladder counts subnormal steps, ±0 coincide
+    denorm = np.nextafter(np.float32(0.0), np.float32(1.0))
+    assert int(ulp_distance(np.float32(-0.0), np.float32(0.0))) == 0
+    assert max_ulp(-denorm, denorm) == 2
+    # mixed dtypes measure on the NARROWER ladder: two f32 values one
+    # bf16 step apart are 1 apart, values rounding together are 0 apart
+    a = jnp.float32(1.0)
+    b = a + jnp.float32(jnp.finfo(jnp.bfloat16).eps)
+    assert max_ulp(a.astype(jnp.bfloat16), b) == 1
+    assert max_ulp(a.astype(jnp.bfloat16), a + jnp.float32(1e-6)) == 0
+    # NaN is astronomically far from everything (budget = failure)
+    assert max_ulp(np.float32(np.nan), np.float32(1.0)) > 2**30
+
+
+def test_rel_ulp_error_floor_semantics():
+    from repro.common.quant import rel_ulp_error
+    ref = np.linspace(-2.0, 2.0, 64, dtype=np.float32)
+    assert rel_ulp_error(ref, ref, "bf16") == 0.0
+    # one bf16 quantization step at the working scale reads as ~1
+    got = np.asarray(jnp.asarray(ref).astype(jnp.bfloat16), np.float32)
+    assert 0.0 < rel_ulp_error(ref, got, "bf16") <= 1.0
+    # near-zero entries do NOT blow up: the RMS floor pins the scale
+    # (raw near-zero ULP distance would be in the thousands)
+    ref2 = np.array([0.0, 1.0, -1.0, 0.5], np.float32)
+    got2 = ref2 + np.float32(1e-4)
+    assert rel_ulp_error(ref2, got2, "bf16") < 0.1
+
+
+def test_kahan_add_zero_comp_is_plain_add():
+    from repro.common.quant import kahan_add
+    rng = np.random.default_rng(0)
+    total = jnp.asarray(rng.standard_normal(256), jnp.float32)
+    delta = jnp.asarray(rng.standard_normal(256), jnp.float32)
+    t, _ = kahan_add(total, jnp.zeros_like(total), delta)
+    np.testing.assert_array_equal(np.asarray(t), np.asarray(total + delta))
+
+
+def test_kahan_add_beats_plain_f32_accumulation():
+    from repro.common.quant import kahan_add
+    # classic pathological sum: many increments far below the total's ULP
+    n, big, small = 10_000, np.float32(1e6), np.float32(0.01)
+    t = c = jnp.float32(0.0)
+    plain = jnp.float32(0.0)
+    t, c = kahan_add(t, c, jnp.float32(big))
+    plain = plain + big
+    for _ in range(n):
+        t, c = kahan_add(t, c, jnp.float32(small))
+        plain = plain + small
+    exact = float(big) + n * float(small)
+    assert abs(float(t) - exact) < abs(float(plain) - exact)
+    assert abs(float(t) - exact) <= 1.0
+
+
+def test_fp8_block_codec_roundtrip_and_edges():
+    from repro.common import quant
+    rng = np.random.default_rng(1)
+    block = 16
+    x = jnp.asarray(rng.standard_normal((4, 4 * block)) *
+                    10.0 ** rng.integers(-3, 4, (4, 4 * block)), jnp.float32)
+    s = quant.block_scales(x, block)
+    assert s.shape == (4, 4) and s.dtype == jnp.float32
+    q = quant.quantize_fp8(x, s, block)
+    assert q.dtype == jnp.float8_e4m3fn
+    back = quant.dequantize_fp8(q, s, block)
+    assert bool(jnp.all(jnp.isfinite(back)))
+    # e4m3 has a 3-bit mantissa: relative error ≤ 2^-4 of the block amax
+    amax = np.repeat(np.asarray(s) * quant.FP8_MAX, block, axis=-1)
+    assert np.max(np.abs(np.asarray(back) - np.asarray(x))) <= \
+        np.max(amax) * 2.0 ** -4
+    # signs survive wherever the value didn't underflow the block scale
+    nz = np.asarray(back) != 0
+    assert np.all(np.sign(np.asarray(back))[nz]
+                  == np.sign(np.asarray(x))[nz])
+    # all-zero block: scale 1.0, exact-zero round trip (no 0/0)
+    z = jnp.zeros((2 * block,), jnp.float32)
+    sz = quant.block_scales(z, block)
+    np.testing.assert_array_equal(np.asarray(sz), np.ones(2, np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(quant.dequantize_fp8(quant.quantize_fp8(z, sz, block),
+                                        sz, block)), np.asarray(z))
+    # a subnormal-scale block quantizes without NaN/inf
+    tiny = jnp.full((block,), np.float32(1e-40))
+    st = quant.block_scales(tiny, block)
+    assert bool(jnp.all(jnp.isfinite(
+        quant.dequantize_fp8(quant.quantize_fp8(tiny, st, block), st,
+                             block))))
+
+
+def test_encode_decode_slot_tokens():
+    from repro.common.quant import decode_slot, encode_slot
+    rng = np.random.default_rng(2)
+    block = 32
+    x = jnp.asarray(rng.standard_normal(2 * block), jnp.float32)
+    # f32: bit-exact identity, no scales
+    slot, s = encode_slot(x, "f32", block)
+    assert s is None
+    np.testing.assert_array_equal(np.asarray(decode_slot(slot)),
+                                  np.asarray(x))
+    # bf16: the cast, no scales
+    slot, s = encode_slot(x, "bf16", block)
+    assert s is None and slot.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(decode_slot(slot)),
+        np.asarray(x.astype(jnp.bfloat16).astype(jnp.float32)))
+    # fp8: block-scaled, decode needs the scales
+    slot, s = encode_slot(x, "fp8", block)
+    assert slot.dtype == jnp.float8_e4m3fn and s.shape == (2,)
+    back = decode_slot(slot, s, block)
+    assert float(jnp.max(jnp.abs(back - x))) < float(jnp.max(jnp.abs(x)))
+
+
+def test_window_aux_buffers_shapes():
+    from repro.common.packing import window_aux_buffers, window_buffers
+    from repro.common.quant import wa_dtype
+    spec = pack_spec(params_like())                 # padded == ALIGN
+    I = 3
+    assert window_aux_buffers(spec, I, "f32") == (None, None)
+    scales, comp = window_aux_buffers(spec, I, "bf16")
+    assert scales is None and comp.shape == (spec.padded,) \
+        and comp.dtype == jnp.float32
+    scales, comp = window_aux_buffers(spec, I, "fp8")
+    assert scales.shape == (I, spec.scale_blocks) \
+        and bool(jnp.all(scales == 1.0))            # scale of a zero block
+    ring, total = window_buffers(spec, I, wa_dtype("fp8"))
+    assert ring.dtype == jnp.float8_e4m3fn and total.dtype == jnp.float32
+    # grouped layouts get per-group tuples
+    gspec = grouped_spec(grouped_tree(), align=8)
+    gscales, gcomp = window_aux_buffers(gspec, I, "bf16")
+    assert gscales is None and isinstance(gcomp, tuple) \
+        and len(gcomp) == gspec.n_groups
+
+
+def test_pack_spec_ring_dtype_json_and_layout_neutrality():
+    from repro.common.packing import spec_from_json, spec_to_json
+    spec = pack_spec(params_like())
+    assert spec.ring_dtype == "float32"
+    assert "ring_dtype" not in spec_to_json(spec)   # omitted == f32:
+    # pre-compression checkpoints rehydrate unchanged
+    for tok, name in (("bf16", "bfloat16"), ("fp8", "float8_e4m3fn")):
+        sp = spec.with_ring_dtype(tok)
+        assert sp.ring_dtype == name
+        back = spec_from_json(spec_to_json(sp))
+        assert back.ring_dtype == name
+        assert sp.same_layout(spec) and spec.same_layout(sp)
+    assert spec.with_ring_dtype("f32") is spec
+
+
+@pytest.mark.parametrize("tok", ["bf16", "fp8"])
+def test_compressed_window_update_matches_decoded_accounting(tok):
+    """The compressed ring stores encode(mean); total/W̿ account for the
+    DECODED values (what the ring can reproduce), Kahan-compensated, so
+    W̿ == mean(decoded slots) to f32 round-off — and the f32 path stays
+    exactly the pre-compression arithmetic (checked elsewhere
+    bit-for-bit)."""
+    from repro.common.quant import decode_slot
+    from repro.core.offline import window_average_packed
+    p = params_like()
+    I = 3
+    ws = window_init(p, I, ring_dtype=tok)
+    assert ws.comp is not None and (ws.scales is None) == (tok == "bf16")
+    for t in range(4):
+        ws, wa = window_update(ws, params_like(10 + t))
+    dec = decode_slot(ws.ring, ws.scales)
+    want = np.mean(np.asarray(dec), axis=0)
+    got = np.asarray(window_average_packed(ws))
+    np.testing.assert_allclose(got, want, atol=1e-6, rtol=1e-6)
+
+
+def test_compressed_window_update_kernel_matches_ref():
+    """bf16 rings have a fused Pallas kernel (`wa_window_update_packed_c`)
+    — it must agree with the jnp reference bit-for-bit."""
+    p = params_like()
+    ws_k = window_init(p, 3, ring_dtype="bf16")
+    ws_r = window_init(p, 3, ring_dtype="bf16")
+    for t in range(4):
+        ws_k, wa_k = window_update(ws_k, params_like(20 + t),
+                                   use_kernel=True)
+        ws_r, wa_r = window_update(ws_r, params_like(20 + t),
+                                   use_kernel=False)
+        for a, b in zip(jax.tree.leaves(wa_k), jax.tree.leaves(wa_r)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(ws_k.ring),
+                                  np.asarray(ws_r.ring))
+    np.testing.assert_array_equal(np.asarray(ws_k.total),
+                                  np.asarray(ws_r.total))
+    np.testing.assert_array_equal(np.asarray(ws_k.comp),
+                                  np.asarray(ws_r.comp))
+
+
+@pytest.mark.parametrize("tok", ["bf16", "fp8"])
+def test_compressed_window_state_checkpoint_bit_exact(tok):
+    """Same-precision save/load round-trips the compressed ring (and its
+    scales/comp companions) BIT-exactly — via integer views, a narrow
+    float never round-trips through f32."""
+    import tempfile
+
+    from repro.checkpoint import load_window_state, save_window_state
+    p = params_like()
+    ws = window_init(p, 3, ring_dtype=tok)
+    for t in range(4):
+        ws, _ = window_update(ws, params_like(30 + t))
+    with tempfile.TemporaryDirectory() as d:
+        path = d + "/ws.npz"
+        save_window_state(path, ws)
+        back = load_window_state(path, window_init(p, 3, ring_dtype=tok))
+    assert back.ring.dtype == ws.ring.dtype
+    np.testing.assert_array_equal(
+        np.asarray(back.ring.view(jnp.uint8)),
+        np.asarray(ws.ring.view(jnp.uint8)))
+    np.testing.assert_array_equal(np.asarray(back.total),
+                                  np.asarray(ws.total))
+    np.testing.assert_array_equal(np.asarray(back.comp),
+                                  np.asarray(ws.comp))
+    if tok == "fp8":
+        np.testing.assert_array_equal(np.asarray(back.scales),
+                                      np.asarray(ws.scales))
+
+
+@pytest.mark.parametrize("src,dst", [("f32", "bf16"), ("f32", "fp8"),
+                                     ("bf16", "f32"), ("fp8", "f32"),
+                                     ("bf16", "fp8")])
+def test_window_state_precision_migration(src, dst, tmp_path):
+    """Loading a checkpoint into a template of a DIFFERENT ring precision
+    re-encodes: ring = encode(decode(stored)), total = Σ decoded slots,
+    comp reset (the compensation tracks a total that no longer exists)."""
+    from repro.checkpoint import load_window_state, save_window_state
+    from repro.common.quant import decode_slot, encode_slot, wa_dtype
+    p = params_like()
+    ws = window_init(p, 3, ring_dtype=src)
+    for t in range(4):
+        ws, _ = window_update(ws, params_like(40 + t))
+    path = str(tmp_path / "ws.npz")
+    save_window_state(path, ws)
+    back = load_window_state(path, window_init(p, 3, ring_dtype=dst))
+    assert back.ring.dtype == wa_dtype(dst)
+    f32_ring = decode_slot(ws.ring, ws.scales)
+    want_ring, want_scales = encode_slot(f32_ring, dst)
+    np.testing.assert_array_equal(
+        np.asarray(back.ring, np.float32),
+        np.asarray(want_ring, np.float32))
+    if want_scales is not None:
+        np.testing.assert_array_equal(np.asarray(back.scales),
+                                      np.asarray(want_scales))
+    np.testing.assert_array_equal(
+        np.asarray(back.total),
+        np.asarray(jnp.sum(decode_slot(want_ring, want_scales), axis=0)))
+    if dst == "f32":
+        assert back.comp is None and back.scales is None
+    else:
+        np.testing.assert_array_equal(np.asarray(back.comp),
+                                      np.zeros_like(np.asarray(back.total)))
+    assert int(back.count) == int(ws.count)
+
+
+def test_window_state_migration_into_grouped_compressed_raises(tmp_path):
+    from repro.checkpoint import load_window_state, save_window_state
+    from repro.common.packing import window_aux_buffers, window_buffers
+    from repro.core.offline import WindowState
+    p = params_like()
+    ws = window_init(p, 3)
+    for t in range(2):
+        ws, _ = window_update(ws, params_like(50 + t))
+    path = str(tmp_path / "ws.npz")
+    save_window_state(path, ws)
+    gtree = grouped_tree()
+    gspec = grouped_spec(gtree, align=8).with_ring_dtype("bf16")
+    ring, total = window_buffers(gspec, 3, jnp.bfloat16)
+    _, comp = window_aux_buffers(gspec, 3, "bf16")
+    like = WindowState(ring=ring, total=total,
+                       count=jnp.zeros((), jnp.int32),
+                       next_idx=jnp.zeros((), jnp.int32),
+                       window=3, kind="ring", spec=gspec, comp=comp)
+    with pytest.raises(ValueError):
+        load_window_state(path, like)

@@ -262,3 +262,73 @@ def test_legacy_assembly_hard_error_and_escape_hatch(monkeypatch):
     # non-CPU backends lower the pattern correctly: no raise
     monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
     check_legacy_assembly(mesh)
+
+
+# --------------------------------------------------------------- SyncPlan
+
+
+def test_sync_plan_tokens_and_resolved_topology():
+    from repro.core.hwa import HWAConfig
+    from repro.launch.sync.plan import SyncPlan
+    hwa = HWAConfig(n_replicas=4, window=3, outer_every=2)
+    tree = TwoLevel("replica", "pod", outer_every=2)
+    plan = SyncPlan(hwa=hwa, topology=tree, wa_dtype=jnp.bfloat16,
+                    comms_dtype=jnp.float8_e4m3fn)
+    # dtype arguments normalize to tokens at construction
+    assert plan.wa_dtype == "bf16" and plan.comms_dtype == "fp8"
+    assert plan.is_tree and plan.resolved_topology is tree
+    flat = SyncPlan(hwa=hwa)
+    assert not flat.is_tree
+    assert isinstance(flat.resolved_topology, Flat)
+    assert flat.resolved_topology.replica_axes == ("replica",)
+
+
+def test_sync_plan_rejects_invalid_corners():
+    from repro.core.hwa import HWAConfig
+    from repro.launch.sync.plan import SyncPlan
+    hwa = HWAConfig(n_replicas=4, window=3)
+    tree = TwoLevel("replica", "pod", outer_every=2)
+    # compressed comms need a two-level outer hop to compress
+    with pytest.raises(ValueError, match="no outer level"):
+        SyncPlan(hwa=hwa, comms_dtype="bf16")
+    # resilient renormalizes AFTER the psum — incompatible with a
+    # pre-scaled quantized payload
+    import dataclasses
+    with pytest.raises(ValueError, match="resilient"):
+        SyncPlan(hwa=dataclasses.replace(hwa, resilient=True,
+                                         outer_every=2),
+                 topology=tree, comms_dtype="fp8")
+    # the tree is mesh-native only
+    with pytest.raises(ValueError, match="mesh-native"):
+        SyncPlan(hwa=dataclasses.replace(hwa, outer_every=2),
+                 topology=tree, mesh_native=False)
+    # unknown precision tokens fail at construction, not deep in a builder
+    with pytest.raises(ValueError, match="precision token"):
+        SyncPlan(hwa=hwa, wa_dtype="int4")
+
+
+def test_deprecated_builder_names_warn_and_delegate():
+    """The five historical make_*hwa*_step names survive as thin wrappers
+    that warn; the bundles they return come from the same private
+    builders build_hwa_bundles drives."""
+    import warnings
+
+    from jax.sharding import Mesh
+
+    from repro.configs import get_smoke_config
+    from repro.core.hwa import HWAConfig
+    from repro.launch import steps
+    from repro.models.registry import build_model
+    from repro.sharding.rules import make_tp_rules
+
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1, 1),
+                ("replica", "data", "model"))
+    lm = build_model(get_smoke_config("granite-3-2b"))
+    rules = make_tp_rules(mesh, replica_axis="replica")
+    hwa = HWAConfig(n_replicas=2, window=2)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        bundle = steps.make_hwa_sync_step(lm, rules, hwa)
+    assert any(issubclass(w.category, DeprecationWarning)
+               and "build_hwa_bundles" in str(w.message) for w in caught)
+    assert bundle.pack_spec is not None

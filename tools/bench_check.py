@@ -13,7 +13,11 @@ traffic ratios — which must hold on any machine, smoke lane included.
 - ``required``: dotted key paths that must exist and be numbers
   (schema stability — a renamed metric fails loudly instead of silently
   vanishing from the trajectory);
-- ``bounds``: ``{path: {"min": x?, "max": y?}}`` numeric guards.
+- ``bounds``: ``{path: {"min": x?, "max": y?}}`` numeric guards;
+- ``ulp_budgets``: ``{token: max_rel_ulp}`` bounded-ULP parity budgets
+  for the compressed WA precisions — the one place those budgets live
+  (tests/mesh_hwa_check.py reads the same numbers). Each budget guards
+  the ``sync/comms.<token>.wa_rel_ulp_err`` bench metric when present.
 
 Paths are dot-joined; a literal key containing dots (``sync/tree``)
 wins over path splitting. Exit 0 iff every check passes; offending
@@ -56,7 +60,7 @@ def lookup(data, path: str):
 
 #: the sections thresholds.json may contain — anything else is a typo
 #: that would otherwise silently un-guard its checks
-KNOWN_SECTIONS = ("required", "bounds")
+KNOWN_SECTIONS = ("required", "bounds", "ulp_budgets")
 
 
 def block_of(path: str, data) -> str:
@@ -120,6 +124,20 @@ def run(bench_path: str = BENCH, thresholds_path: str = THRESHOLDS,
         if "max" in bound and v > bound["max"]:
             errors.append(f"{path} = {v} > max {bound['max']}")
 
+    for tok, budget in th.get("ulp_budgets", {}).items():
+        if not isinstance(budget, (int, float)) or isinstance(budget, bool):
+            errors.append(f"ulp_budgets[{tok!r}] is not a number: "
+                          f"{budget!r}")
+            continue
+        try:
+            v = lookup(data, f"sync/comms.{tok}.wa_rel_ulp_err")
+        except KeyError:
+            continue          # bench-comms not run yet — nothing to guard
+        if isinstance(v, (int, float)) and not isinstance(v, bool) \
+                and v > budget:
+            errors.append(f"sync/comms.{tok}.wa_rel_ulp_err = {v} exceeds "
+                          f"its ULP budget {budget}")
+
     # coverage: a RENAMED bench block leaves its thresholds dangling
     # (caught above) but ALSO leaves the new block unguarded — warn so
     # the rename updates thresholds.json instead of shedding the guard
@@ -137,9 +155,10 @@ def run(bench_path: str = BENCH, thresholds_path: str = THRESHOLDS,
         for e in errors:
             log(f"  - {e}")
         return 1
-    n = len(th.get("required", [])) + len(th.get("bounds", {}))
-    log(f"OK bench-check: {n} structural thresholds hold"
-        + (f" ({len(warnings)} unguarded block(s))" if warnings else ""))
+    n = len(th.get("required", [])) + len(th.get("bounds", {})) \
+        + len(th.get("ulp_budgets", {}))
+    log(f"OK bench-check: {n} structural thresholds hold, "
+        f"{len(warnings)} unguarded block(s)")
     return 0
 
 
